@@ -1,0 +1,75 @@
+"""Paper Figure 4 / Appendix D.1: GaLore's bias residual along a real
+training trajectory.
+
+chi_t = ||G_t^u - G_t^p||_F / ||G_t^u||_F per block, where G^p = P Pᵀ G is
+the low-rank projected gradient.  The paper shows chi_t is small right after
+a projector refresh and rapidly climbs to 60-80%+ between refreshes —
+the systematic bias GUM removes.  We reproduce the shape of that curve on
+LLaMA-60M (smoke) with GaLore-Muon, measuring chi_t for attention and MLP
+blocks every iteration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core import apply_updates, galore_matrices
+from repro.core.lowrank_common import family_shape, reconstruct
+from repro.data import DataConfig, build_stream
+from repro.models import build_model
+
+
+def main() -> None:
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    period = 10
+    rank = 8
+    opt = galore_matrices(5e-3, rank=rank, period=period, projector="svd",
+                          base="muon")
+    # restrict to the stacked block leaves (like the optimizer itself)
+    blocks = {"blocks": params["blocks"]}
+    st = opt.init(blocks)
+    stream = build_stream(DataConfig(vocab=cfg.vocab, seq_len=128,
+                                     global_batch=8, seed=0))
+
+    @jax.jit
+    def grad_fn(p, tokens):
+        def loss_fn(p):
+            lg, aux, _ = model.forward(p, tokens)
+            return model.loss(lg, tokens, aux)
+        return jax.grad(loss_fn)(p)
+
+    @jax.jit
+    def chi(g_leaf, p_proj):
+        fs = family_shape(g_leaf, rank)
+        g = g_leaf.astype(jnp.float32)
+        proj = reconstruct(p_proj, g, fs.side)
+        num = jnp.linalg.norm(g - proj, axis=(-2, -1))
+        den = jnp.linalg.norm(g, axis=(-2, -1)) + 1e-12
+        return jnp.mean(num / den)
+
+    print("name,us_per_call,derived")
+    at_refresh, mid_period = [], []
+    for t in range(3 * period):
+        tokens = jnp.asarray(stream.batch_at(t))
+        g = grad_fn(params, tokens)
+        gb = {"blocks": g["blocks"]}
+        upd, st = opt.update(gb, st, blocks)
+        # chi for the attention wq family using the CURRENT projector
+        fam = st.families["blocks"]["attn"]["wq"]
+        x = float(chi(gb["blocks"]["attn"]["wq"], fam.p))
+        (at_refresh if t % period == 0 else mid_period).append(x)
+        params = dict(params)
+        params["blocks"] = apply_updates(blocks, upd)["blocks"]
+        blocks = {"blocks": params["blocks"]}
+
+    avg_refresh = sum(at_refresh) / len(at_refresh)
+    avg_mid = sum(mid_period) / len(mid_period)
+    print(f"bias_residual_fig4,0,chi_at_refresh={avg_refresh:.3f};"
+          f"chi_mid_period={avg_mid:.3f};ratio={avg_mid/max(avg_refresh,1e-9):.2f}")
+
+
+if __name__ == "__main__":
+    main()

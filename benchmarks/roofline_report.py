@@ -1,0 +1,59 @@
+"""Aggregate the dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load(mesh: str, opt: str = "gum"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}__{opt}.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_row(r) -> str:
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                f"{r.get('reason', r.get('error', ''))[:60]} |  |  |  |  |  |")
+    rf = r["roofline"]
+    mem = r["memory"]
+    dev_gb = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)) / 1e9
+    return (
+        f"| {r['arch']} | {r['shape']} | ok "
+        f"| {rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.1f} "
+        f"| {rf['collective_s']*1e3:.1f} | {rf['bottleneck']} "
+        f"| {rf['useful_flops_frac']:.2f} | {dev_gb:.1f} |"
+    )
+
+
+HEADER = ("| arch | shape | status | compute (ms) | memory (ms) | "
+          "collective (ms) | bottleneck | MF/HLO | dev mem (GB) |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = load(mesh)
+        ok = [r for r in rows if r["status"] == "ok"]
+        skipped = [r for r in rows if r["status"] == "skipped"]
+        err = [r for r in rows if r["status"] == "error"]
+        print(f"roofline_{mesh},0,ok={len(ok)};skipped={len(skipped)};errors={len(err)}")
+
+    # markdown tables to stdout for EXPERIMENTS.md
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        print(f"\n### Roofline — {mesh}\n")
+        print(HEADER)
+        for r in rows:
+            print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

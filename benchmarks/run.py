@@ -1,0 +1,89 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Heavy suites can be selected
+with BENCH_ONLY=<name>; default runs everything.
+
+  synthetic_counterexample  — Fig. 1 (GaLore fails, GUM converges)
+  memory_table              — Tables 1 & 3 (optimizer-state memory)
+  pretrain_proxy            — Table 4 (optimizer comparison on LLaMA-60M)
+  bias_residual             — Fig. 4 (GaLore's chi_t bias curve)
+  stable_rank               — Figs. 2/3/5 (stable rank & spectra)
+  roofline_report           — §Roofline aggregation from the dry-run JSONs
+  kernel_micro              — per-kernel wall-time microbenchmarks (CPU
+                              interpret/xla; indicative only, not TPU)
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def kernel_micro() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+
+    def bench(fn, *args, n=5):
+        fn(*args)  # compile
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.time() - t0) / n * 1e6
+
+    q = jax.random.normal(key, (2, 256, 8, 64))
+    k = jax.random.normal(key, (2, 256, 2, 64))
+    us = bench(lambda q, k: ops.attention(q, k, k, causal=True, impl="xla"), q, k)
+    print(f"kernel_attention_xla_b2s256,{us:.0f},oracle_path")
+
+    x = jax.random.normal(key, (256, 1024))
+    us = bench(lambda x: ops.newton_schulz(x, impl="xla"), x)
+    print(f"kernel_newton_schulz_256x1024,{us:.0f},xla_path")
+
+    p = jax.random.normal(key, (1024, 128))
+    g = jax.random.normal(key, (1024, 2048))
+    r = jax.random.normal(key, (128, 2048))
+    us = bench(lambda p, g, r: ops.lowrank_update(p, g, r, 0.95, 1.0, impl="xla"), p, g, r)
+    print(f"kernel_lowrank_update_1024x2048_r128,{us:.0f},xla_path")
+
+    xs = jax.random.normal(key, (1, 512, 4, 32)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 512, 4)))
+    a = -jnp.exp(jax.random.normal(key, (4,)) * 0.3)
+    b = jax.random.normal(key, (1, 512, 16)) * 0.3
+    d = jnp.ones((4,)) * 0.1
+    us = bench(lambda: ops.ssd(xs, dt, a, b, b, d, chunk=64, impl="xla"))
+    print(f"kernel_ssd_s512,{us:.0f},chunked_xla_path")
+
+
+SUITES = [
+    "synthetic_counterexample",
+    "memory_table",
+    "pretrain_proxy",
+    "bias_residual",
+    "stable_rank",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    only = os.environ.get("BENCH_ONLY")
+    ran_header = False
+    for name in SUITES:
+        if only and only != name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        # each suite prints its own CSV header; dedupe by capturing
+        print(f"# --- {name} ---", file=sys.stderr)
+        mod.main()
+        ran_header = True
+    if not only or only == "kernel_micro":
+        if not ran_header:
+            print("name,us_per_call,derived")
+        kernel_micro()
+
+
+if __name__ == "__main__":
+    main()

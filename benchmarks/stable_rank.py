@@ -1,0 +1,91 @@
+"""Paper Figures 2/3/5: stable rank and singular-value spectra of trained
+weights — GUM's high-rank updates should produce HIGHER stable rank
+E[||M||_F^2 / ||M||_2^2] and flatter spectra than GaLore's.
+
+We train LLaMA-60M (smoke) for a few hundred steps with GaLore-Muon vs GUM
+at matched memory and compare the mean stable rank across block matrices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core import OptimizerConfig, apply_updates, build_optimizer, clip_by_global_norm
+from repro.data import DataConfig, build_stream
+from repro.models import build_model
+
+
+def stable_rank(w: jax.Array) -> float:
+    s = jnp.linalg.svd(w.astype(jnp.float32), compute_uv=False)
+    return float(jnp.sum(s**2) / (s[0] ** 2 + 1e-12))
+
+
+def spectrum_flatness(w: jax.Array) -> float:
+    """Tail mass: fraction of spectral energy outside the top-1 direction."""
+    s = jnp.linalg.svd(w.astype(jnp.float32), compute_uv=False)
+    return float(1.0 - s[0] ** 2 / (jnp.sum(s**2) + 1e-12))
+
+
+def train(method: str, steps: int = 120):
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = {
+        "galore_muon": OptimizerConfig(name="galore_muon", lr=1e-2, rank=8, period=20),
+        "gum": OptimizerConfig(name="gum", lr=1e-2, rank=4, gamma=1, period=20),
+    }[method]
+    opt = build_optimizer(ocfg)
+    st = opt.init(params)
+    stream = build_stream(DataConfig(vocab=cfg.vocab, seq_len=128,
+                                     global_batch=8, seed=0))
+
+    @jax.jit
+    def step(p, s, tokens):
+        def loss_fn(p):
+            lg, aux, _ = model.forward(p, tokens)
+            return model.loss(lg, tokens, aux)
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        g = clip_by_global_norm(g, 1.0)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s, loss
+
+    for i in range(steps):
+        params, st, loss = step(params, st, jnp.asarray(stream.batch_at(i)))
+    return params, float(loss)
+
+
+def mean_block_stable_rank(params) -> tuple[float, float]:
+    ranks, flats = [], []
+    for name in ("wq", "wk", "wv", "wo"):
+        w = params["blocks"]["attn"][name]
+        for l in range(w.shape[0]):
+            ranks.append(stable_rank(w[l]))
+            flats.append(spectrum_flatness(w[l]))
+    for name in ("w_in", "w_out", "w_gate"):
+        if name in params["blocks"]["mlp"]:
+            w = params["blocks"]["mlp"][name]
+            for l in range(w.shape[0]):
+                ranks.append(stable_rank(w[l]))
+                flats.append(spectrum_flatness(w[l]))
+    return sum(ranks) / len(ranks), sum(flats) / len(flats)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    out = {}
+    for method in ("galore_muon", "gum"):
+        params, loss = train(method)
+        sr, flat = mean_block_stable_rank(params)
+        out[method] = (sr, flat, loss)
+        print(f"stable_rank_fig2_{method},0,stable_rank={sr:.3f};"
+              f"tail_energy={flat:.4f};final_loss={loss:.4f}")
+    print(
+        f"stable_rank_fig2_summary,0,"
+        f"gum_rank_gain={out['gum'][0] - out['galore_muon'][0]:+.3f};"
+        f"gum_tail_gain={out['gum'][1] - out['galore_muon'][1]:+.4f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

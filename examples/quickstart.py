@@ -1,0 +1,39 @@
+"""Quickstart: train a tiny LLaMA with GUM in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core import OptimizerConfig, apply_updates, build_optimizer
+from repro.data import DataConfig, build_stream
+from repro.models import build_model
+
+cfg = get_smoke("llama-60m")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# GUM: rank-8 GaLore projection + 1 full-rank sampled layer per period of 10
+opt = build_optimizer(OptimizerConfig(name="gum", lr=5e-3, rank=8, gamma=1, period=10))
+opt_state = opt.init(params)
+
+stream = build_stream(DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=8))
+
+
+@jax.jit
+def train_step(params, opt_state, tokens):
+    def loss_fn(p):
+        logits, aux, _ = model.forward(p, tokens)
+        return model.loss(logits, tokens, aux)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    return apply_updates(params, updates), opt_state, loss
+
+
+for step, tokens in zip(range(30), stream):
+    params, opt_state, loss = train_step(params, opt_state, jnp.asarray(tokens))
+    if step % 10 == 0 or step == 29:
+        print(f"step {step:3d}  loss {float(loss):.4f}")
+print("quickstart OK")

@@ -1,0 +1,53 @@
+"""Batched decode serving with the KV cache.
+
+Serves a batch of prompts: prefill populates the cache, then a jit'd
+serve_step generates tokens autoregressively (greedy).  The same serve_step
+is what the decode_* dry-run cells lower onto the production meshes.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.launch.steps import make_serve_step
+from repro.models import build_model
+
+cfg = get_smoke("qwen1.5-4b")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+B, PROMPT, GEN, MAX = 4, 12, 20, 64
+prompts = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0, cfg.vocab)
+
+# --- prefill: run the prompt token-by-token through the decode path
+# (a production server would use the fused prefill step; token-by-token
+# keeps this example minimal and exercises the exact serving kernel).
+cache = model.init_cache(batch=B, max_seq=MAX, dtype=jnp.float32)
+serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+t0 = time.time()
+logits = None
+for i in range(PROMPT):
+    logits, cache = serve_step(params, cache, prompts[:, i : i + 1], jnp.int32(i))
+prefill_s = time.time() - t0
+
+# --- decode: greedy generation
+out_tokens = []
+tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+t0 = time.time()
+for i in range(PROMPT, PROMPT + GEN):
+    out_tokens.append(tok)
+    logits, cache = serve_step(params, cache, tok, jnp.int32(i))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+jax.block_until_ready(tok)
+decode_s = time.time() - t0
+
+gen = jnp.concatenate(out_tokens, axis=1)
+print(f"prefill: {prefill_s*1e3:.1f} ms   decode: {decode_s/GEN*1e3:.2f} ms/token")
+print("generated token grid (greedy):")
+for b in range(B):
+    print(" ", [int(t) for t in gen[b]])
+print("serve OK")

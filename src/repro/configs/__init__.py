@@ -1,0 +1,7 @@
+from .base import SHAPES, ModelConfig, RunConfig, ShapeConfig
+from .registry import ARCHS, all_cells, cell_supported, get_config, get_shape, get_smoke
+
+__all__ = [
+    "ARCHS", "SHAPES", "ModelConfig", "RunConfig", "ShapeConfig",
+    "all_cells", "cell_supported", "get_config", "get_shape", "get_smoke",
+]

@@ -1,0 +1,64 @@
+"""--arch registry: id -> (full config, smoke config)."""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ModelConfig, ShapeConfig
+
+ARCHS: dict[str, str] = {
+    # assigned pool (10)
+    "nemotron-4-340b": "nemotron_4_340b",
+    "starcoder2-7b": "starcoder2_7b",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "mamba2-370m": "mamba2_370m",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "dbrx-132b": "dbrx_132b",
+    "hubert-xlarge": "hubert_xlarge",
+    # paper's own pre-training archs
+    "llama-60m": "llama_paper",
+    "llama-130m": "llama_paper",
+    "llama-350m": "llama_paper",
+}
+
+_PAPER = {"llama-60m": "LLAMA_60M", "llama-130m": "LLAMA_130M", "llama-350m": "LLAMA_350M"}
+
+ASSIGNED = [a for a in ARCHS if not a.startswith("llama-") or "vision" in a or "maverick" in a]
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    if arch in _PAPER:
+        return getattr(mod, _PAPER[arch])
+    return mod.CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.SMOKE
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is (arch x shape) runnable?  Returns (supported, reason_if_not)."""
+    if shape.kind == "decode" and cfg.encoder_only:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k requires sub-quadratic attention (SSM/hybrid only)"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """The 40 assigned (arch x shape) cells (including skipped ones)."""
+    out = []
+    for arch in ARCHS:
+        if arch in _PAPER:
+            continue
+        for shape in SHAPES:
+            out.append((arch, shape))
+    return out

@@ -1,0 +1,48 @@
+"""repro.core — the paper's contribution: unbiased gradient low-rank projection.
+
+Public API:
+  * gum / gum_matrices            — Algorithm 2 (GaLore Unbiased with Muon)
+  * unbiased_lowrank              — Algorithm 3 (general Bernoulli paradigm)
+  * galore / galore_muon / golore — Algorithm 1 baselines
+  * muon / adamw / sgdm / fira / lisa — paper baselines
+  * projectors (svd | subspace | random | grass), newton_schulz
+  * build_optimizer(OptimizerConfig)
+"""
+from .adamw import adamw, sgdm
+from .api import (
+    OptimizerConfig,
+    Transform,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    multi_transform,
+    state_bytes,
+    tree_paths,
+)
+from .factory import build_optimizer
+from .fira import fira
+from .galore import galore, galore_matrices, golore
+from .gum import gum, gum_matrices
+from .lisa import lisa
+from .lowrank_common import default_lowrank_filter
+from .muon import muon, muon_matrices
+from .newton_schulz import msign_exact, muon_scale, newton_schulz
+from .projectors import (
+    grass_projector,
+    make_projector,
+    random_projector,
+    subspace_projector,
+    svd_projector,
+)
+from .schedules import constant, linear_warmup, warmup_cosine
+from .unbiased import unbiased_lowrank
+
+__all__ = [
+    "OptimizerConfig", "Transform", "adamw", "apply_updates", "build_optimizer",
+    "clip_by_global_norm", "constant", "default_lowrank_filter", "fira", "galore",
+    "galore_matrices", "global_norm", "golore", "grass_projector", "gum",
+    "gum_matrices", "linear_warmup", "lisa", "make_projector", "msign_exact",
+    "multi_transform", "muon", "muon_matrices", "muon_scale", "newton_schulz",
+    "random_projector", "sgdm", "state_bytes", "subspace_projector",
+    "svd_projector", "tree_paths", "unbiased_lowrank", "warmup_cosine",
+]

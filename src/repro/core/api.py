@@ -1,0 +1,158 @@
+"""Minimal functional optimizer API (optax-style, zero dependencies).
+
+A :class:`Transform` is a pair of pure functions:
+
+    init(params)                     -> state
+    update(grads, state, params)     -> (updates, new_state)
+
+``updates`` are *added* to params (they already include the -lr sign), so
+
+    params = apply_updates(params, updates)
+
+All states are pytrees of arrays (jit/pjit friendly, checkpointable).  A step
+counter is threaded through every optimizer's state as ``state.count``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+class Transform(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def schedule_value(lr: Schedule, count: jax.Array) -> jax.Array:
+    return jnp.asarray(lr(count) if callable(lr) else lr, dtype=jnp.float32)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params,
+        updates,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+# ---------------------------------------------------------------------------
+# Label-partitioned composition (like optax.multi_transform).
+# ---------------------------------------------------------------------------
+
+
+class MultiState(NamedTuple):
+    inner: dict  # label -> state
+
+
+def multi_transform(
+    transforms: dict[str, Transform], label_fn: Callable[[PyTree], PyTree]
+) -> Transform:
+    """Route each leaf to the transform named by ``label_fn(params)``.
+
+    ``label_fn`` returns a pytree of the same structure whose leaves are label
+    strings.  Each inner transform sees the full tree with non-owned leaves
+    replaced by ``None`` (masked), mirroring optax semantics.
+    """
+
+    def mask(tree: PyTree, labels: PyTree, label: str) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda x, l: x if l == label else None, tree, labels
+        )
+
+    def unmask_merge(trees: dict[str, PyTree], labels: PyTree) -> PyTree:
+        def pick(l, *leaves_by_label):
+            return leaves_by_label[list(transforms).index(l)]
+
+        per_label = [trees[k] for k in transforms]
+        return jax.tree_util.tree_map(
+            pick, labels, *per_label, is_leaf=lambda x: x is None
+        )
+
+    def init(params: PyTree) -> MultiState:
+        labels = label_fn(params)
+        return MultiState(
+            inner={k: t.init(mask(params, labels, k)) for k, t in transforms.items()}
+        )
+
+    def update(grads: PyTree, state: MultiState, params: PyTree):
+        labels = label_fn(params)
+        new_inner, upds = {}, {}
+        for k, t in transforms.items():
+            u, s = t.update(mask(grads, labels, k), state.inner[k], mask(params, labels, k))
+            upds[k], new_inner[k] = u, s
+        merged = unmask_merge(upds, labels)
+        return merged, MultiState(inner=new_inner)
+
+    return Transform(init, update)
+
+
+def tree_paths(tree: PyTree) -> PyTree:
+    """Pytree of '/'-joined key paths, same structure as ``tree``."""
+
+    def name(kp) -> str:
+        parts = []
+        for k in kp:
+            if isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                parts.append(str(k.idx))
+            elif isinstance(k, jax.tree_util.GetAttrKey):
+                parts.append(str(k.name))
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    flat = [name(kp) for kp, _ in paths_leaves]
+    treedef = jax.tree_util.tree_structure(tree)
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+def state_bytes(state: PyTree) -> int:
+    """Total bytes of all arrays in an optimizer state (memory benchmarks)."""
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(state)
+        if hasattr(x, "dtype")
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    """Config resolved by :func:`repro.core.factory.build_optimizer`."""
+
+    name: str = "gum"  # gum | galore | galore_muon | golore | muon | adamw | sgdm | fira | lisa
+    lr: float = 1e-3
+    weight_decay: float = 0.0
+    beta: float = 0.95          # momentum (muon-family)
+    b1: float = 0.9             # adam
+    b2: float = 0.999
+    eps: float = 1e-8
+    rank: int = 128             # low-rank projection rank
+    q: float = 0.25             # full-rank sampling probability (gum) == gamma/L
+    gamma: int = 2              # full-rank layers per period (gum/lisa)
+    period: int = 200           # K, projector refresh / resampling period
+    projector: str = "svd"      # svd | subspace | random | grass
+    base: str = "muon"          # base optimizer inside low-rank space
+    ns_steps: int = 5
+    compensation: str = "paper"  # paper | finetune (App. C.1 variant)
+    grad_clip: float = 0.0
+    seed: int = 0

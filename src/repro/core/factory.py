@@ -1,0 +1,45 @@
+"""Optimizer factory: OptimizerConfig -> Transform."""
+from __future__ import annotations
+
+from .adamw import adamw, sgdm
+from .api import OptimizerConfig, Transform
+from .fira import fira
+from .galore import galore, golore
+from .gum import gum
+from .lisa import lisa
+from .muon import muon
+
+
+def build_optimizer(cfg: OptimizerConfig) -> Transform:
+    name = cfg.name.lower()
+    if name == "adamw":
+        return adamw(cfg.lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, weight_decay=cfg.weight_decay)
+    if name == "sgdm":
+        return sgdm(cfg.lr, beta=cfg.beta, weight_decay=cfg.weight_decay)
+    if name == "muon":
+        return muon(cfg.lr, beta=cfg.beta, weight_decay=cfg.weight_decay, ns_steps=cfg.ns_steps)
+    if name == "galore":
+        return galore(
+            cfg.lr, rank=cfg.rank, period=cfg.period, projector=cfg.projector,
+            base="adam", weight_decay=cfg.weight_decay, seed=cfg.seed,
+        )
+    if name == "galore_muon":
+        return galore(
+            cfg.lr, rank=cfg.rank, period=cfg.period, projector=cfg.projector,
+            base="muon", beta=cfg.beta, ns_steps=cfg.ns_steps,
+            weight_decay=cfg.weight_decay, seed=cfg.seed,
+        )
+    if name == "golore":
+        return golore(cfg.lr, rank=cfg.rank, period=cfg.period, base=cfg.base, seed=cfg.seed)
+    if name == "gum":
+        return gum(
+            cfg.lr, rank=cfg.rank, gamma=cfg.gamma, period=cfg.period,
+            projector=cfg.projector, base=cfg.base, beta=cfg.beta,
+            ns_steps=cfg.ns_steps, weight_decay=cfg.weight_decay,
+            compensation=cfg.compensation, seed=cfg.seed,
+        )
+    if name == "fira":
+        return fira(cfg.lr, rank=cfg.rank, period=cfg.period, seed=cfg.seed)
+    if name == "lisa":
+        return lisa(cfg.lr, gamma=cfg.gamma, period=cfg.period, seed=cfg.seed)
+    raise ValueError(f"unknown optimizer: {cfg.name!r}")

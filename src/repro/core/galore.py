@@ -1,0 +1,188 @@
+"""GaLore (Zhao et al., 2024) and GoLore — Algorithm 1 of the paper.
+
+Low-rank-projected optimizer states with a periodically refreshed projector.
+Any base optimizer runs *inside* the low-rank space:
+
+  * base="adam"  — the original GaLore (biased; Property II does not hold,
+                   states live in low-rank space, update is back-projected).
+  * base="muon"  — GaLore-Muon, the paper's biased baseline (= GUM with q=0).
+  * base="sgdm"  — GaLore with SGD momentum (He et al. analysis setting).
+
+``projector="random"`` gives GoLore.  Non-matrix leaves (embeddings, norms,
+biases) are routed to a full AdamW fallback, matching GaLore practice.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import adamw
+from .api import PyTree, Schedule, Transform, multi_transform, schedule_value, tree_paths
+from .lowrank_common import (
+    back_project,
+    compute_projectors,
+    default_lowrank_filter,
+    family_shape,
+    lowrank_state_shape,
+    project,
+    proj_shape,
+)
+from .newton_schulz import newton_schulz
+
+
+class GaLoreFamilyState(NamedTuple):
+    p: jax.Array        # (L, s, r) projector
+    m1: jax.Array       # (L, r, n)/(L, m, r) first moment (or momentum)
+    m2: jax.Array | None  # second moment (adam only)
+
+
+class GaLoreState(NamedTuple):
+    count: jax.Array
+    families: PyTree  # leaf -> GaLoreFamilyState
+
+
+def galore_matrices(
+    lr: Schedule,
+    rank: int = 128,
+    period: int = 200,
+    projector: str = "svd",
+    base: str = "adam",
+    beta: float = 0.95,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    scale: float = 0.25,
+    ns_steps: int = 5,
+    weight_decay: float = 0.0,
+    reset_on_update: bool = False,
+    seed: int = 0,
+    subspace_iters: int = 2,
+) -> Transform:
+    """GaLore over matrix leaves only (route others via :func:`galore`)."""
+    if base not in ("adam", "muon", "sgdm"):
+        raise ValueError(f"unsupported base: {base}")
+    use_m2 = base == "adam"
+
+    def init_family(p_leaf: jax.Array) -> GaLoreFamilyState:
+        fs = family_shape(p_leaf, rank)
+        p0 = jnp.zeros(proj_shape(fs), jnp.float32)
+        st = jnp.zeros(lowrank_state_shape(fs), jnp.float32)
+        return GaLoreFamilyState(p=p0, m1=st, m2=st if use_m2 else None)
+
+    def init(params: PyTree) -> GaLoreState:
+        fams = jax.tree_util.tree_map(
+            lambda p: None if p is None else init_family(p),
+            params,
+            is_leaf=lambda x: x is None,
+        )
+        return GaLoreState(count=jnp.zeros((), jnp.int32), families=fams)
+
+    def update_family(
+        g_leaf: jax.Array,
+        st: GaLoreFamilyState,
+        p_leaf: jax.Array,
+        count: jax.Array,
+        step_lr: jax.Array,
+        key: jax.Array,
+    ) -> tuple[jax.Array, GaLoreFamilyState]:
+        fs = family_shape(p_leaf, rank)
+        g = g_leaf.astype(jnp.float32)  # (*lead, m, n)
+
+        refresh = (count - 1) % period == 0
+
+        def do_refresh(_):
+            p_new = compute_projectors(projector, g, fs.rank, key, fs.side, subspace_iters)
+            if reset_on_update:
+                z = jnp.zeros_like(st.m1)
+                return p_new, z, (z if use_m2 else st.m2)
+            return p_new, st.m1, st.m2
+
+        def keep(_):
+            return st.p, st.m1, st.m2
+
+        p_proj, m1, m2 = jax.lax.cond(refresh, do_refresh, keep, None)
+
+        r_g = project(p_proj, g, fs.side)  # low-rank gradient
+
+        if base == "adam":
+            c = count.astype(jnp.float32)
+            m1 = b1 * m1 + (1 - b1) * r_g
+            m2 = b2 * m2 + (1 - b2) * jnp.square(r_g)
+            mhat = m1 / (1.0 - b1 ** c)
+            vhat = m2 / (1.0 - b2 ** c)
+            s = mhat / (jnp.sqrt(vhat) + eps)
+            upd_lr = scale * s
+        elif base == "muon":
+            m1 = beta * m1 + r_g
+            upd_lr = newton_schulz(m1, steps=ns_steps)
+        else:  # sgdm
+            m1 = beta * m1 + r_g
+            upd_lr = m1
+
+        full = back_project(p_proj, upd_lr, fs.side)
+        u = -step_lr * (full + weight_decay * p_leaf.astype(jnp.float32))
+        return u, GaLoreFamilyState(p=p_proj, m1=m1, m2=m2)
+
+    def update(grads: PyTree, state: GaLoreState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+
+        leaves, treedef = jax.tree_util.tree_flatten(
+            params, is_leaf=lambda x: x is None
+        )
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(state.families)
+
+        upds, new_states = [], []
+        for i, (g, fst, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
+            if g is None or p is None:
+                upds.append(None)
+                new_states.append(None)
+                continue
+            key = jax.random.fold_in(base_key, i)
+            u, ns = update_family(g, fst, p, count, step_lr, key)
+            upds.append(u)
+            new_states.append(ns)
+
+        updates = jax.tree_util.tree_unflatten(treedef, upds)
+        families = jax.tree_util.tree_unflatten(treedef, new_states)
+        return updates, GaLoreState(count=count, families=families)
+
+    return Transform(init, update)
+
+
+def galore(
+    lr: Schedule,
+    rank: int = 128,
+    period: int = 200,
+    projector: str = "svd",
+    base: str = "adam",
+    lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+    **kw,
+) -> Transform:
+    """Full GaLore: low-rank on hidden matrices, AdamW elsewhere."""
+    inner = {
+        "galore": galore_matrices(
+            lr, rank=rank, period=period, projector=projector, base=base, **kw
+        ),
+        "adamw": adamw(lr, weight_decay=kw.get("weight_decay", 0.0)),
+    }
+
+    def label_fn(params: PyTree) -> PyTree:
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda path, p: "galore" if lowrank_filter(path, p) else "adamw",
+            paths,
+            params,
+        )
+
+    return multi_transform(inner, label_fn)
+
+
+def golore(lr: Schedule, rank: int = 128, period: int = 200, base: str = "sgdm", **kw) -> Transform:
+    """GoLore (He et al., 2024): GaLore with a gradient-independent random
+    orthonormal projector — convergent but subspace-blind."""
+    return galore(lr, rank=rank, period=period, projector="random", base=base, **kw)

@@ -1,0 +1,410 @@
+"""GUM — GaLore Unbiased with Muon (Algorithm 2 of the paper).
+
+Layerwise-sampling debiasing of low-rank projection: every period ``K``, a
+fixed count ``gamma`` of blocks per family (q = gamma/L, the LISA-style
+fixed-count sampling the paper's experiments use, e.g. "2 + 128") is sampled
+to run the *compensated full-rank* Muon update; the rest run the scaled
+low-rank GaLore-Muon update.  In expectation the update equals full Muon with
+an unbiased gradient estimate (Lemma 1).
+
+Static-shape formulation (DESIGN.md §3): per family (a stacked leaf
+``(L, m, n)``) we store
+
+  p       (L, s, r)     projector (s = min(m, n) side)
+  r_low   (L, r, n)     low-rank momentum (or (L, m, r) for right projection)
+  r_full  (gamma, m, n) full-rank momentum *slots*
+  idx     (gamma,)      slot -> block assignment, resampled each period
+
+Memory per family = L·s·r + L·r·n + gamma·m·n  ==  O((2-q)·mr·L + q·L·m·n)
+— exactly Table 1's GUM complexity.
+
+Update rules (left projection, block l, coefficients per ``compensation``):
+
+  low-rank (unsampled):  R_l <- beta R_l + c_low  * P_lᵀ G_l
+                         W_l <- W_l - lr * P_l NS(R_l)
+  full-rank (sampled):   F_j <- beta F_j + c_full * (G_l - c_comp P_l P_lᵀ G_l)
+                         W_l <- W_l - lr * NS(F_j)
+
+  compensation="paper"    : c_low = 1/(1-q), c_full = 1/q, c_comp = 1
+  compensation="finetune" : c_low = 1,       c_full = 1/q, c_comp = 1-q
+                            (App. C.1 — recovers full Muon at q=1)
+
+Both choices satisfy E[update] = Muon update with E[G_hat] = G.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import adamw
+from .api import PyTree, Schedule, Transform, multi_transform, schedule_value, tree_paths
+from .lowrank_common import (
+    back_project,
+    compute_projectors,
+    default_lowrank_filter,
+    family_shape,
+    gather_blocks,
+    lowrank_state_shape,
+    project,
+    proj_shape,
+    scatter_blocks,
+)
+from .newton_schulz import newton_schulz
+
+
+class GUMFamilyState(NamedTuple):
+    p: jax.Array               # (L, s, r)
+    r_low: jax.Array           # (L, r, n) | (L, m, r)
+    r_full: Optional[jax.Array]  # (gamma, m, n) or None when gamma == 0
+    idx: Optional[jax.Array]     # (gamma,) int32 or None
+
+
+class GUMState(NamedTuple):
+    count: jax.Array
+    families: PyTree
+
+
+def gum_matrices(
+    lr: Schedule,
+    rank: int = 128,
+    gamma: int = 2,
+    period: int = 200,
+    projector: str = "svd",
+    base: str = "muon",
+    beta: float = 0.95,
+    ns_steps: int = 5,
+    weight_decay: float = 0.0,
+    compensation: str = "paper",
+    seed: int = 0,
+    subspace_iters: int = 2,
+    external_refresh: bool = False,
+) -> Transform:
+    """GUM over matrix leaves (route 1-D/embedding leaves via :func:`gum`).
+
+    ``external_refresh=True`` skips the in-update period refresh — used by
+    the low-rank gradient-accumulation path, where :func:`gum_accum_tools`
+    refreshes against a raw microbatch gradient before projection."""
+    if base not in ("muon", "sgdm"):
+        raise ValueError("GUM requires a Property-II base optimizer: muon | sgdm")
+    if compensation not in ("paper", "finetune"):
+        raise ValueError(f"unknown compensation: {compensation}")
+    use_ns = base == "muon"
+
+    def fam_gamma(L: int) -> int:
+        return min(gamma, L)
+
+    def init_family(p_leaf: jax.Array) -> GUMFamilyState:
+        fs = family_shape(p_leaf, rank)
+        g_f = fam_gamma(fs.L)
+        p0 = jnp.zeros(proj_shape(fs), jnp.float32)
+        r_low = jnp.zeros(lowrank_state_shape(fs), jnp.float32)
+        if g_f == 0:
+            return GUMFamilyState(p=p0, r_low=r_low, r_full=None, idx=None)
+        r_full = jnp.zeros((g_f, fs.m, fs.n), jnp.float32)
+        idx = jnp.arange(g_f, dtype=jnp.int32)
+        return GUMFamilyState(p=p0, r_low=r_low, r_full=r_full, idx=idx)
+
+    def init(params: PyTree) -> GUMState:
+        fams = jax.tree_util.tree_map(
+            lambda p: None if p is None else init_family(p),
+            params,
+            is_leaf=lambda x: x is None,
+        )
+        return GUMState(count=jnp.zeros((), jnp.int32), families=fams)
+
+    def update_family(
+        g_leaf: jax.Array,
+        st: GUMFamilyState,
+        p_leaf: jax.Array,
+        count: jax.Array,
+        step_lr: jax.Array,
+        key: jax.Array,
+    ) -> tuple[jax.Array, GUMFamilyState]:
+        fs = family_shape(p_leaf, rank)
+        g_f = fam_gamma(fs.L)
+        q = g_f / fs.L
+        g = g_leaf.astype(jnp.float32)  # (*lead, m, n) — never reshaped
+
+        refresh = (count - 1) % period == 0
+        key_proj, key_idx = jax.random.split(key)
+
+        # --- period boundary: new projector, resample blocks, restart momentum
+        def do_refresh(_):
+            p_new = compute_projectors(
+                projector, g, fs.rank, key_proj, fs.side, subspace_iters
+            )
+            out = (p_new, jnp.zeros_like(st.r_low))
+            if g_f > 0:
+                idx_new = jax.random.choice(
+                    key_idx, fs.L, (g_f,), replace=False
+                ).astype(jnp.int32)
+                out += (jnp.zeros_like(st.r_full), idx_new)
+            return out
+
+        def keep(_):
+            out = (st.p, st.r_low)
+            if g_f > 0:
+                out += (st.r_full, st.idx)
+            return out
+
+        if external_refresh:
+            refreshed = keep(None)
+        else:
+            refreshed = jax.lax.cond(refresh, do_refresh, keep, None)
+        if g_f > 0:
+            p_proj, r_low, r_full, idx = refreshed
+        else:
+            p_proj, r_low = refreshed
+            r_full, idx = None, None
+
+        c_low = 1.0 if compensation == "finetune" else 1.0 / max(1.0 - q, 1e-12)
+        c_comp = (1.0 - q) if compensation == "finetune" else 1.0
+
+        # --- low-rank branch (computed for all blocks; sampled blocks' output
+        # is overwritten by the scatter below and their r_low restarts at the
+        # next period boundary, so advancing it is trajectory-neutral).
+        if q < 1.0:
+            r_g = project(p_proj, g, fs.side)
+            r_low = beta * r_low + c_low * r_g
+            s_low = newton_schulz(r_low, steps=ns_steps) if use_ns else r_low
+            u = back_project(p_proj, s_low, fs.side)
+        else:
+            u = jnp.zeros_like(g)
+
+        # --- compensated full-rank branch on the gamma sampled blocks.
+        if g_f > 0:
+            c_full = 1.0 / q
+            g_s = gather_blocks(g, idx, fs)       # (gamma, m, n)
+            p_s = gather_blocks(p_proj, idx, fs)  # (gamma, s, r)
+            pptg = back_project(p_s, project(p_s, g_s, fs.side), fs.side)
+            resid = g_s - c_comp * pptg
+            r_full = beta * r_full + c_full * resid
+            s_full = newton_schulz(r_full, steps=ns_steps) if use_ns else r_full
+            u = scatter_blocks(u, idx, s_full, fs)
+
+        u = -step_lr * (u + weight_decay * p_leaf.astype(jnp.float32))
+        return u, GUMFamilyState(p=p_proj, r_low=r_low, r_full=r_full, idx=idx)
+
+    def update(grads: PyTree, state: GUMState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(state.families)
+
+        upds, new_states = [], []
+        for i, (g, fst, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
+            if g is None or p is None:
+                upds.append(None)
+                new_states.append(None)
+                continue
+            key = jax.random.fold_in(base_key, i)
+            u, ns = update_family(g, fst, p, count, step_lr, key)
+            upds.append(u)
+            new_states.append(ns)
+
+        updates = jax.tree_util.tree_unflatten(treedef, upds)
+        families = jax.tree_util.tree_unflatten(treedef, new_states)
+        return updates, GUMState(count=count, families=families)
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Low-rank gradient ACCUMULATION (beyond-paper, DESIGN.md §3).
+#
+# Projection is linear, so sum_mb Pᵀ G_mb == Pᵀ (sum_mb G_mb): microbatch
+# gradient accumulation can happen in the projected space.  The fp32
+# accumulator for a family shrinks from (*lead, m, n) to (*lead, r, n) plus
+# gamma full slots — the same (2-q)·mr + q·m² ratio the paper proves for
+# optimizer states, now applied to the gradient accumulator.
+#
+# Exactness: GUM's update consumes the gradient ONLY through Pᵀ G (low-rank
+# branch) and G[idx] (sampled full blocks).  With Property I,
+#     project(P, back_project(P, acc_low)) == acc_low
+# so the reconstruction
+#     G_hat = scatter(back_project(P, acc_low), idx, acc_full)
+# fed to the STANDARD update produces bit-equivalent updates to accumulating
+# raw gradients — without ever holding a full-shape accumulator.
+#
+# The projector refresh needs one raw gradient; Algorithm 2 builds P from a
+# *single stochastic gradient* G_{t,0} anyway, so refreshing from the first
+# microbatch's gradient keeps the same estimator class (any Property-I P
+# preserves unbiasedness).  Hooks (all sharing the gum() label routing):
+#
+#   tools = gum_accum_tools(lr, rank=..., gamma=..., ...)
+#   state = tools.transform.init(params)
+#   state = tools.refresh(grads_mb0, state, params)     # cond'd on period
+#   acc   = tools.project(grads_mb, state, params)      # per microbatch; sum
+#   g_hat = tools.reconstruct(acc, state, params)       # compact -> grads
+#   upd, state = tools.transform.update(g_hat, state, params)
+# ---------------------------------------------------------------------------
+
+
+class GUMAccumTools(NamedTuple):
+    transform: Transform
+    refresh: Callable          # (grads, state, params) -> state
+    project: Callable          # (grads, state, params) -> compact pytree
+    reconstruct: Callable      # (compact, state, params) -> grads pytree
+
+
+def gum_accum_tools(
+    lr: Schedule,
+    rank: int = 128,
+    gamma: int = 2,
+    period: int = 200,
+    projector: str = "svd",
+    lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+    seed: int = 0,
+    subspace_iters: int = 2,
+    **kw,
+) -> GUMAccumTools:
+    transform = gum(
+        lr, rank=rank, gamma=gamma, period=period, projector=projector,
+        lowrank_filter=lowrank_filter, seed=seed, subspace_iters=subspace_iters,
+        external_refresh=True, **kw,
+    )
+
+    def labels(params):
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda path, p: lowrank_filter(path, p), paths, params
+        )
+
+    def refresh(grads, state: "MultiStateLike", params):
+        """Run the period-boundary projector/sampling refresh against raw
+        (microbatch-0) gradients, leaving count untouched (the subsequent
+        transform.update call on the same step sees fresh P and skips its own
+        refresh because we advance its RNG deterministically from count)."""
+        gum_state: GUMState = state.inner["gum"]
+        count = gum_state.count + 1
+        refresh_now = (count - 1) % period == 0
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+
+        is_low = labels(params)
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(gum_state.families)
+        lab_leaves = treedef.flatten_up_to(is_low)
+
+        new_fams = []
+        for i, (g, fam, p, is_l) in enumerate(zip(g_leaves, s_leaves, leaves, lab_leaves)):
+            if not is_l or fam is None:
+                new_fams.append(fam)
+                continue
+            fs = family_shape(p, rank)
+            g_f = min(gamma, fs.L)
+            key = jax.random.fold_in(base_key, i)
+            key_proj, key_idx = jax.random.split(key)
+
+            def do(_, g=g, fam=fam, fs=fs, g_f=g_f, key_proj=key_proj, key_idx=key_idx):
+                p_new = compute_projectors(
+                    projector, g.astype(jnp.float32), fs.rank, key_proj, fs.side,
+                    subspace_iters,
+                )
+                out = (p_new, jnp.zeros_like(fam.r_low))
+                if g_f > 0:
+                    idx_new = jax.random.choice(key_idx, fs.L, (g_f,), replace=False
+                                                ).astype(jnp.int32)
+                    out += (jnp.zeros_like(fam.r_full), idx_new)
+                return out
+
+            def keep(_, fam=fam, g_f=g_f):
+                out = (fam.p, fam.r_low)
+                if g_f > 0:
+                    out += (fam.r_full, fam.idx)
+                return out
+
+            res = jax.lax.cond(refresh_now, do, keep, None)
+            if g_f > 0:
+                new_fams.append(GUMFamilyState(*res))
+            else:
+                new_fams.append(GUMFamilyState(res[0], res[1], None, None))
+
+        fams = jax.tree_util.tree_unflatten(treedef, new_fams)
+        new_inner = dict(state.inner)
+        new_inner["gum"] = GUMState(count=gum_state.count, families=fams)
+        return state._replace(inner=new_inner)
+
+    def project_grads(grads, state, params):
+        gum_state: GUMState = state.inner["gum"]
+        is_low = labels(params)
+
+        def one(g, fam, p, is_l):
+            if g is None:
+                return None
+            if not is_l or fam is None:
+                return {"raw": g.astype(jnp.float32)}
+            fs = family_shape(p, rank)
+            g32 = g.astype(jnp.float32)
+            out = {"low": project(fam.p, g32, fs.side)}
+            if fam.idx is not None:
+                out["full"] = gather_blocks(g32, fam.idx, fs)
+            return out
+
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+        g_l = treedef.flatten_up_to(grads)
+        s_l = treedef.flatten_up_to(gum_state.families)
+        lab = treedef.flatten_up_to(is_low)
+        return jax.tree_util.tree_unflatten(
+            treedef, [one(g, f, p, il) for g, f, p, il in zip(g_l, s_l, leaves, lab)]
+        )
+
+    def reconstruct(compact, state, params):
+        gum_state: GUMState = state.inner["gum"]
+        is_low = labels(params)
+
+        def one(c, fam, p, is_l):
+            if c is None:
+                return None
+            if not is_l or fam is None:
+                return c["raw"]
+            fs = family_shape(p, rank)
+            g_hat = back_project(fam.p, c["low"], fs.side)
+            if "full" in c:
+                g_hat = scatter_blocks(g_hat, fam.idx, c["full"], fs)
+            return g_hat
+
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+        c_l = treedef.flatten_up_to(compact)
+        s_l = treedef.flatten_up_to(gum_state.families)
+        lab = treedef.flatten_up_to(is_low)
+        return jax.tree_util.tree_unflatten(
+            treedef, [one(c, f, p, il) for c, f, p, il in zip(c_l, s_l, leaves, lab)]
+        )
+
+    return GUMAccumTools(transform=transform, refresh=refresh,
+                         project=project_grads, reconstruct=reconstruct)
+
+
+def gum(
+    lr: Schedule,
+    rank: int = 128,
+    gamma: int = 2,
+    period: int = 200,
+    projector: str = "svd",
+    lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+    **kw,
+) -> Transform:
+    """Full GUM: unbiased low-rank Muon on hidden matrices, AdamW elsewhere
+    (embeddings / head / norms / biases), mirroring the paper's setup."""
+    inner = {
+        "gum": gum_matrices(
+            lr, rank=rank, gamma=gamma, period=period, projector=projector, **kw
+        ),
+        "adamw": adamw(lr, weight_decay=kw.get("weight_decay", 0.0)),
+    }
+
+    def label_fn(params: PyTree) -> PyTree:
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda path, p: "gum" if lowrank_filter(path, p) else "adamw",
+            paths,
+            params,
+        )
+
+    return multi_transform(inner, label_fn)

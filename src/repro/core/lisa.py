@@ -1,0 +1,91 @@
+"""LISA (Pan et al., 2024) — layerwise importance sampling.
+
+The origin of the paper's debiasing idea: per period, sample gamma layers and
+train ONLY those (full AdamW), freezing the rest.  Embeddings / norms / head
+are always trained.  Included as a baseline and as the conceptual ancestor of
+GUM's full-rank branch.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import AdamWState, adamw
+from .api import PyTree, Schedule, Transform, tree_paths
+from .lowrank_common import default_lowrank_filter, family_shape
+
+
+class LISAState(NamedTuple):
+    count: jax.Array
+    inner: PyTree  # AdamW state over all params
+    # per-family active-layer indices live in `masks` keyed like params
+    masks: PyTree
+
+
+def lisa(
+    lr: Schedule,
+    gamma: int = 2,
+    period: int = 200,
+    seed: int = 0,
+    layer_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+    **adam_kw,
+) -> Transform:
+    base = adamw(lr, **adam_kw)
+
+    def init(params: PyTree) -> LISAState:
+        paths = tree_paths(params)
+
+        def init_mask(path, p):
+            if not layer_filter(path, p):
+                return None  # always trained
+            fs = family_shape(p, rank=1)
+            return jnp.zeros(fs.lead if fs.lead else (1,), bool)
+
+        masks = jax.tree_util.tree_map(init_mask, paths, params)
+        return LISAState(count=jnp.zeros((), jnp.int32), inner=base.init(params), masks=masks)
+
+    def update(grads: PyTree, state: LISAState, params: PyTree):
+        count = state.count + 1
+        refresh = (count - 1) % period == 0
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), (count - 1) // period)
+
+        leaves, treedef = jax.tree_util.tree_flatten(
+            state.masks, is_leaf=lambda x: x is None
+        )
+        new_masks = []
+        for i, mask in enumerate(leaves):
+            if mask is None:
+                new_masks.append(None)
+                continue
+            L = mask.size
+            g_f = min(gamma, L)
+            key = jax.random.fold_in(base_key, i)
+            idx = jax.random.choice(key, L, (g_f,), replace=False)
+            fresh = jnp.zeros((L,), bool).at[idx].set(True).reshape(mask.shape)
+            new_masks.append(jnp.where(refresh, fresh, mask))
+        masks = jax.tree_util.tree_unflatten(treedef, new_masks)
+
+        # Zero out gradients of frozen layers, then run AdamW.
+        def mask_grad(g, m, p):
+            if g is None:
+                return None
+            if m is None:
+                return g
+            fs = family_shape(p, rank=1)
+            mm = m.reshape(fs.lead + (1, 1)) if fs.lead else m.reshape(())
+            return g * mm.astype(g.dtype)
+
+        masked = jax.tree_util.tree_map(
+            mask_grad, grads, masks, params, is_leaf=lambda x: x is None
+        )
+        updates, inner = base.update(masked, state.inner, params)
+        # Also zero the *updates* of frozen layers (AdamW momentum of frozen
+        # layers keeps decaying; LISA freezes params entirely).
+        updates = jax.tree_util.tree_map(
+            mask_grad, updates, masks, params, is_leaf=lambda x: x is None
+        )
+        return updates, LISAState(count=count, inner=inner, masks=masks)
+
+    return Transform(init, update)

@@ -1,0 +1,156 @@
+"""Shared machinery for blockwise low-rank optimizers (GaLore / GUM / GoLore).
+
+A *family* is one pytree leaf of shape ``(*lead, m, n)`` whose leading dims
+are stacked blocks (scan-stacked layers ``(L, m, n)``, stacked MoE experts
+``(L, E, m, n)``).  All per-block linear algebra is expressed with
+leading-ellipsis einsums and batched QR/SVD — NEVER a reshape that merges a
+leading (possibly expert-sharded) dim into the block count, because GSPMD
+cannot repartition such reshapes without a full rematerialization (observed
+as "[SPMD] Involuntary full rematerialization" on MoE cells).
+
+The projector ``P`` acts on the shorter matrix side per GaLore:
+  left  (m <= n): state = Pᵀ G in (*lead, r, n);  back-projection  P @ S
+  right (m >  n): state = G P in (*lead, m, r);   back-projection  S @ Pᵀ
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FamilyShape(NamedTuple):
+    lead: tuple[int, ...]  # leading block dims
+    L: int                 # total block count = prod(lead)
+    m: int
+    n: int
+    side: str              # "left" | "right"
+    rank: int
+
+
+def family_shape(p: jax.Array, rank: int) -> FamilyShape:
+    if p.ndim < 2:
+        raise ValueError(f"low-rank families need >=2 dims, got {p.shape}")
+    m, n = int(p.shape[-2]), int(p.shape[-1])
+    lead = tuple(int(d) for d in p.shape[:-2])
+    L = 1
+    for d in lead:
+        L *= d
+    side = "left" if m <= n else "right"
+    rank = min(rank, m, n)
+    return FamilyShape(lead=lead, L=L, m=m, n=n, side=side, rank=rank)
+
+
+def proj_dim(fs: FamilyShape) -> int:
+    """Dim P projects: m for left, n for right."""
+    return fs.m if fs.side == "left" else fs.n
+
+
+def proj_shape(fs: FamilyShape) -> tuple[int, ...]:
+    return fs.lead + (proj_dim(fs), fs.rank)
+
+
+def lowrank_state_shape(fs: FamilyShape) -> tuple[int, ...]:
+    """(*lead, r, n) for left, (*lead, m, r) for right."""
+    if fs.side == "left":
+        return fs.lead + (fs.rank, fs.n)
+    return fs.lead + (fs.m, fs.rank)
+
+
+def project(p: jax.Array, g: jax.Array, side: str) -> jax.Array:
+    """Low-rank projection. p: (*lead, s, r), g: (*lead, m, n)."""
+    if side == "left":
+        return jnp.einsum("...mr,...mn->...rn", p, g)
+    return jnp.einsum("...mn,...nr->...mr", g, p)
+
+
+def back_project(p: jax.Array, s: jax.Array, side: str) -> jax.Array:
+    """Back-projection of low-rank states to (*lead, m, n)."""
+    if side == "left":
+        return jnp.einsum("...mr,...rn->...mn", p, s)
+    return jnp.einsum("...mr,...nr->...mn", s, p)
+
+
+def reconstruct(p: jax.Array, g: jax.Array, side: str) -> jax.Array:
+    """P Pᵀ G (left) or G P Pᵀ (right): the biased low-rank gradient."""
+    return back_project(p, project(p, g, side), side)
+
+
+def block_index(idx: jax.Array, fs: FamilyShape):
+    """Flat block ids (gamma,) -> tuple of per-lead-dim index arrays usable
+    for advanced-indexing gather/scatter on the UNreshaped leaf."""
+    if len(fs.lead) == 1:
+        return (idx,)
+    return jnp.unravel_index(idx, fs.lead)
+
+
+def gather_blocks(x: jax.Array, idx: jax.Array, fs: FamilyShape) -> jax.Array:
+    """(*lead, a, b) -> (gamma, a, b) without reshaping the source."""
+    if not fs.lead:  # single-block family: gamma is necessarily 1
+        return x[None]
+    return x[block_index(idx, fs)]
+
+
+def scatter_blocks(x: jax.Array, idx: jax.Array, vals: jax.Array, fs: FamilyShape) -> jax.Array:
+    if not fs.lead:
+        return vals[0]
+    return x.at[block_index(idx, fs)].set(vals)
+
+
+def compute_projectors(
+    kind: str,
+    g: jax.Array,
+    rank: int,
+    key: jax.Array,
+    side: str,
+    subspace_iters: int = 2,
+) -> jax.Array:
+    """Batched per-block projectors; returns (*lead, s, rank), orthonormal
+    columns per block (Property I).  Uses batched QR/SVD — no reshapes."""
+    if side == "right":
+        g = jnp.swapaxes(g, -1, -2)
+    g32 = g.astype(jnp.float32)
+    lead = g.shape[:-2]
+    m, n = g.shape[-2], g.shape[-1]
+
+    if kind == "svd":
+        u, _, _ = jnp.linalg.svd(g32, full_matrices=False)
+        return u[..., :, :rank]
+    if kind == "subspace":
+        omega = jax.random.normal(key, lead + (n, rank), jnp.float32)
+        y = g32 @ omega
+        for _ in range(subspace_iters):
+            y, _ = jnp.linalg.qr(y)
+            y = g32 @ (jnp.swapaxes(g32, -1, -2) @ y)
+        q, _ = jnp.linalg.qr(y)
+        return q
+    if kind == "random":
+        z = jax.random.normal(key, lead + (m, rank), jnp.float32)
+        q, _ = jnp.linalg.qr(z)
+        return q
+    if kind == "grass":
+        row_norms = jnp.linalg.norm(g32, axis=-1)  # (*lead, m)
+        logits = jnp.log(row_norms + 1e-30)
+        gumbel = jax.random.gumbel(key, logits.shape)
+        _, idx = jax.lax.top_k(logits + gumbel, rank)  # (*lead, rank)
+        p = jax.nn.one_hot(idx, m, dtype=jnp.float32)  # (*lead, rank, m)
+        return jnp.swapaxes(p, -1, -2)
+    raise ValueError(f"unknown projector kind: {kind!r}")
+
+
+def default_lowrank_filter(path: str, p) -> bool:
+    """Which leaves get low-rank treatment: hidden matrices, like GaLore's
+    target-module convention (attention + MLP kernels).  Embeddings / head /
+    norms / biases / routers / conv taps / per-layer vector stacks fall
+    through to the base/fallback optimizer."""
+    if p.ndim < 2:
+        return False
+    if min(int(p.shape[-1]), int(p.shape[-2])) < 8:
+        return False  # per-layer vectors stacked into 2-D, conv taps, gates
+    lowered = path.lower()
+    return not any(
+        k in lowered
+        for k in ("embed", "lm_head", "norm", "scale", "bias",
+                  "conv_w", "skip_d", "a_log", "router")
+    )

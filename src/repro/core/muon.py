@@ -1,0 +1,104 @@
+"""Muon (Jordan et al., 2024) — momentum + Newton–Schulz orthogonalization.
+
+Applies to >=2-D parameters (leading axes are treated as stacked blocks, e.g.
+scan-stacked layers ``(L, m, n)``).  1-D parameters (norm scales, biases) and
+anything excluded by ``matrix_filter`` fall back to AdamW, as in practice.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import adamw
+from .api import PyTree, Schedule, Transform, multi_transform, schedule_value, tree_paths
+from .newton_schulz import newton_schulz
+
+
+class MuonState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+
+
+def _blockwise_ns(m: jax.Array, ns_steps: int) -> jax.Array:
+    """Newton–Schulz over the trailing two dims; leading dims are blocks."""
+    return newton_schulz(m, steps=ns_steps)
+
+
+def _shape_scale(shape) -> float:
+    m, n = shape[-2], shape[-1]
+    return max(1.0, m / n) ** 0.5
+
+
+def muon_matrices(
+    lr: Schedule,
+    beta: float = 0.95,
+    weight_decay: float = 0.0,
+    ns_steps: int = 5,
+    nesterov: bool = True,
+) -> Transform:
+    """Muon over matrix leaves only (callers route 1-D leaves elsewhere)."""
+
+    def init(params: PyTree) -> MuonState:
+        mu = jax.tree_util.tree_map(
+            lambda p: None if p is None else jnp.zeros_like(p, dtype=jnp.float32),
+            params,
+            is_leaf=lambda x: x is None,
+        )
+        return MuonState(count=jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads: PyTree, state: MuonState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+
+        def upd(g, mu, p):
+            if g is None:
+                return None, None
+            g32 = g.astype(jnp.float32)
+            mu = beta * mu + g32
+            mom = beta * mu + g32 if nesterov else mu
+            o = _blockwise_ns(mom, ns_steps)
+            u = -step_lr * (
+                _shape_scale(p.shape) * o + weight_decay * p.astype(jnp.float32)
+            )
+            return u, mu
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, params, is_leaf=lambda x: x is None)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_pair)
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_pair)
+        return updates, MuonState(count=count, mu=mu)
+
+    return Transform(init, update)
+
+
+def default_matrix_filter(path: str, p: jax.Array) -> bool:
+    """Hidden-layer matrices: >=2 trailing dims and not an embedding/head/norm."""
+    if p.ndim < 2:
+        return False
+    lowered = path.lower()
+    return not any(k in lowered for k in ("embed", "lm_head", "norm", "scale", "bias"))
+
+
+def muon(
+    lr: Schedule,
+    beta: float = 0.95,
+    weight_decay: float = 0.0,
+    ns_steps: int = 5,
+    adam_lr: Optional[Schedule] = None,
+    matrix_filter: Callable[[str, jax.Array], bool] = default_matrix_filter,
+) -> Transform:
+    """Full Muon optimizer: Muon on hidden matrices, AdamW on the rest."""
+    inner = {
+        "muon": muon_matrices(lr, beta=beta, weight_decay=weight_decay, ns_steps=ns_steps),
+        "adamw": adamw(adam_lr if adam_lr is not None else lr, weight_decay=weight_decay),
+    }
+
+    def label_fn(params: PyTree) -> PyTree:
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda path, p: "muon" if matrix_filter(path, p) else "adamw", paths, params
+        )
+
+    return multi_transform(inner, label_fn)

@@ -1,0 +1,64 @@
+"""Newton–Schulz orthogonalization (msign) used by Muon.
+
+``newton_schulz(X)`` approximates ``msign(X) = U V^T`` for ``X = U Σ V^T``.
+We use Keller Jordan's quintic iteration with the standard coefficients
+(a, b, c) = (3.4445, -4.7750, 2.0315), 5 steps, computed in bf16-or-f32.
+
+This is the pure-jnp implementation used by the optimizers by default; a
+Pallas-fused TPU version of one iteration lives in
+``repro.kernels.newton_schulz`` (dispatch via ``impl='pallas'``).
+
+Key property for the paper (Lemma 1 / Property II):
+``newton_schulz(P @ X) == P @ newton_schulz(X)`` whenever ``PᵀP = I`` —
+tested exactly in tests/test_unbiasedness.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+NS_STEPS = 5
+
+
+def newton_schulz(x: jax.Array, *, steps: int = NS_STEPS, eps: float = 1e-7) -> jax.Array:
+    """Quintic Newton–Schulz iteration toward the matrix sign/polar factor.
+
+    Works on (..., m, n); iterates on the transposed problem when m > n so the
+    Gram matrix XXᵀ is the small side (exactly Muon's reference trick).
+    """
+    a, b, c = NS_COEFFS
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+
+    transposed = x.shape[-2] > x.shape[-1]
+    if transposed:
+        x = jnp.swapaxes(x, -1, -2)
+
+    # Spectral-norm-ish normalization so singular values land in the basin.
+    norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
+    x = x / (norm + eps)
+
+    def body(_, x):
+        xxt = x @ jnp.swapaxes(x, -1, -2)          # (..., m, m), m <= n
+        bxx = b * xxt + c * (xxt @ xxt)            # quintic combination
+        return a * x + bxx @ x
+
+    x = jax.lax.fori_loop(0, steps, body, x)
+
+    if transposed:
+        x = jnp.swapaxes(x, -1, -2)
+    return x.astype(orig_dtype)
+
+
+def msign_exact(x: jax.Array) -> jax.Array:
+    """Exact UVᵀ via SVD — the oracle for Assumption 4 and kernel tests."""
+    u, _, vt = jnp.linalg.svd(x.astype(jnp.float32), full_matrices=False)
+    return u @ vt
+
+
+def muon_scale(shape: tuple[int, int]) -> float:
+    """Muon's shape-dependent update scale: sqrt(max(1, m/n)) keeps the RMS of
+    the orthogonalized update comparable across aspect ratios (Jordan et al.)."""
+    m, n = shape[-2], shape[-1]
+    return max(1.0, m / n) ** 0.5

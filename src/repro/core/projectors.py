@@ -1,0 +1,116 @@
+"""Low-rank projector constructions.
+
+Every projector returns ``P in R^{m x r}`` with exactly orthonormal columns
+(Property I of the paper: ``P^T P = I_r``).  Property I is what the unbiased
+paradigm (Algorithm 3) needs — the *choice* of subspace only affects how much
+of the gradient energy the low-rank branch captures, never unbiasedness.
+
+Projectors:
+  * ``svd``       — GaLore's top-r left singular vectors, ``U[:, :r]``.
+  * ``subspace``  — randomized subspace (power) iteration; matmul + thin-QR
+                    only.  TPU-native replacement for LAPACK SVD (DESIGN.md §3).
+  * ``random``    — GoLore's projector: orthonormalized Gaussian, independent
+                    of the gradient.
+  * ``grass``     — GRASS-style: rows sampled proportional to row norms;
+                    columns of P are scaled one-hot vectors (orthonormal).
+
+All functions operate on a single block ``G in R^{m x n}`` (``m <= n`` is NOT
+assumed; we project the shorter side — see :func:`projection_side`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+ProjectorKind = Literal["svd", "subspace", "random", "grass"]
+
+
+def projection_side(shape: tuple[int, int]) -> str:
+    """GaLore projects the smaller dimension: 'left' if m <= n else 'right'.
+
+    'left'  : P in R^{m x r};   low-rank state is  P^T G in R^{r x n}
+    'right' : P in R^{n x r};   low-rank state is  G P  in R^{m x r}
+    """
+    m, n = shape
+    return "left" if m <= n else "right"
+
+
+def svd_projector(g: jax.Array, rank: int) -> jax.Array:
+    """Top-``rank`` left singular vectors of ``g`` (GaLore's projector)."""
+    u, _, _ = jnp.linalg.svd(g.astype(jnp.float32), full_matrices=False)
+    return u[:, :rank]
+
+
+def subspace_projector(
+    g: jax.Array, rank: int, key: jax.Array, *, iters: int = 2
+) -> jax.Array:
+    """Randomized subspace iteration: orth((G Gᵀ)^iters G Ω).
+
+    Matmul-only sketch of the dominant left subspace; converges to the top-r
+    singular subspace geometrically in the spectral-gap ratio.  Uses a thin QR
+    on an (m, r) matrix, which is cheap relative to a full SVD and MXU-friendly.
+    """
+    m, n = g.shape
+    g32 = g.astype(jnp.float32)
+    omega = jax.random.normal(key, (n, rank), dtype=jnp.float32)
+    y = g32 @ omega  # (m, r)
+    for _ in range(iters):
+        # Re-orthonormalize between power steps for numerical stability.
+        y, _ = jnp.linalg.qr(y)
+        y = g32 @ (g32.T @ y)
+    q, _ = jnp.linalg.qr(y)
+    return q
+
+
+def random_projector(shape: tuple[int, int], rank: int, key: jax.Array) -> jax.Array:
+    """GoLore's gradient-independent random orthonormal projector."""
+    m, _ = shape
+    z = jax.random.normal(key, (m, rank), dtype=jnp.float32)
+    q, _ = jnp.linalg.qr(z)
+    return q
+
+
+def grass_projector(g: jax.Array, rank: int, key: jax.Array) -> jax.Array:
+    """GRASS-style sparse projector: sample ``rank`` rows ∝ row norms.
+
+    P's columns are (scaled) one-hot row indicators, so P is orthonormal by
+    construction; P^T G selects/reweights rows of G.  We sample *without*
+    replacement via Gumbel top-k on the log-norm scores.
+    """
+    m, _ = g.shape
+    row_norms = jnp.linalg.norm(g.astype(jnp.float32), axis=1)
+    logits = jnp.log(row_norms + 1e-30)
+    gumbel = jax.random.gumbel(key, (m,))
+    _, idx = jax.lax.top_k(logits + gumbel, rank)
+    p = jax.nn.one_hot(idx, m, dtype=jnp.float32).T  # (m, rank)
+    return p
+
+
+def make_projector(
+    kind: ProjectorKind,
+    g: jax.Array,
+    rank: int,
+    key: jax.Array,
+    *,
+    subspace_iters: int = 2,
+) -> jax.Array:
+    """Dispatch; all return (m, rank) with orthonormal columns."""
+    if kind == "svd":
+        return svd_projector(g, rank)
+    if kind == "subspace":
+        return subspace_projector(g, rank, key, iters=subspace_iters)
+    if kind == "random":
+        return random_projector(g.shape, rank, key)
+    if kind == "grass":
+        return grass_projector(g, rank, key)
+    raise ValueError(f"unknown projector kind: {kind!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "kind", "subspace_iters"))
+def jit_make_projector(
+    kind: ProjectorKind, g: jax.Array, rank: int, key: jax.Array, subspace_iters: int = 2
+) -> jax.Array:
+    return make_projector(kind, g, rank, key, subspace_iters=subspace_iters)

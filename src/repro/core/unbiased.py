@@ -1,0 +1,128 @@
+"""Algorithm 3 — the general unbiased low-rank paradigm, exact Bernoulli form.
+
+This is the *reference semantics* implementation: every block independently
+draws xi ~ Bernoulli(q) each period and keeps full (m, n) momentum buffers
+(memory-naive, shapes static).  It exists for
+
+  * the synthetic experiments (Fig. 1 counterexample) where blocks are single
+    matrices and q is a true Bernoulli probability, and
+  * the theory tests (Lemma 1/2): a single step is checkable against the base
+    optimizer driven by the unbiased estimator G_hat.
+
+The production, memory-efficient fixed-count instantiation is
+:mod:`repro.core.gum`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .api import PyTree, Schedule, Transform, schedule_value
+from .lowrank_common import (
+    back_project,
+    compute_projectors,
+    family_shape,
+    project,
+    proj_shape,
+)
+from .newton_schulz import newton_schulz
+
+
+class UnbiasedFamilyState(NamedTuple):
+    p: jax.Array     # (L, s, r)
+    mom: jax.Array   # (L, m, n) full-shape momentum (reference semantics)
+    xi: jax.Array    # (L,) bool — full-rank this period?
+
+
+class UnbiasedState(NamedTuple):
+    count: jax.Array
+    families: PyTree
+
+
+def unbiased_lowrank(
+    lr: Schedule,
+    rank: int,
+    q: float,
+    period: int = 1,
+    projector: str = "svd",
+    base: str = "muon",
+    beta: float = 0.95,
+    ns_steps: int = 5,
+    compensation: str = "paper",
+    seed: int = 0,
+) -> Transform:
+    if base not in ("muon", "sgdm"):
+        raise ValueError("Property II requires base in {muon, sgdm}")
+    if not (0.0 < q < 1.0):
+        raise ValueError("Bernoulli unbiased form needs 0 < q < 1")
+    use_ns = base == "muon"
+    c_low = 1.0 if compensation == "finetune" else 1.0 / (1.0 - q)
+    c_comp = (1.0 - q) if compensation == "finetune" else 1.0
+    c_full = 1.0 / q
+
+    def init(params: PyTree) -> UnbiasedState:
+        def init_family(p_leaf):
+            fs = family_shape(p_leaf, rank)
+            return UnbiasedFamilyState(
+                p=jnp.zeros(proj_shape(fs), jnp.float32),
+                mom=jnp.zeros(fs.lead + (fs.m, fs.n), jnp.float32),
+                xi=jnp.zeros(fs.lead, bool),
+            )
+
+        fams = jax.tree_util.tree_map(init_family, params)
+        return UnbiasedState(count=jnp.zeros((), jnp.int32), families=fams)
+
+    def update_family(g_leaf, st, p_leaf, count, step_lr, key):
+        fs = family_shape(p_leaf, rank)
+        g = g_leaf.astype(jnp.float32)  # (*lead, m, n)
+        refresh = (count - 1) % period == 0
+        key_p, key_xi = jax.random.split(key)
+
+        def do_refresh(_):
+            p_new = compute_projectors(projector, g, fs.rank, key_p, fs.side)
+            xi_new = jax.random.bernoulli(key_xi, q, fs.lead)
+            return p_new, xi_new, jnp.zeros_like(st.mom)
+
+        p_proj, xi, mom = jax.lax.cond(
+            refresh, do_refresh, lambda _: (st.p, st.xi, st.mom), None
+        )
+
+        # Unbiased gradient estimate G_hat (Lemma 2's equivalent form).
+        pptg = back_project(p_proj, project(p_proj, g, fs.side), fs.side)
+        g_full = c_full * (g - c_comp * pptg)
+        g_low = c_low * pptg
+        g_hat = jnp.where(xi[..., None, None], g_full, g_low)
+
+        mom = beta * mom + g_hat
+        if use_ns:
+            # Property II: NS(P Pᵀ M) = P NS(Pᵀ M); computing NS on the
+            # full-shape momentum gives identical results for the low-rank
+            # blocks (their momentum lies in span(P)).
+            upd = newton_schulz(mom, steps=ns_steps)
+        else:
+            upd = mom
+        u = -step_lr * upd
+        return u, UnbiasedFamilyState(p=p_proj, mom=mom, xi=xi)
+
+    def update(grads: PyTree, state: UnbiasedState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), (count - 1) // period)
+
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(state.families)
+        upds, news = [], []
+        for i, (g, fst, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
+            key = jax.random.fold_in(base_key, i)
+            u, ns = update_family(g, fst, p, count, step_lr, key)
+            upds.append(u)
+            news.append(ns)
+        return (
+            jax.tree_util.tree_unflatten(treedef, upds),
+            UnbiasedState(count=count, families=jax.tree_util.tree_unflatten(treedef, news)),
+        )
+
+    return Transform(init, update)

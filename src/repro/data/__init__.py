@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLMStream, build_stream
+
+__all__ = ["DataConfig", "SyntheticLMStream", "build_stream"]

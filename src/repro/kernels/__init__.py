@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (hot spots) + jnp oracles.
+
+Layout per task spec: <name>.py holds the pl.pallas_call + BlockSpec kernel,
+ops.py the jit'd wrappers (impl dispatch), ref.py the pure-jnp oracles.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

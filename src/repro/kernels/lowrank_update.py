@@ -1,0 +1,74 @@
+"""Fused GUM/GaLore momentum update kernel:  R' = beta·R + coeff·(Pᵀ G).
+
+This is the per-step hot loop of every low-rank optimizer in the paper
+(Algorithm 1 line 5-6 / Algorithm 2 eq. (1)).  Fusing the projection GEMM
+with the momentum AXPY avoids materializing Pᵀ G in HBM: the (r, n) output
+tile accumulates partial products over m (grid-minor reduction) and folds in
+beta·R exactly once at the first reduction step.
+
+Layout: P (m, r), G (m, n), R (r, n); r ≤ 512 so a whole (r, block_n) output
+tile plus (block_m, r) / (block_m, block_n) input tiles fit VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lowrank_update_kernel(
+    p_ref, g_ref, r_ref, out_ref, acc, *, beta: float, coeff: float, mblocks: int
+):
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc[...] = beta * r_ref[...].astype(jnp.float32)
+
+    p = p_ref[...].astype(jnp.float32)  # (bm, r)
+    g = g_ref[...].astype(jnp.float32)  # (bm, bn)
+    acc[...] += coeff * (p.T @ g)
+
+    @pl.when(mi == mblocks - 1)
+    def _done():
+        out_ref[...] = acc[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beta", "coeff", "block_m", "block_n", "interpret")
+)
+def lowrank_update(
+    p: jax.Array,
+    g: jax.Array,
+    r_state: jax.Array,
+    beta: float,
+    coeff: float,
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    m, r = p.shape
+    _, n = g.shape
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0
+    mblocks = m // block_m
+    return pl.pallas_call(
+        functools.partial(
+            _lowrank_update_kernel, beta=beta, coeff=coeff, mblocks=mblocks
+        ),
+        grid=(n // block_n, mblocks),  # m innermost: sequential reduction
+        in_specs=[
+            pl.BlockSpec((block_m, r), lambda ni, mi: (mi, 0)),
+            pl.BlockSpec((block_m, block_n), lambda ni, mi: (mi, ni)),
+            pl.BlockSpec((r, block_n), lambda ni, mi: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((r, block_n), lambda ni, mi: (0, ni)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((r, block_n), jnp.float32)],
+        interpret=interpret,
+    )(p, g, r_state)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernels for the Muon Newton–Schulz iteration.
+
+One quintic NS step is  X' = a·X + (b·G + c·G²) @ X  with the Gram matrix
+G = X Xᵀ.  In GUM's low-rank branch X = R has shape (r, n) with r ≤ 512, so
+G is at most (512, 512) — it fits VMEM whole.  We therefore split the step
+into two MXU-friendly kernels plus an O(r³) polynomial evaluated inline:
+
+  1. :func:`gram`          — G = X Xᵀ, reduction tiled over n (grid-minor,
+                             accumulating into a VMEM scratch).
+  2. :func:`poly_matmul_axpy` — Y = a·X + A2 @ X with A2 = b·G + c·G², tiled
+                             over n; A2 is broadcast (block-constant) so it is
+                             loaded to VMEM once per n tile.
+
+The (r, r) polynomial A2 = b·G + c·G@G stays in jnp — it's ~2r³ FLOPs,
+negligible next to the 2·r²·n Gram/apply work, and XLA fuses it fine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.newton_schulz import NS_COEFFS
+
+
+def _gram_kernel(x_ref, g_ref, acc, *, nblocks):
+    ki = pl.program_id(0)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    x = x_ref[...].astype(jnp.float32)  # (m, bn)
+    acc[...] += x @ x.T
+
+    @pl.when(ki == nblocks - 1)
+    def _done():
+        g_ref[...] = acc[...].astype(g_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gram(x: jax.Array, *, block_n: int = 512, interpret: bool = False) -> jax.Array:
+    """G = X Xᵀ for X (m, n); the m side must fit VMEM (m ≤ ~1024)."""
+    m, n = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, "pad n to a block multiple"
+    nblocks = n // block_n
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, nblocks=nblocks),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((m, block_n), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((m, m), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m, m), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def _poly_apply_kernel(a2_ref, x_ref, y_ref, *, a: float):
+    x = x_ref[...].astype(jnp.float32)
+    a2 = a2_ref[...].astype(jnp.float32)
+    y_ref[...] = (a * x + a2 @ x).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("a", "block_n", "interpret"))
+def poly_matmul_axpy(
+    a2: jax.Array, x: jax.Array, a: float, *, block_n: int = 512, interpret: bool = False
+) -> jax.Array:
+    """Y = a·X + A2 @ X for A2 (m, m), X (m, n), tiled over n."""
+    m, n = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0
+    return pl.pallas_call(
+        functools.partial(_poly_apply_kernel, a=a),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda k: (0, 0)),
+            pl.BlockSpec((m, block_n), lambda k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a2, x)
+
+
+def ns_iteration(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """One fused NS step via the two kernels (fp32 in/out)."""
+    a, b, c = NS_COEFFS
+    g = gram(x, interpret=interpret)
+    a2 = b * g + c * (g @ g)  # (m, m) — tiny, stays in XLA
+    return poly_matmul_axpy(a2, x, a, interpret=interpret)
+
+
+def newton_schulz_pallas(
+    x: jax.Array, *, steps: int = 5, eps: float = 1e-7, interpret: bool = False
+) -> jax.Array:
+    """Drop-in replacement for core.newton_schulz on a single (m, n) matrix
+    with m <= n (transpose handled by the wrapper in ops.py)."""
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    norm = jnp.linalg.norm(x)
+    x = x / (norm + eps)
+    for _ in range(steps):
+        x = ns_iteration(x, interpret=interpret)
+    return x.astype(orig_dtype)

@@ -1,0 +1,87 @@
+"""jit'd public wrappers around the Pallas kernels with impl dispatch.
+
+``impl`` semantics everywhere:
+  "xla"       — the pure-jnp oracle path (default; used on CPU and for the
+                multi-pod dry-run, which lowers for the CPU backend).
+  "pallas"    — the TPU kernel (real hardware).
+  "interpret" — the Pallas kernel executed by the interpreter (CPU tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.newton_schulz import newton_schulz as ns_xla
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .lowrank_update import lowrank_update as _lowrank_update
+from .newton_schulz import newton_schulz_pallas
+from .ssd_scan import ssd_scan as _ssd_scan
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    impl: str = "xla", block_q: int = 128, block_kv: int = 128,
+) -> jax.Array:
+    if impl == "xla":
+        return ref.attention_ref(q, k, v, causal=causal)
+    if impl == "xla_chunked":
+        return ref.attention_chunked_ref(q, k, v, causal=causal, block_kv=512)
+    return _flash(
+        q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=(impl == "interpret"),
+    )
+
+
+def decode_attention(q, k, v, pos, *, impl: str = "xla") -> jax.Array:
+    # Decode is memory-bound gather+reduce; the XLA path is already optimal
+    # on TPU for a single query token (no flash tiling needed).
+    del impl
+    return ref.decode_attention_ref(q, k, v, pos)
+
+
+def newton_schulz(x: jax.Array, *, steps: int = 5, impl: str = "xla") -> jax.Array:
+    """Batched (…, m, n) Newton–Schulz with impl dispatch."""
+    if impl == "xla":
+        return ns_xla(x, steps=steps)
+    interpret = impl == "interpret"
+
+    def one(m):
+        transposed = m.shape[0] > m.shape[1]
+        m2 = m.T if transposed else m
+        out = newton_schulz_pallas(m2, steps=steps, interpret=interpret)
+        return out.T if transposed else out
+
+    if x.ndim == 2:
+        return one(x).astype(x.dtype)
+    flat = x.reshape((-1,) + x.shape[-2:])
+    out = jax.lax.map(one, flat)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def lowrank_update(
+    p: jax.Array, g: jax.Array, r_state: jax.Array, beta: float, coeff: float,
+    *, impl: str = "xla",
+) -> jax.Array:
+    if impl == "xla":
+        return ref.lowrank_update_ref(p, g, r_state, beta, coeff)
+    return _lowrank_update(
+        p, g, r_state, beta, coeff, interpret=(impl == "interpret")
+    )
+
+
+def ssd(
+    x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+    d: jax.Array, *, chunk: int = 64, impl: str = "xla",
+) -> tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD over a full sequence; returns (y, final_state)."""
+    if impl == "xla":
+        return ref.ssd_chunked_ref(x, dt, a, b, c, d, chunk)
+    y, sfin = _ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=(impl == "interpret"))
+    y = y + d[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), sfin
+
+
+def ssd_decode_step(state, x, dt, a, b, c, d):
+    return ref.ssd_decode_ref(state, x, dt, a, b, c, d)

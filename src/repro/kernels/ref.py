@@ -1,0 +1,264 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests).
+
+Shapes convention:
+  attention:      q (B, S, H, D), k/v (B, T, KV, D), GQA via H % KV == 0
+  newton-schulz:  x (m, n)
+  lowrank update: p (m, r), g (m, n), r_state (r, n)
+  ssd (Mamba-2):  x (B, S, H, P), dt (B, S, H), a (H,), b/c (B, S, N)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ attention
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_len: jax.Array | None = None,
+) -> jax.Array:
+    """Softmax attention with GQA; fp32 softmax; optional causal/kv-length mask."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, S, KV, G, D)
+    # fp32 ACCUMULATION via preferred_element_type — no materialized fp32
+    # copies of K/V (matters enormously for decode over a 32k+ cache).
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    )
+    logits *= scale
+    T = k.shape[1]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        # queries are the last S positions of the T-long kv sequence
+        offset = T - S
+        mask &= jnp.arange(T)[None, :] <= (jnp.arange(S)[:, None] + offset)
+    if kv_len is not None:
+        mask &= jnp.arange(T)[None, :] < kv_len
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum(
+        "bkgst,btkd->bskgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array
+) -> jax.Array:
+    """Single-step decode: q (B, 1, H, D) over a (B, Smax, KV, D) cache with
+    valid length pos+1 (positions 0..pos)."""
+    return attention_ref(q, k, v, causal=False, kv_len=pos + 1)
+
+
+def attention_chunked_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_kv: int = 512,
+) -> jax.Array:
+    """Flash-algorithm attention in pure XLA: lax.scan over KV blocks with a
+    running (max, denom, accumulator) — the lowering-compatible analogue of
+    the Pallas kernel.  Peak score memory drops from O(S·T) to O(S·block_kv)
+    per head; numerically identical to :func:`attention_ref` (fp32 softmax).
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    block_kv = min(block_kv, T)
+    assert T % block_kv == 0, "pad kv to a block multiple"
+    nblk = T // block_kv
+
+    qg = q.reshape(B, S, KV, G, D)
+    kb = jnp.moveaxis(k.reshape(B, nblk, block_kv, KV, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nblk, block_kv, KV, D), 1, 0)
+    rows = jnp.arange(S) + (T - S)  # causal row offset for short q
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, blk_i = inp
+        s = jnp.einsum(
+            "bskgd,btkd->bkgst", qg, kblk, preferred_element_type=jnp.float32
+        ) * scale                                           # (B,KV,G,S,bkv)
+        if causal:
+            cols = blk_i * block_kv + jnp.arange(block_kv)
+            mask = cols[None, :] <= rows[:, None]           # (S, bkv)
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isneginf(s), 0.0, p)
+        alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l = alpha * l + jnp.sum(p, axis=-1)
+        upd = jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(v.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        acc = alpha[..., None] * acc + upd
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nblk))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,KV,G,S,D)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------ newton-schulz
+
+
+def ns_iteration_ref(x: jax.Array, a: float, b: float, c: float) -> jax.Array:
+    """One quintic NS iteration: a X + (b XXᵀ + c (XXᵀ)²) X, fp32."""
+    x = x.astype(jnp.float32)
+    xxt = x @ x.T
+    return a * x + (b * xxt + c * (xxt @ xxt)) @ x
+
+
+def gram_ref(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    return x @ x.T
+
+
+def poly_matmul_axpy_ref(a2: jax.Array, x: jax.Array, a: float) -> jax.Array:
+    """a X + A2 @ X (the second half of an NS iteration)."""
+    return a * x.astype(jnp.float32) + a2.astype(jnp.float32) @ x.astype(jnp.float32)
+
+
+# ------------------------------------------------------------ low-rank update
+
+
+def lowrank_update_ref(
+    p: jax.Array, g: jax.Array, r_state: jax.Array, beta: float, coeff: float
+) -> jax.Array:
+    """Fused GUM/GaLore momentum update: R' = beta R + coeff · Pᵀ G."""
+    return beta * r_state.astype(jnp.float32) + coeff * (
+        p.astype(jnp.float32).T @ g.astype(jnp.float32)
+    )
+
+
+# ------------------------------------------------------------ Mamba-2 SSD
+
+
+def ssd_ref(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)   (post-softplus)
+    a: jax.Array,   # (H,)        negative (A = -exp(a_log))
+    b: jax.Array,   # (B, S, N)
+    c: jax.Array,   # (B, S, N)
+    d: jax.Array,   # (H,)        skip
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence (the slow exact oracle).
+
+    state S_t = exp(a·dt_t) S_{t-1} + dt_t · b_t ⊗ x_t        (N, P) per head
+    y_t     = c_tᵀ S_t + d · x_t
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(a[None, :] * dtt)  # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bt, dtt, xt)
+        state = decay[..., None, None] * state + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + d[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked_ref(x, dt, a, b, c, d, chunk: int) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD (state-space duality form) — the algorithm the Pallas
+    kernel implements; mathematically equal to :func:`ssd_ref`.
+
+    Per chunk (length c): with per-step log-decay g_i = a·dt_i and cumulative
+    G_i = sum_{j<=i} g_j,
+      intra:  Y = ((C Bᵀ) ⊙ L) (dt ⊙ X),  L_ij = exp(G_i - G_j) for i>=j
+      inter:  Y += (C ⊙ exp(G)) S_prev
+      state:  S = exp(G_c) S_prev + (B ⊙ dt ⊙ exp(G_c - G))ᵀ X
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # zero-pad: dt=0 makes padded steps exact identity updates
+        # (decay exp(0)=1, zero state increment), so the final state and the
+        # unpadded outputs are untouched.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nch = S_pad // chunk
+
+    x32 = x.astype(jnp.float32).reshape(B, nch, chunk, H, P)
+    dt32 = dt.astype(jnp.float32).reshape(B, nch, chunk, H)
+    b32 = b.astype(jnp.float32).reshape(B, nch, chunk, N)
+    c32 = c.astype(jnp.float32).reshape(B, nch, chunk, N)
+
+    g = a[None, None, None, :] * dt32                    # (B, nch, c, H)
+    G = jnp.cumsum(g, axis=2)                            # inclusive cumsum
+
+    def chunk_step(state, inp):
+        xc, dtc, bc, cc, gc, Gc = inp
+        # L (lower-tri decay): exp(G_i - G_j) for i >= j else 0
+        diff = Gc[:, :, None, :] - Gc[:, None, :, :]      # (B, c, c, H)
+        ii = jnp.arange(chunk)
+        tri = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        # mask BEFORE exp: upper-tri diff > 0 would overflow and poison grads
+        L = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)           # (B, c, c)
+        y = jnp.einsum("bij,bijh,bjh,bjhp->bihp", cb, L, dtc, xc)
+        # inter-chunk from carried state
+        y += jnp.einsum("bin,bih,bhnp->bihp", cc, jnp.exp(Gc), state)
+        # new carry
+        Gl = Gc[:, -1:, :]                                # (B, 1, H)
+        w = dtc * jnp.exp(Gl - Gc)                        # (B, c, H)
+        state = jnp.exp(Gl[:, 0, :, None, None]) * state + jnp.einsum(
+            "bjn,bjh,bjhp->bhnp", bc, w, xc
+        )
+        return state, y
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x32, dt32, b32, c32, g, G))
+    state, ys = jax.lax.scan(chunk_step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S_pad, H, P)[:, :S]
+    y = y + d[None, None, :, None] * x.astype(jnp.float32)[:, :S]
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_ref(state, x, dt, a, b, c, d):
+    """One decode step. state (B,H,N,P); x (B,H,P); dt (B,H); b/c (B,N)."""
+    decay = jnp.exp(a[None, :] * dt)
+    state = decay[..., None, None] * state + jnp.einsum("bn,bh,bhp->bhnp", b, dt, x)
+    y = jnp.einsum("bn,bhnp->bhp", c, state) + d[None, :, None] * x
+    return y, state

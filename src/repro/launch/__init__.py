@@ -1,0 +1,4 @@
+"""Launcher layer: production meshes, step builders, dry-run, roofline."""
+from .mesh import make_debug_mesh, make_production_mesh
+
+__all__ = ["make_debug_mesh", "make_production_mesh"]

@@ -1,0 +1,258 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a process entry point (``python -m repro.launch.dryrun``) —
+the first two lines below force 512 placeholder host devices BEFORE jax
+initializes, so ``make_production_mesh`` can build the production meshes.
+
+Per cell this script:
+  1. builds the model + GUM optimizer (the paper's technique, first-class),
+  2. lowers the appropriate step (train_step / prefill / serve_step) with
+     explicit in/out shardings on the requested mesh,
+  3. ``.compile()``s it (proving the distribution config is coherent),
+  4. records memory_analysis / cost_analysis / the 3 roofline terms parsed
+     from the post-SPMD HLO into a JSON next to EXPERIMENTS.md.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import all_cells, cell_supported, get_config, get_shape  # noqa: E402
+from repro.core import OptimizerConfig, build_optimizer  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import (  # noqa: E402
+    ICI_BW,
+    ICI_LINKS,
+    HBM_BW,
+    PEAK_FLOPS,
+    model_flops,
+    roofline_from_text,
+)
+from repro.launch.steps import (  # noqa: E402
+    batch_shardings,
+    batch_struct,
+    cache_shardings,
+    cache_struct,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+from repro.models import build_model  # noqa: E402
+from repro.sharding import named_sharding_tree, opt_state_sharding, use_mesh  # noqa: E402
+
+# Per-arch gradient-accumulation factors for train_4k so activations fit HBM
+# (chosen from memory_analysis iterations; see EXPERIMENTS.md §Dry-run).
+TRAIN_MICROBATCHES = {
+    "nemotron-4-340b": 8,
+    "llama4-maverick-400b-a17b": 4,
+    "dbrx-132b": 4,
+    "llama-3.2-vision-11b": 2,
+    "starcoder2-7b": 2,
+}
+
+
+def default_optimizer(arch: str) -> OptimizerConfig:
+    # GUM (the paper's method) with the TPU-native subspace projector.
+    return OptimizerConfig(
+        name="gum", lr=1e-3, rank=128, gamma=2, period=200,
+        projector="subspace", base="muon",
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
+             overrides: dict | None = None, microbatches: int | None = None,
+             lowrank_accum: bool = False):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = get_shape(shape_name)
+    ok, reason = cell_supported(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "optimizer": opt_name, "status": "skipped", "reason": reason,
+    }
+    if not ok:
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = build_model(cfg)
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    param_sh = named_sharding_tree(params_struct, mesh)
+
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            ocfg = default_optimizer(arch)
+            if opt_name != "gum":
+                ocfg = OptimizerConfig(name=opt_name, rank=128, gamma=2,
+                                       period=200, projector="subspace")
+            tools = None
+            if lowrank_accum:
+                from repro.core.gum import gum_accum_tools
+
+                tools = gum_accum_tools(
+                    ocfg.lr, rank=ocfg.rank, gamma=ocfg.gamma,
+                    period=ocfg.period, projector=ocfg.projector,
+                )
+                opt = tools.transform
+            else:
+                opt = build_optimizer(ocfg)
+            opt_struct = jax.eval_shape(opt.init, params_struct)
+            opt_sh = opt_state_sharding(opt_struct, mesh)
+            batch = batch_struct(cfg, shape)
+            batch_sh = batch_shardings(cfg, shape, mesh)
+            mb = microbatches or TRAIN_MICROBATCHES.get(arch, 1)
+            step = make_train_step(model, opt, grad_clip=1.0, microbatches=mb,
+                                   lowrank_accum=tools)
+            jit_step = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jit_step.lower(params_struct, opt_struct, batch)
+            result["microbatches"] = mb
+        elif shape.kind == "prefill":
+            batch = batch_struct(cfg, shape)
+            batch_sh = batch_shardings(cfg, shape, mesh)
+            step = make_prefill_step(model)
+            jit_step = jax.jit(step, in_shardings=(param_sh, batch_sh))
+            lowered = jit_step.lower(params_struct, batch)
+        else:  # decode
+            cache = cache_struct(cfg, shape)
+            cache_sh = cache_shardings(cache, cfg, mesh)
+            tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tok_sh = batch_shardings(cfg, shape, mesh)["tokens"]
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            step = make_serve_step(model)
+            jit_step = jax.jit(
+                step,
+                in_shardings=(param_sh, cache_sh, tok_sh, None),
+                out_shardings=None,
+                donate_argnums=(1,),
+            )
+            lowered = jit_step.lower(params_struct, cache, tokens, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_info = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_info[attr] = int(v)
+        cost = compiled.cost_analysis() or {}
+
+        mf = model_flops(cfg, shape) / chips
+        report = roofline_from_text(compiled.as_text(), model_flops_per_device=mf)
+
+    result.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=mem_info,
+        xla_cost={k: float(v) for k, v in cost.items()
+                  if k in ("flops", "bytes accessed", "transcendentals")},
+        roofline=report.to_dict(),
+        hw={"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+            "ici_bw": ICI_BW, "ici_links": ICI_LINKS},
+    )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--opt", default="gum")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true", help="run every assigned cell")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for result filenames")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--lowrank-accum", action="store_true",
+                    help="accumulate microbatch grads in projected space")
+    ap.add_argument(
+        "--set", action="append", default=[],
+        help="ModelConfig overrides, e.g. --set attn_impl=xla_chunked "
+             "--set logit_chunk=512 --set remat_policy=dots",
+    )
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        overrides[k] = v
+
+    if args.list:
+        for a, s in all_cells():
+            cfg, shape = get_config(a), get_shape(s)
+            ok, reason = cell_supported(cfg, shape)
+            print(f"{a:28s} {s:12s} {'RUN' if ok else 'SKIP: ' + reason}")
+        return
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch, shape in cells:
+        for multi_pod in meshes:
+            mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+            tag = f"{arch}__{shape}__{mesh_name}__{args.opt}"
+            if args.tag:
+                tag += f"__{args.tag}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[cached] {tag}")
+                continue
+            print(f"[run] {tag}", flush=True)
+            try:
+                res = run_cell(arch, shape, multi_pod, args.opt,
+                               overrides=overrides or None,
+                               microbatches=args.microbatches or None,
+                               lowrank_accum=args.lowrank_accum)
+                res["overrides"] = overrides
+                res["tag"] = args.tag
+            except Exception as e:  # record failures — they are bugs to fix
+                res = {
+                    "arch": arch, "shape": shape, "mesh": mesh_name,
+                    "optimizer": args.opt, "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-4000:],
+                }
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2)
+            print(f"  -> {res['status']}"
+                  + (f" ({res.get('error','')[:200]})" if res["status"] == "error" else "")
+                  + (f" compile={res.get('compile_s')}s" if res["status"] == "ok" else ""),
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

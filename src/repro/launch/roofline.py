@@ -1,0 +1,424 @@
+"""Roofline analysis from compiled (post-SPMD, post-fusion) HLO text.
+
+Why not just ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts a
+while-loop body ONCE, but our models scan over layers, so a 96-layer model
+would be under-counted 96x.  This analyzer parses the optimized HLO, builds
+the computation call graph, extracts while-loop trip counts from their
+condition computations, and accumulates
+
+  * FLOPs            — exact for dot ops (2 · prod(out) · prod(contracted)),
+                       1 flop/elt for elementwise & reduces (negligible tail)
+  * HBM bytes        — per top-level (non-fused-interior) instruction:
+                       output + operand buffer bytes
+  * collective bytes — operand bytes of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute
+
+all multiplied by the instruction's execution multiplicity.  Values are
+*per-device* (the HLO is the per-device SPMD program).
+
+Roofline terms (TPU v5e):
+  compute    = flops / PEAK_FLOPS
+  memory     = hbm_bytes / HBM_BW
+  collective = coll_bytes / (ICI_LINKS · ICI_BW)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+ICI_LINKS = 4              # v5e: 4 ICI links per chip (2D torus x2 dirs)
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0, "tuple": 0,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|condition|body|calls)=\s*%?([\w.\-]+)"
+)
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPCODE_RE = re.compile(r"^(?:\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([\w\-]+)\(")
+
+
+def shape_bytes(text: str) -> float:
+    """Sum of bytes of every dtype[shape] token in ``text``."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def first_shape(text: str) -> tuple[Optional[str], tuple[int, ...]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, ()
+    dt, dims = m.groups()
+    return dt, tuple(int(d) for d in dims.split(",") if d)
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    defline: str          # full text after '='
+    out_text: str         # the output shape portion
+    operands_text: str    # inside the parens
+    called: list[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: list[Instruction]
+    shapes: dict = dataclasses.field(default_factory=dict)  # %name -> out_text
+
+
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def operand_bytes(inst: Instruction, comp: "Computation") -> float:
+    total = 0.0
+    for name in _OPERAND_NAME_RE.findall(inst.operands_text):
+        total += shape_bytes(comp.shapes.get(name, ""))
+    # inline-typed operands (older dialect) are covered too:
+    if not _OPERAND_NAME_RE.search(inst.operands_text):
+        total += shape_bytes(inst.operands_text)
+    return total
+
+
+def _split_def(rhs: str) -> tuple[str, str, str]:
+    """rhs like 'bf16[8,16]{1,0} dot(f32[..] %a, ...), attrs' ->
+    (out_text, opcode, operands_text)."""
+    m = _OPCODE_RE.match(rhs)
+    if not m:
+        return rhs, "unknown", ""
+    opcode = m.group(1)
+    out_text = rhs[: m.start(1)]
+    # operands: balanced-paren scan from the opcode's '('
+    start = rhs.index("(", m.start(1))
+    depth, i = 0, start
+    while i < len(rhs):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    return out_text, opcode, rhs[start + 1 : i]
+
+
+_INSTR_START_RE = re.compile(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], Optional[str]]:
+    """Returns (computations, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.strip()
+        if not s or s.startswith(("//", "#", "HloModule")):
+            continue
+        # computation header: `[ENTRY] %name (args) -> shape {`
+        if s.endswith("{") and "->" in s and not _INSTR_START_RE.match(s):
+            hm = _HEADER_RE.match(s)
+            if hm:
+                cur = Computation(name=hm.group(2), instructions=[])
+                comps[cur.name] = cur
+                if hm.group(1):
+                    entry = cur.name
+                continue
+        if s.startswith("}"):
+            continue
+        m = _DEF_RE.match(s)
+        if m and cur is not None:
+            name, rhs = m.groups()
+            out_text, opcode, operands = _split_def(rhs)
+            called = _CALLED_RE.findall(rhs)
+            bm = _BRANCH_RE.search(rhs)
+            if bm:
+                called += [c.strip().lstrip("%") for c in bm.group(1).split(",")]
+            inst = Instruction(name, opcode, rhs, out_text, operands, called)
+            cur.instructions.append(inst)
+            cur.shapes[name] = out_text
+    return comps, entry
+
+
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+
+
+def _while_trip_count(inst: Instruction, comps: dict[str, Computation]) -> int:
+    """XLA annotates scans with backend_config known_trip_count; fall back to
+    the largest constant in the condition computation."""
+    m = _TRIP_RE.search(inst.defline)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=\s*%?([\w.\-]+)", inst.defline)
+    if not cm or cm.group(1) not in comps:
+        return 1
+    consts = [
+        int(x.group(1))
+        for ci in comps[cm.group(1)].instructions
+        for x in [re.search(r"constant\((\d+)\)", ci.defline)]
+        if x
+    ]
+    return max(consts) if consts else 1
+
+
+_DOT_DIM_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(inst: Instruction, comp: Computation) -> float:
+    """2 · prod(output dims) · prod(lhs contracting dims)."""
+    _, out_dims = first_shape(inst.out_text)
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    names = _OPERAND_NAME_RE.findall(inst.operands_text)
+    lhs_text = comp.shapes.get(names[0], "") if names else inst.operands_text
+    _, lhs_dims = first_shape(lhs_text)
+    m = _DOT_DIM_RE.search(inst.defline)
+    contract = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * n_out * contract
+
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "log", "rsqrt", "sqrt", "tanh", "negate", "abs", "power", "select", "compare",
+    "and", "or", "xor", "convert", "floor", "ceil", "sign", "cosine", "sine",
+    "logistic", "expm1", "log1p", "atan2", "remainder",
+}
+
+
+@dataclasses.dataclass
+class RooflineCounts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: dict = dataclasses.field(default_factory=dict)
+
+    def merge_scaled(self, other: "RooflineCounts", k: float):
+        self.flops += other.flops * k
+        self.hbm_bytes += other.hbm_bytes * k
+        self.collective_bytes += other.collective_bytes * k
+        for op, b in other.per_collective.items():
+            self.per_collective[op] = self.per_collective.get(op, 0.0) + b * k
+
+
+def analyze_hlo(text: str) -> RooflineCounts:
+    comps, entry = parse_hlo(text)
+    if not comps:
+        return RooflineCounts()
+
+    if entry is None:
+        # fallback: a computation nobody calls (prefer one named like 'main')
+        called_by = set()
+        for c in comps.values():
+            for inst in c.instructions:
+                for callee in inst.called:
+                    called_by.add(callee)
+        entries = [n for n in comps if n not in called_by]
+        for n in entries:
+            if "main" in n:
+                entry = n
+                break
+        entry = entry or (entries[0] if entries else next(iter(comps)))
+
+    # fusion-interior computations contribute FLOPs but not HBM bytes
+    fusion_bodies = set()
+    for c in comps.values():
+        for inst in c.instructions:
+            if inst.opcode == "fusion":
+                fusion_bodies.update(inst.called)
+
+    memo: dict[tuple[str, bool], RooflineCounts] = {}
+
+    def walk(name: str, inside_fusion: bool) -> RooflineCounts:
+        key = (name, inside_fusion)
+        if key in memo:
+            return memo[key]
+        rc = RooflineCounts()
+        comp = comps.get(name)
+        if comp is None:
+            memo[key] = rc
+            return rc
+        for inst in comp.instructions:
+            op = inst.opcode
+            # --- flops
+            if op == "dot":
+                rc.flops += _dot_flops(inst, comp)
+            elif op in _ELEMENTWISE:
+                _, dims = first_shape(inst.out_text)
+                n = 1
+                for d in dims:
+                    n *= d
+                rc.flops += n
+            elif op in ("reduce", "reduce-window"):
+                rc.flops += operand_bytes(inst, comp) / 4.0  # ~1 flop/elt
+
+            # --- hbm bytes: top-level materialized buffers only
+            if not inside_fusion and op not in (
+                "parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "while", "conditional",
+            ):
+                rc.hbm_bytes += shape_bytes(inst.out_text)
+                rc.hbm_bytes += operand_bytes(inst, comp)
+
+            # --- collectives
+            if op in COLLECTIVES:
+                b = operand_bytes(inst, comp)
+                rc.collective_bytes += b
+                rc.per_collective[op] = rc.per_collective.get(op, 0.0) + b
+
+            # --- recurse
+            if inst.called:
+                mult = 1.0
+                if op == "while":
+                    mult = float(_while_trip_count(inst, comps))
+                    body = re.search(r"body=\s*%?([\w.\-]+)", inst.defline)
+                    cond = re.search(r"condition=\s*%?([\w.\-]+)", inst.defline)
+                    if body:
+                        rc.merge_scaled(walk(body.group(1), inside_fusion), mult)
+                    if cond:
+                        rc.merge_scaled(walk(cond.group(1), inside_fusion), mult)
+                    continue
+                if op == "conditional":
+                    # execute ONE branch; take the max-cost branch (upper bound)
+                    branches = [walk(c, inside_fusion) for c in inst.called]
+                    if branches:
+                        best = max(branches, key=lambda r: r.flops + r.hbm_bytes)
+                        rc.merge_scaled(best, 1.0)
+                    continue
+                child_fusion = inside_fusion or op == "fusion"
+                for callee in inst.called:
+                    rc.merge_scaled(walk(callee, child_fusion), 1.0)
+        memo[key] = rc
+        return rc
+
+    return walk(entry, False)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    per_collective: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0
+    useful_flops_frac: float = 0.0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from_text(
+    hlo_text: str, *, model_flops_per_device: float = 0.0
+) -> RooflineReport:
+    rc = analyze_hlo(hlo_text)
+    compute_s = rc.flops / PEAK_FLOPS
+    memory_s = rc.hbm_bytes / HBM_BW
+    collective_s = rc.collective_bytes / (ICI_LINKS * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    frac = (model_flops_per_device / rc.flops) if rc.flops else 0.0
+    return RooflineReport(
+        flops=rc.flops,
+        hbm_bytes=rc.hbm_bytes,
+        collective_bytes=rc.collective_bytes,
+        per_collective=rc.per_collective,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops_per_device,
+        useful_flops_frac=frac,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) per config
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg, active_only: bool = False) -> float:
+    """Analytic parameter count from the config (matches init to ~1%)."""
+    d, L = cfg.d_model, cfg.n_layers
+    H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    n = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    gated = cfg.act in ("swiglu", "geglu")
+    mlp_mult = 3 if gated else 2
+
+    def attn_p():
+        return d * H * hd + 2 * d * KV * hd + H * hd * d
+
+    def mlp_p(ff):
+        return mlp_mult * d * ff
+
+    if cfg.family in ("dense", "audio", "vlm"):
+        per = attn_p() + mlp_p(cfg.d_ff)
+        n += L * per
+        if cfg.family == "vlm":
+            G = L // cfg.cross_attn_every
+            n += G * (attn_p() + mlp_p(cfg.d_ff))  # cross blocks
+    elif cfg.family == "moe":
+        E, k = cfg.n_experts, cfg.top_k
+        moe_layers = L // cfg.moe_every
+        dense_layers = L - moe_layers
+        n += L * attn_p() + dense_layers * mlp_p(cfg.d_ff)
+        expert = mlp_mult * d * (cfg.moe_dff or cfg.d_ff)
+        n_all = moe_layers * (E * expert + cfg.n_shared_experts * expert + d * E)
+        n_act = moe_layers * (k * expert + cfg.n_shared_experts * expert + d * E)
+        n += n_act if active_only else n_all
+    elif cfg.family in ("ssm", "hybrid"):
+        d_inner = cfg.ssm_expand * d
+        Hs = d_inner // cfg.ssm_headdim
+        in_dim = 2 * d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state + Hs
+        per = d * in_dim + d_inner * d
+        n += L * per
+        if cfg.family == "hybrid":
+            n += attn_p() + mlp_p(cfg.d_ff)  # one shared block
+    return float(n)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D for training; 2·N·D per generated batch-step for decode."""
+    n = count_params(cfg, active_only=(cfg.family == "moe"))
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,63 @@
+"""Training launcher: ``python -m repro.launch.train --arch llama-130m ...``
+
+Runs a real training loop on whatever devices exist (CPU here, TPU pod in
+production — the mesh flag switches pjit on).  For the production meshes use
+dryrun.py first to verify the cell compiles and fits.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import RunConfig, get_config, get_smoke
+from repro.core import OptimizerConfig
+from repro.data import DataConfig
+from repro.models import build_model
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--opt", default="gum")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--rank", type=int, default=128)
+    ap.add_argument("--gamma", type=int, default=2)
+    ap.add_argument("--period", type=int, default=200)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    opt_cfg = OptimizerConfig(
+        name=args.opt, lr=args.lr, rank=args.rank, gamma=args.gamma,
+        period=args.period,
+    )
+    run_cfg = RunConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir, resume=not args.no_resume,
+        ckpt_every=max(args.steps // 4, 1), log_every=10,
+    )
+    data_cfg = DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        num_hosts=jax.process_count(), host_id=jax.process_index(),
+    )
+    trainer = Trainer(model, opt_cfg, run_cfg, data_cfg,
+                      microbatches=args.microbatches)
+    result = trainer.train()
+    print(
+        f"done: step={result.final_step} "
+        f"first_loss={result.losses[0]:.4f} last_loss={result.losses[-1]:.4f} "
+        f"skipped={result.skipped_nonfinite} stragglers={len(result.straggler_steps)}"
+        + (f" resumed_from={result.resumed_from}" if result.resumed_from else "")
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Model zoo: composable transformer / SSM / hybrid / MoE definitions."""
+from .transformer import (
+    Model,
+    build_model,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+)
+
+__all__ = [
+    "Model", "build_model", "decode_step", "forward", "init_cache",
+    "init_params", "lm_loss",
+]

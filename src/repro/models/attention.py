@@ -1,0 +1,111 @@
+"""GQA self-attention, cross-attention, and the decode cache path."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.sharding import logical_axis_size, shard
+
+from .layers import apply_rope, trunc_normal
+
+
+def _shard_qkv(x: jax.Array, n_heads: int, mode: str = "auto") -> jax.Array:
+    """Tensor-parallel heads when they divide the model axis; otherwise fall
+    back to SEQUENCE parallelism (e.g. qwen1.5's 20 heads on a 16-way axis —
+    without this the attention activations replicate across the model axis,
+    a 16x memory/compute redundancy observed in the baseline dry-run).
+    ``mode="off"`` leaves the layout to GSPMD's propagation (measured better
+    on MoE archs whose profile is expert-dominated — EXPERIMENTS.md §Perf)."""
+    tp = logical_axis_size("tp")
+    if tp > 1 and n_heads % tp == 0 and mode != "on":
+        return shard(x, "fsdp", None, "tp", None)
+    if mode == "off":
+        return shard(x, "fsdp", None, None, None)
+    return shard(x, "fsdp", "tp", None, None)
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "wq": trunc_normal(ks[0], (d, H * hd), std),
+        "wk": trunc_normal(ks[1], (d, KV * hd), std),
+        "wv": trunc_normal(ks[2], (d, KV * hd), std),
+        "wo": trunc_normal(ks[3], (H * hd, d), 1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bias_q"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bias_k"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["bias_v"] = jnp.zeros((KV * hd,), jnp.float32)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, *, y: Optional[jax.Array] = None):
+    """Project q from x and k/v from y (cross) or x (self)."""
+    H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    src = x if y is None else y
+    q = x @ p["wq"].astype(x.dtype)
+    k = src @ p["wk"].astype(x.dtype)
+    v = src @ p["wv"].astype(x.dtype)
+    if "bias_q" in p:
+        q = q + p["bias_q"].astype(x.dtype)
+        k = k + p["bias_k"].astype(x.dtype)
+        v = v + p["bias_v"].astype(x.dtype)
+    q = q.reshape(x.shape[:-1] + (H, hd))
+    k = k.reshape(src.shape[:-1] + (KV, hd))
+    v = v.reshape(src.shape[:-1] + (KV, hd))
+    return q, k, v
+
+
+def self_attention(
+    p, x, cfg: ModelConfig, positions: jax.Array, causal: bool
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention; returns output and the fresh (k, v) cache."""
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    q = _shard_qkv(q, cfg.n_heads, cfg.seq_shard_attn)
+    kv_tp = "tp" if cfg.kv_heads % max(logical_axis_size("tp"), 1) == 0 else None
+    k = shard(k, "fsdp", None, kv_tp, None)
+    v = shard(v, "fsdp", None, kv_tp, None)
+    o = ops.attention(q, k, v, causal=causal, impl=cfg.attn_impl)
+    o = o.reshape(x.shape[:-1] + (cfg.n_heads * cfg.hd,))
+    return o @ p["wo"].astype(x.dtype), (k, v)
+
+
+def decode_self_attention(
+    p, x, cfg: ModelConfig, kcache, vcache, pos: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: x (B, 1, D); caches (B, Smax, KV, hd); pos scalar."""
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, pos[None, None], cfg)
+    k = apply_rope(k, pos[None, None], cfg)
+    kcache = jax.lax.dynamic_update_slice_in_dim(kcache, k.astype(kcache.dtype), pos, axis=1)
+    vcache = jax.lax.dynamic_update_slice_in_dim(vcache, v.astype(vcache.dtype), pos, axis=1)
+    o = ops.decode_attention(q, kcache, vcache, pos)
+    o = o.reshape(x.shape[:-1] + (cfg.n_heads * cfg.hd,))
+    return o @ p["wo"].astype(x.dtype), kcache, vcache
+
+
+def cross_attention(p, x, cfg: ModelConfig, xk, xv) -> jax.Array:
+    """Cross-attend x (B, S, D) over precomputed image/frame K/V
+    (B, T_img, KV, hd) — no RoPE on cross-attention (Llama-3.2-V style)."""
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(x.shape[:-1] + (H, hd))
+    o = ops.attention(q, xk.astype(x.dtype), xv.astype(x.dtype), causal=False, impl=cfg.attn_impl)
+    o = o.reshape(x.shape[:-1] + (H * hd,))
+    return o @ p["wo"].astype(x.dtype)
+
+
+def encode_cross_kv(p, img: jax.Array, cfg: ModelConfig):
+    """K/V projections of the (precomputed) image embeddings."""
+    KV, hd = cfg.kv_heads, cfg.hd
+    k = (img @ p["wk"].astype(img.dtype)).reshape(img.shape[:-1] + (KV, hd))
+    v = (img @ p["wv"].astype(img.dtype)).reshape(img.shape[:-1] + (KV, hd))
+    return k, v

@@ -1,0 +1,137 @@
+"""Primitive layers: norms, rotary embeddings, MLP variants, initializers.
+
+Pure-functional: ``init_*`` builds param dicts, apply functions take them.
+All matmul params are 2-D (so the low-rank optimizers treat each as a block);
+stacked-layer leading dims are added by the scan machinery in transformer.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def trunc_normal(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+
+
+def init_norm(cfg: ModelConfig, d: int):
+    p = {"norm_scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["norm_bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        out = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["norm_scale"] + p["norm_bias"]
+    else:
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        out = x32 * jax.lax.rsqrt(ms + eps) * p["norm_scale"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- rope
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for ``dim`` rotary dims at integer ``positions``."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Rotary embedding on (..., S, H, hd). ``rope_fraction < 1`` rotates only
+    the leading fraction of head dims (ChatGLM's 2-D RoPE applies rotary to
+    half the dims and leaves the rest as-is)."""
+    if cfg.rope == "none":
+        return x
+    hd = x.shape[-1]
+    rot = int(hd * (0.5 if cfg.rope == "rope2d" else cfg.rope_fraction))
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    cos, sin = rope_angles(positions, rot, cfg.rope_theta)  # (..., S, rot/2)
+    cos = cos[..., :, None, :]  # broadcast over heads
+    sin = sin[..., :, None, :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- mlp
+
+
+def init_mlp(key, cfg: ModelConfig, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = 1.0 / math.sqrt(d)
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {"w_in": trunc_normal(k1, (d, d_ff), std)}
+    if gated:
+        p["w_gate"] = trunc_normal(k3, (d, d_ff), std)
+    p["w_out"] = trunc_normal(k2, (d_ff, d), 1.0 / math.sqrt(d_ff))
+    if cfg.mlp_bias:
+        p["bias_in"] = jnp.zeros((d_ff,), jnp.float32)
+        p["bias_out"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def mlp_act(h: jax.Array, g: Optional[jax.Array], act: str) -> jax.Array:
+    if act == "swiglu":
+        return jax.nn.silu(g) * h
+    if act == "geglu":
+        return jax.nn.gelu(g) * h
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    if act == "relu2":  # squared ReLU (Primer / Nemotron-4)
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(f"unknown act {act}")
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    h = x @ p["w_in"].astype(x.dtype)
+    if "bias_in" in p:
+        h = h + p["bias_in"].astype(x.dtype)
+    g = x @ p["w_gate"].astype(x.dtype) if "w_gate" in p else None
+    h = mlp_act(h, g, cfg.act)
+    out = h @ p["w_out"].astype(x.dtype)
+    if "bias_out" in p:
+        out = out + p["bias_out"].astype(x.dtype)
+    return out
+
+
+# --------------------------------------------------------------------- embed
+
+
+def init_embed(key, cfg: ModelConfig):
+    p = {"embed": trunc_normal(key, (cfg.vocab, cfg.d_model), 0.02)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = trunc_normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab), 0.02
+        )
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ModelConfig, dtype) -> jax.Array:
+    return p["embed"].astype(dtype)[tokens]
+
+
+def unembed(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ p["embed"].astype(x.dtype).T
+    return x @ p["lm_head"].astype(x.dtype)

@@ -1,0 +1,126 @@
+"""Mamba-2 (SSD) block: in-proj -> causal depthwise conv -> SSD -> gated norm
+-> out-proj.  Sequence mixing runs through the SSD kernel (chunked scan)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.sharding import shard
+
+from .layers import trunc_normal
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * N
+    return d_inner, H, N, conv_dim
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, H, N, conv_dim = dims(cfg)
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    in_dim = 2 * d_inner + 2 * cfg.ssm_ngroups * N + H
+    p = {
+        "ssm_in": trunc_normal(ks[0], (d, in_dim), std),
+        "conv_w": trunc_normal(ks[1], (cfg.ssm_conv, conv_dim), 0.1),
+        "conv_bias": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "skip_d": jnp.ones((H,), jnp.float32),
+        "gnorm_scale": jnp.ones((d_inner,), jnp.float32),
+        "ssm_out": trunc_normal(ks[2], (d_inner, d), 1.0 / math.sqrt(d_inner)),
+    }
+    return p
+
+
+def _split_in(h, cfg: ModelConfig):
+    d_inner, H, N, _ = dims(cfg)
+    gN = cfg.ssm_ngroups * N
+    z, xbc, dt = jnp.split(h, [d_inner, 2 * d_inner + 2 * gN], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with taps (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu(out + b[None, None, :].astype(out.dtype))
+
+
+def apply_mamba_block(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence forward: x (B, S, D) -> (B, S, D)."""
+    B, S, _ = x.shape
+    d_inner, H, N, conv_dim = dims(cfg)
+    P = cfg.ssm_headdim
+
+    h = x @ p["ssm_in"].astype(x.dtype)
+    z, xbc, dt = _split_in(h, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_bias"])
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + cfg.ssm_ngroups * N], axis=-1)
+
+    xs = shard(xs.reshape(B, S, H, P), "fsdp", None, "tp", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+
+    # ngroups == 1: B/C shared across heads
+    y, _ = ops.ssd(
+        xs, dt, a, bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+        p["skip_d"], chunk=cfg.ssm_chunk,
+        impl="xla" if cfg.attn_impl == "xla" else cfg.attn_impl,
+    )
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+
+    # gated RMSNorm (Mamba-2's norm-before-out-proj)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6) * p["gnorm_scale"]).astype(x.dtype)
+    return y @ p["ssm_out"].astype(x.dtype)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, H, N, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, N, cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def decode_mamba_block(p, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One-token decode: x (B, 1, D); returns (out (B, 1, D), new cache)."""
+    B = x.shape[0]
+    d_inner, H, N, conv_dim = dims(cfg)
+    P = cfg.ssm_headdim
+
+    h = x[:, 0, :] @ p["ssm_in"].astype(x.dtype)   # (B, in_dim)
+    z, xbc, dt = _split_in(h, cfg)
+
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B, W, C)
+    conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"])
+    xbc = jax.nn.silu(conv + p["conv_bias"]).astype(x.dtype)
+    new_conv = window[:, 1:, :]
+
+    xs, bvec, cvec = jnp.split(xbc, [d_inner, d_inner + cfg.ssm_ngroups * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    a = -jnp.exp(p["a_log"])
+    y, new_ssm = ops.ssd_decode_step(
+        cache["ssm"], xs.reshape(B, H, P).astype(jnp.float32), dt, a,
+        bvec.astype(jnp.float32), cvec.astype(jnp.float32), p["skip_d"],
+    )
+    y = y.reshape(B, d_inner).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6) * p["gnorm_scale"]).astype(x.dtype)
+    out = (y @ p["ssm_out"].astype(x.dtype))[:, None, :]
+    return out, {"conv": new_conv, "ssm": new_ssm}

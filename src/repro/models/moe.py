@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN with capacity-based token-choice dispatch.
+
+GShard/MaxText-style: top-k routing, per-expert capacity C, token gather ->
+stacked expert GEMMs -> weighted scatter-add.  Everything is dense einsum /
+top_k / gather, so GSPMD shards it cleanly: experts over the "ep" (model)
+axis, tokens over "fsdp" — the token exchange lowers to all-to-all-like
+collectives in the partitioned HLO.  Over-capacity tokens are dropped
+(standard), and the router returns the Switch/GShard load-balancing aux loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import shard
+
+from .layers import mlp_act, trunc_normal
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_dff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {
+        "router": trunc_normal(ks[0], (d, E), std),
+        "experts_w_in": trunc_normal(ks[1], (E, d, f), std),
+        "experts_w_out": trunc_normal(ks[2], (E, f, d), 1.0 / math.sqrt(f)),
+    }
+    if gated:
+        p["experts_w_gate"] = trunc_normal(ks[3], (E, d, f), std)
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_w_in"] = trunc_normal(ks[4], (d, fs), std)
+        if gated:
+            p["shared_w_gate"] = trunc_normal(jax.random.fold_in(ks[4], 1), (d, fs), std)
+        p["shared_w_out"] = trunc_normal(
+            jax.random.fold_in(ks[4], 2), (fs, d), 1.0 / math.sqrt(fs)
+        )
+    return p
+
+
+def apply_moe(p, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Dispatch is GROUPED (GShard-style): tokens are split into ``n_groups``
+    (aligned with the data shards) and each group routes its own tokens under
+    a per-group capacity.  The gather then moves (G, E, C_g, D) between the
+    group (fsdp) and expert (ep/model) shardings — an all-to-all-shaped
+    exchange — instead of replicating the full token tensor to every expert
+    rank (the collective-term bottleneck in the baseline llama4 dry-run).
+    ``cfg.moe_groups == 0`` keeps a single global group (measured BETTER on
+    this partitioner: grouping inflated the backward scatter all-reduce —
+    see EXPERIMENTS.md §Perf j1, a refuted hypothesis); set it to the data-
+    shard count to get the GShard-style all-to-all exchange.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = max(cfg.moe_groups, 1)
+    while T % G or G < 1:
+        G -= 1
+    Tg = T // G
+    xt = x.reshape(G, Tg, D)
+    xt = shard(xt, "fsdp", None, None)
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                              # (G, Tg, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # Switch-style load-balance aux: E * sum_e fraction_e * prob_e
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)               # (G, Tg, k, E)
+    frac = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))             # (E,)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    combine = jnp.sum(topw[..., None] * onehot, axis=2)               # (G, Tg, E)
+    cap = max(1, min(Tg, int(cfg.capacity_factor * Tg * k / E)))
+    score = jnp.where(combine > 0, combine, -1.0)
+    g_score, g_idx = jax.lax.top_k(jnp.swapaxes(score, 1, 2), cap)    # (G, E, C)
+    g_w = jnp.where(g_score > 0, g_score, 0.0)                        # drop invalid
+
+    if G == 1:
+        # flat gather/scatter (measured cheaper than the batched
+        # take_along_axis form under GSPMD — §Perf j7 bisect)
+        xt2 = xt.reshape(T, D)
+        xg = jnp.take(xt2, g_idx[0].reshape(-1), axis=0).reshape(1, E, cap, D)
+    else:
+        xg = jnp.take_along_axis(xt[:, None], g_idx[..., None], axis=2)
+    xg = shard(xg, "fsdp", "ep", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xg, p["experts_w_in"].astype(xg.dtype))
+    g = (
+        jnp.einsum("gecd,edf->gecf", xg, p["experts_w_gate"].astype(xg.dtype))
+        if "experts_w_gate" in p
+        else None
+    )
+    h = mlp_act(h, g, cfg.act)
+    y = jnp.einsum("gecf,efd->gecd", h, p["experts_w_out"].astype(xg.dtype))
+    y = y * g_w[..., None].astype(y.dtype)
+    y = shard(y, "fsdp", "ep", None, None)
+
+    if G == 1:
+        out = jnp.zeros((T, D), y.dtype).at[g_idx[0].reshape(-1)].add(
+            y.reshape(E * cap, D)
+        )
+        out = shard(out, "fsdp", None)
+    else:
+        out = jnp.zeros((G, Tg, D), y.dtype)
+        out = out.at[jnp.arange(G)[:, None, None], g_idx, :].add(y)
+        out = shard(out, "fsdp", None, None)
+        out = out.reshape(T, D)
+    xt = xt.reshape(T, D)
+
+    if "shared_w_in" in p:
+        hs = xt @ p["shared_w_in"].astype(xt.dtype)
+        gs = xt @ p["shared_w_gate"].astype(xt.dtype) if "shared_w_gate" in p else None
+        out = out + mlp_act(hs, gs, cfg.act) @ p["shared_w_out"].astype(xt.dtype)
+
+    return out.reshape(B, S, D), aux

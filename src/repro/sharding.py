@@ -1,0 +1,187 @@
+"""Logical sharding rules shared by models and the launcher.
+
+Models annotate activations with *logical* axis names; the launcher resolves
+them against whichever mesh is active.  Logical axes:
+
+  "fsdp"  -> ("pod", "data") on the multi-pod mesh, ("data",) on single-pod
+  "tp"    -> ("model",)
+  "ep"    -> ("model",)   (expert parallelism reuses the model axis)
+  None    -> replicated
+
+Param rules (DESIGN.md §5) are path-based so any pytree layout works.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Activate a mesh for logical-axis resolution (and pjit contexts)."""
+    prev = _mesh()
+    _state.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _state.mesh = prev
+
+
+def resolve_axis(logical: Optional[str], mesh: Mesh) -> Any:
+    if logical is None:
+        return None
+    names = mesh.axis_names
+    if logical == "fsdp":
+        axes = tuple(a for a in ("pod", "data") if a in names)
+        return axes if len(axes) > 1 else (axes[0] if axes else None)
+    if logical in ("tp", "ep"):
+        return "model" if "model" in names else None
+    if logical in names:
+        return logical
+    return None
+
+
+def resolve_spec(logical_spec: Sequence[Optional[str]], mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or _mesh()
+    if mesh is None:
+        return P()
+    return P(*(resolve_axis(ax, mesh) for ax in logical_spec))
+
+
+def logical_axis_size(logical: str) -> int:
+    """Size of a logical axis on the active mesh (1 if no mesh)."""
+    mesh = _mesh()
+    if mesh is None:
+        return 1
+    return _axis_size(resolve_axis(logical, mesh), mesh)
+
+
+def _axis_size(ax: Any, mesh: Mesh) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def validate_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop axes whose dim isn't divisible by the shard count (e.g. batch=1
+    in long_500k, vocab=504 on a 16-way model axis)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        out.append(ax if ax is not None and dim % _axis_size(ax, mesh) == 0 else None)
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with a logical sharding; no-op without a mesh."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    spec = validate_spec(x.shape, resolve_spec(logical_axes, mesh), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules: ordered (regex on path, logical spec) pairs.
+# Specs are per-dimension logical names, right-aligned is NOT assumed — they
+# must match the rank (leading stacked-layer dims get None automatically).
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [
+    # embeddings / lm head: vocab tensor-parallel, d_model fsdp
+    (r"embed", ("tp", "fsdp")),
+    (r"lm_head", ("fsdp", "tp")),
+    # MoE experts (E, d_in, d_out): expert-parallel over model axis, fsdp rows
+    (r"experts?.*(w_in|w_gate)", ("ep", "fsdp", None)),
+    (r"experts?.*w_out", ("ep", None, "fsdp")),
+    (r"router", ("fsdp", None)),
+    # attention projections
+    (r"(wq|wk|wv|wqkv|q_proj|k_proj|v_proj|in_proj)", ("fsdp", "tp")),
+    (r"(wo|o_proj|out_proj)", ("tp", "fsdp")),
+    # mlp
+    (r"(w_in|w_gate|w_up|gate_proj|up_proj)", ("fsdp", "tp")),
+    (r"(w_out|w_down|down_proj)", ("tp", "fsdp")),
+    # mamba projections
+    (r"(ssm_in)", ("fsdp", "tp")),
+    (r"(ssm_out)", ("tp", "fsdp")),
+    (r"conv_w", (None, "fsdp")),
+    (r"pos_embed", ("fsdp", None)),
+    (r"frame_proj", ("fsdp", "tp")),
+    # everything 1-D (norms, biases, dt, A) replicated
+]
+
+
+def spec_for_param(path: str, p: Any) -> tuple[Optional[str], ...]:
+    ndim = p.ndim if hasattr(p, "ndim") else len(p.shape)
+    if ndim <= 1:
+        return (None,) * ndim
+    for pat, spec in PARAM_RULES:
+        if re.search(pat, path):
+            pad = ndim - len(spec)
+            if pad < 0:
+                # rule is for the trailing dims; keep the trailing ones
+                return spec[-ndim:]
+            return (None,) * pad + tuple(spec)
+    # default: fsdp on the penultimate dim
+    return (None,) * (ndim - 2) + ("fsdp", None)
+
+
+def param_specs(params: Any) -> Any:
+    """Pytree of logical specs matching ``params``."""
+    from repro.core.api import tree_paths  # local import to avoid cycles
+
+    paths = tree_paths(params)
+    return jax.tree_util.tree_map(
+        lambda path, p: spec_for_param(path, p), paths, params
+    )
+
+
+def named_sharding_tree(params: Any, mesh: Mesh) -> Any:
+    from repro.core.api import tree_paths  # local import to avoid cycles
+
+    paths = tree_paths(params)
+    return jax.tree_util.tree_map(
+        lambda path, p: NamedSharding(
+            mesh,
+            validate_spec(p.shape, resolve_spec(spec_for_param(path, p), mesh), mesh),
+        ),
+        paths,
+        params,
+    )
+
+
+def opt_state_sharding(opt_state: Any, mesh: Mesh) -> Any:
+    """Sharding for optimizer states.  State leaves live under the param path
+    they belong to (e.g. families/blocks/attn/wq/r_low), so the param rules
+    apply directly; full-shape moments inherit the param's exact spec, and
+    low-rank states keep whichever trailing axes still divide."""
+    from repro.core.api import tree_paths
+
+    paths = tree_paths(opt_state)
+
+    def leaf_sharding(path, x):
+        if not hasattr(x, "ndim") or x.ndim <= 1:
+            return NamedSharding(mesh, P())
+        spec = resolve_spec(spec_for_param(path, x), mesh)
+        return NamedSharding(mesh, validate_spec(x.shape, spec, mesh))
+
+    return jax.tree_util.tree_map(leaf_sharding, paths, opt_state)

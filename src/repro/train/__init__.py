@@ -1,0 +1,3 @@
+from .trainer import StepTimeMonitor, Trainer, TrainResult
+
+__all__ = ["StepTimeMonitor", "Trainer", "TrainResult"]

@@ -1,0 +1,153 @@
+"""Training loop with fault tolerance.
+
+Features (DESIGN.md §5):
+  * auto-resume: newest committed checkpoint + exact data-stream skip-ahead
+  * periodic checkpointing (params + optimizer state + step) via atomic commit
+  * NaN/Inf guard: non-finite losses skip the update (counted + logged)
+  * straggler/step-time monitor: per-step wall-time ring buffer, z-score
+    flagging — on a real fleet this triggers elastic resharding (restore the
+    same checkpoint on a different mesh; the checkpoint layer supports it)
+  * optional pjit over a mesh with the repo's sharding rules.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import RunConfig
+from repro.core import OptimizerConfig, build_optimizer
+from repro.data import DataConfig, build_stream
+from repro.launch.steps import make_train_step
+from repro.models.transformer import Model
+from repro.sharding import named_sharding_tree, opt_state_sharding, use_mesh
+
+
+class StepTimeMonitor:
+    """Flags straggling steps: wall time > mean + z·std over a window."""
+
+    def __init__(self, window: int = 50, z: float = 3.0, min_samples: int = 10):
+        self.times = collections.deque(maxlen=window)
+        self.z = z
+        self.min_samples = min_samples
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= self.min_samples:
+            mu = statistics.fmean(self.times)
+            sd = statistics.pstdev(self.times) or 1e-9
+            if dt > mu + self.z * sd:
+                is_straggler = True
+                self.flagged.append((step, dt))
+        self.times.append(dt)
+        return is_straggler
+
+
+@dataclasses.dataclass
+class TrainResult:
+    final_step: int
+    losses: list[float]
+    skipped_nonfinite: int
+    straggler_steps: list[tuple[int, float]]
+    resumed_from: Optional[int]
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        opt_cfg: OptimizerConfig,
+        run_cfg: RunConfig,
+        data_cfg: DataConfig,
+        mesh=None,
+        microbatches: int = 1,
+    ):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.run = run_cfg
+        self.data_cfg = data_cfg
+        self.mesh = mesh
+        self.optimizer = build_optimizer(opt_cfg)
+        self.ckpt = CheckpointManager(run_cfg.ckpt_dir, keep=run_cfg.keep_ckpts)
+        self.monitor = StepTimeMonitor()
+        self._step_fn = make_train_step(
+            model, self.optimizer, grad_clip=run_cfg.grad_clip,
+            microbatches=microbatches,
+        )
+
+    # ------------------------------------------------------------- setup
+
+    def init_state(self):
+        key = jax.random.PRNGKey(self.run.seed)
+        params = self.model.init(key)
+        opt_state = self.optimizer.init(params)
+        return params, opt_state
+
+    def _jit_step(self, params, opt_state):
+        if self.mesh is None:
+            return jax.jit(self._step_fn, donate_argnums=(0, 1))
+        psh = named_sharding_tree(params, self.mesh)
+        osh = opt_state_sharding(opt_state, self.mesh)
+        return jax.jit(
+            self._step_fn,
+            in_shardings=(psh, osh, None),
+            out_shardings=(psh, osh, None),
+            donate_argnums=(0, 1),
+        )
+
+    # ------------------------------------------------------------- loop
+
+    def train(self, steps: Optional[int] = None) -> TrainResult:
+        steps = steps or self.run.steps
+        params, opt_state = self.init_state()
+        stream = build_stream(self.data_cfg)
+
+        start_step, resumed_from = 0, None
+        if self.run.resume:
+            restored = self.ckpt.restore_latest((params, opt_state))
+            if restored is not None:
+                start_step, (params, opt_state), _ = restored
+                resumed_from = start_step
+                stream.resume(start_step)  # exact skip-ahead
+
+        step_jit = self._jit_step(params, opt_state)
+
+        losses: list[float] = []
+        skipped = 0
+        with use_mesh(self.mesh):
+            for step in range(start_step, steps):
+                t0 = time.time()
+                tokens = jnp.asarray(next(stream))
+                new_params, new_opt, metrics = step_jit(
+                    params, opt_state, {"tokens": tokens}
+                )
+                loss = float(metrics["loss"])
+                params, opt_state = new_params, new_opt
+                if not bool(metrics["update_applied"]):
+                    # the step itself zeroed the update (in-jit NaN guard)
+                    skipped += 1
+                else:
+                    losses.append(loss)
+                self.monitor.record(step, time.time() - t0)
+
+                if self.run.ckpt_every and (step + 1) % self.run.ckpt_every == 0:
+                    self.ckpt.save(step + 1, (params, opt_state))
+                if self.run.log_every and (step + 1) % self.run.log_every == 0:
+                    print(f"step {step + 1:6d} loss {loss:.4f}", flush=True)
+
+        self.ckpt.save(steps, (params, opt_state))
+        return TrainResult(
+            final_step=steps,
+            losses=losses,
+            skipped_nonfinite=skipped,
+            straggler_steps=self.monitor.flagged,
+            resumed_from=resumed_from,
+        )

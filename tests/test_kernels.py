@@ -1,0 +1,183 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes/dtypes with hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lowrank_update import lowrank_update
+from repro.kernels.newton_schulz import gram, newton_schulz_pallas, poly_matmul_axpy
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(0)
+SET = dict(deadline=None, max_examples=8)
+
+
+# ------------------------------------------------------------- flash attn
+
+
+@settings(**SET)
+@given(
+    b=st.sampled_from([1, 2]),
+    s_blocks=st.sampled_from([2, 4]),
+    h=st.sampled_from([2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_attention_matches_oracle(b, s_blocks, h, group, d, causal, dtype):
+    bq = 16
+    s = s_blocks * bq
+    kv = max(h // group, 1)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_kv=bq,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_short_query_offset():
+    """Chunked-prefill shape: q covers only the last rows of kv (causal)."""
+    q = jax.random.normal(KEY, (1, 32, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 64, 2, 16))
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_kv=16,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------- newton-schulz
+
+
+@settings(**SET)
+@given(
+    m=st.sampled_from([4, 8, 16]),
+    n_mult=st.sampled_from([1, 2, 4]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_ns_kernels_match_oracle(m, n_mult, dtype):
+    n = m * n_mult * 2
+    x = jax.random.normal(KEY, (m, n), jnp.float32).astype(dtype)
+    g_pal = gram(x, block_n=n // 2, interpret=True)
+    np.testing.assert_allclose(g_pal, ref.gram_ref(x), atol=1e-2, rtol=1e-2)
+    a2 = 0.5 * g_pal + 0.25 * (g_pal @ g_pal)
+    y_pal = poly_matmul_axpy(a2, x.astype(jnp.float32), 3.0, block_n=n // 2,
+                             interpret=True)
+    np.testing.assert_allclose(
+        y_pal, ref.poly_matmul_axpy_ref(a2, x, 3.0), atol=1e-2, rtol=1e-2
+    )
+
+
+def test_ns_full_iteration_matches_xla():
+    x = jax.random.normal(KEY, (8, 24))
+    out_pal = newton_schulz_pallas(x, interpret=True)
+    out_xla = ops.newton_schulz(x, impl="xla")
+    np.testing.assert_allclose(out_pal, out_xla, atol=1e-4, rtol=1e-4)
+
+
+def test_ns_ops_batched_and_transposed():
+    xb = jax.random.normal(KEY, (3, 24, 8))  # m > n: transposed path
+    np.testing.assert_allclose(
+        ops.newton_schulz(xb, impl="interpret"),
+        ops.newton_schulz(xb, impl="xla"),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+# ------------------------------------------------------------- lowrank update
+
+
+@settings(**SET)
+@given(
+    m=st.sampled_from([16, 32, 64]),
+    n=st.sampled_from([32, 64]),
+    r=st.sampled_from([2, 4, 8]),
+    beta=st.sampled_from([0.0, 0.9, 0.95]),
+    coeff=st.sampled_from([1.0, 2.0, 4.0 / 3]),
+)
+def test_lowrank_update_matches_oracle(m, n, r, beta, coeff):
+    ks = jax.random.split(KEY, 3)
+    p = jax.random.normal(ks[0], (m, r))
+    g = jax.random.normal(ks[1], (m, n))
+    rst = jax.random.normal(ks[2], (r, n))
+    out = lowrank_update(p, g, rst, beta, coeff, block_m=m // 2, block_n=n // 2,
+                         interpret=True)
+    want = ref.lowrank_update_ref(p, g, rst, beta, coeff)
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------- ssd scan
+
+
+@settings(**SET)
+@given(
+    b=st.sampled_from([1, 2]),
+    nch=st.sampled_from([2, 4]),
+    h=st.sampled_from([1, 3]),
+    p_dim=st.sampled_from([4, 8]),
+    n_state=st.sampled_from([8, 16]),
+)
+def test_ssd_kernel_matches_sequential_oracle(b, nch, h, p_dim, n_state):
+    chunk = 16
+    s = nch * chunk
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p_dim)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bmat = jax.random.normal(ks[3], (b, s, n_state)) * 0.3
+    cmat = jax.random.normal(ks[4], (b, s, n_state)) * 0.3
+    d = jnp.full((h,), 0.1)
+
+    y_seq, s_seq = ref.ssd_ref(x, dt, a, bmat, cmat, d)
+    y_pal, s_pal = ssd_scan(x, dt, a, bmat, cmat, chunk=chunk, interpret=True)
+    y_pal = y_pal + d[None, None, :, None] * x
+    np.testing.assert_allclose(y_pal, y_seq, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(s_pal, s_seq, atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_decode_consistent_with_scan():
+    """Running the scan then one decode step == scanning s+1 steps."""
+    b, s, h, p_dim, n_state = 1, 32, 2, 4, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s + 1, h, p_dim)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s + 1, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bmat = jax.random.normal(ks[3], (b, s + 1, n_state)) * 0.3
+    cmat = jax.random.normal(ks[4], (b, s + 1, n_state)) * 0.3
+    d = jnp.full((h,), 0.1)
+
+    y_all, s_all = ref.ssd_ref(x, dt, a, bmat, cmat, d)
+    _, s_prefix = ref.ssd_ref(
+        x[:, :s], dt[:, :s], a, bmat[:, :s], cmat[:, :s], d
+    )
+    y_step, s_step = ops.ssd_decode_step(
+        s_prefix, x[:, s], dt[:, s], a, bmat[:, s], cmat[:, s], d
+    )
+    np.testing.assert_allclose(y_step, y_all[:, s], atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(s_step, s_all, atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_chunked_ref_equals_sequential():
+    b, s, h, p_dim, n_state = 2, 64, 2, 8, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p_dim)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bmat = jax.random.normal(ks[3], (b, s, n_state)) * 0.3
+    cmat = jax.random.normal(ks[4], (b, s, n_state)) * 0.3
+    d = jnp.full((h,), 0.1)
+    y1, s1 = ref.ssd_ref(x, dt, a, bmat, cmat, d)
+    y2, s2 = ref.ssd_chunked_ref(x, dt, a, bmat, cmat, d, chunk=16)
+    np.testing.assert_allclose(y1, y2, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(s1, s2, atol=1e-3, rtol=1e-3)

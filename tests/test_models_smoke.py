@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests: reduced configs of all 10 assigned archs
+(+ paper LLaMA): one forward + one train step on CPU, asserting output
+shapes and no NaNs; decode-vs-forward consistency per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.core import OptimizerConfig, apply_updates, build_optimizer
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+ASSIGNED = [a for a in ARCHS if a not in ("llama-60m", "llama-130m", "llama-350m")]
+
+
+def make_inputs(cfg, B=2, S=32):
+    kw = {}
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    if cfg.family == "vlm":
+        kw["images"] = jax.random.normal(KEY, (B, cfg.n_image_tokens, cfg.d_model)) * 0.02
+    if cfg.frontend == "frames":
+        kw["frames"] = jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.02
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", ASSIGNED + ["llama-60m"])
+def test_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 32
+    tokens, kw = make_inputs(cfg, B, S)
+
+    logits, aux, _ = model.forward(
+        params, None if cfg.frontend == "frames" else tokens, **kw
+    )
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    # one GUM train step
+    opt = build_optimizer(OptimizerConfig(name="gum", lr=1e-3, rank=4,
+                                          gamma=1, period=3, projector="svd"))
+    st = opt.init(params)
+
+    def loss_fn(p):
+        lg, a, _ = model.forward(p, None if cfg.frontend == "frames" else tokens, **kw)
+        return model.loss(lg, tokens, a, shift=not cfg.encoder_only)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    upd, st = opt.update(grads, st, params)
+    new_params = apply_updates(params, upd)
+    for x in jax.tree_util.tree_leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(x)))
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED
+                                  if get_smoke(a).has_decode])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the full-sequence forward logits —
+    the strongest cache-correctness check, per family."""
+    cfg = get_smoke(arch)
+    if cfg.family == "moe":
+        # capacity drops differ between a 16-token prefill and a 2-token
+        # decode step (different populations compete); make capacity
+        # generous so the test isolates cache correctness from drop policy.
+        cfg = cfg.replace(capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 8
+    tokens, kw = make_inputs(cfg, B, S)
+
+    full_logits, _, _ = model.forward(params, tokens, **kw)
+
+    cache = model.init_cache(batch=B, max_seq=S, dtype=jnp.float32)
+    if cfg.family == "vlm":
+        # populate the image-KV cache as prefill would
+        from repro.models import attention as attn_mod
+        from repro.models.transformer import init_cache  # noqa: F401
+        img = kw["images"]
+        G = cfg.n_layers // cfg.cross_attn_every
+        xks, xvs = [], []
+        for gidx in range(G):
+            bp = jax.tree_util.tree_map(lambda x: x[gidx], params["blocks"]["cross"])
+            k, v = attn_mod.encode_cross_kv(bp["xattn"], img, cfg)
+            xks.append(k)
+            xvs.append(v)
+        cache["xk"] = jnp.stack(xks).astype(cache["xk"].dtype)
+        cache["xv"] = jnp.stack(xvs).astype(cache["xv"].dtype)
+
+    step = jax.jit(lambda p, c, t, pos: model.decode_step(p, cache=c, tokens=t, pos=pos))
+    dec_logits = []
+    for i in range(S):
+        lg, cache = step(params, cache, tokens[:, i : i + 1], jnp.int32(i))
+        dec_logits.append(lg[:, 0])
+    dec_logits = jnp.stack(dec_logits, axis=1)
+
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_moe_capacity_dispatch_matches_dense_oracle():
+    """Top-1 MoE with generous capacity == explicit per-token expert mlp."""
+    from repro.models import moe as moe_mod
+
+    cfg = get_smoke("llama4-maverick-400b-a17b").replace(
+        n_experts=4, top_k=1, capacity_factor=4.0, n_shared_experts=0
+    )
+    p = moe_mod.init_moe(jax.random.PRNGKey(3), cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model)) * 0.5
+    out, aux = moe_mod.apply_moe(p, x, cfg)
+    assert float(aux) >= 1.0 - 1e-5  # load-balance aux lower bound is 1
+
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    eidx = jnp.argmax(probs, -1)
+    from repro.models.layers import mlp_act
+    want = []
+    for t in range(xt.shape[0]):
+        e = int(eidx[t])
+        h = xt[t] @ p["experts_w_in"][e]
+        g = xt[t] @ p["experts_w_gate"][e] if "experts_w_gate" in p else None
+        h = mlp_act(h, g, cfg.act)
+        w = jnp.max(probs[t])  # renormalized top-1 weight == max prob / itself
+        want.append((h @ p["experts_w_out"][e]) * 1.0)
+    want = jnp.stack(want).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_param_count_analytic_close_to_actual():
+    from repro.launch.roofline import count_params
+
+    for arch in ["qwen1.5-4b", "dbrx-132b", "mamba2-370m"]:
+        cfg = get_smoke(arch)
+        model = build_model(cfg)
+        params = model.init(KEY)
+        actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        est = count_params(cfg)
+        assert abs(est - actual) / actual < 0.15, (arch, est, actual)

@@ -1,0 +1,129 @@
+"""Correctness of the §Perf optimization paths: chunked attention and
+sequence-chunked cross-entropy must be numerically identical to the plain
+implementations (these get flipped on for the hillclimbed cells)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.kernels import ref
+from repro.models import build_model
+from repro.models.transformer import chunked_lm_loss, forward, lm_loss
+
+KEY = jax.random.PRNGKey(0)
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    b=st.sampled_from([1, 2]),
+    s=st.sampled_from([32, 64]),
+    t_mult=st.sampled_from([1, 2]),
+    h=st.sampled_from([2, 4]),
+    kv=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+)
+def test_chunked_attention_matches_oracle(b, s, t_mult, h, kv, causal):
+    if kv > h:
+        kv = h
+    t = s * t_mult
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, 16))
+    k = jax.random.normal(ks[1], (b, t, kv, 16))
+    v = jax.random.normal(ks[2], (b, t, kv, 16))
+    out = ref.attention_chunked_ref(q, k, v, causal=causal, block_kv=16)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_chunked_attention_grads_finite():
+    q = jax.random.normal(KEY, (1, 32, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 32, 2, 8))
+
+    def f(q, k):
+        return jnp.sum(ref.attention_chunked_ref(q, k, k, causal=True, block_kv=8))
+
+    gq, gk = jax.grad(f, argnums=(0, 1))(q, k)
+    assert bool(jnp.all(jnp.isfinite(gq))) and bool(jnp.all(jnp.isfinite(gk)))
+    # and matches the oracle's grads
+    def f0(q, k):
+        return jnp.sum(ref.attention_ref(q, k, k, causal=True))
+    gq0, gk0 = jax.grad(f0, argnums=(0, 1))(q, k)
+    np.testing.assert_allclose(gq, gq0, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(gk, gk0, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("tie", [True, False])
+@pytest.mark.parametrize("chunk", [8, 16, 24])
+def test_chunked_lm_loss_matches_plain(tie, chunk):
+    cfg = get_smoke("llama-60m").replace(tie_embeddings=tie, logit_chunk=chunk)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 40), 0, cfg.vocab)
+
+    logits, aux, _ = forward(params, cfg, tokens)
+    want = lm_loss(logits, tokens, aux)
+    hidden, aux2, _ = forward(params, cfg, tokens, return_hidden=True)
+    got = chunked_lm_loss(params, cfg, hidden, tokens, aux2)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_xla_chunked_attention_via_model():
+    cfg = get_smoke("qwen1.5-4b").replace(attn_impl="xla_chunked")
+    cfg0 = get_smoke("qwen1.5-4b")
+    model, model0 = build_model(cfg), build_model(cfg0)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 64), 0, cfg.vocab)
+    l1, _, _ = model.forward(params, tokens)
+    l0, _, _ = model0.forward(params, tokens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0), atol=2e-4, rtol=2e-4)
+
+
+def test_lowrank_accum_update_equivalence():
+    """Beyond-paper low-rank gradient accumulation: feeding the optimizer the
+    compact-projected-then-reconstructed gradient produces the SAME update as
+    the raw gradient (Property I makes the roundtrip exact on both the
+    low-rank branch and the sampled full blocks)."""
+    from repro.core.gum import gum_accum_tools
+
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (4, 32), 0, cfg.vocab)
+
+    def gradf(p):
+        def loss_fn(p):
+            lg, aux, _ = forward(p, cfg, tokens)
+            return lm_loss(lg, tokens, aux)
+        return jax.grad(loss_fn)(p)
+
+    tools = gum_accum_tools(1e-2, rank=4, gamma=1, period=2, projector="svd")
+    st = tools.transform.init(params)
+    g = gradf(params)
+    st = tools.refresh(g, st, params)
+    u1, _ = tools.transform.update(g, st, params)
+    ghat = tools.reconstruct(tools.project(g, st, params), st, params)
+    u2, _ = tools.transform.update(ghat, st, params)
+    for a, b in zip(jax.tree_util.tree_leaves(u1), jax.tree_util.tree_leaves(u2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_lowrank_accum_trains():
+    """End-to-end: the accumulating train step descends like the plain one."""
+    from repro.core.gum import gum_accum_tools
+    from repro.launch.steps import make_train_step
+
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = {"tokens": jax.random.randint(KEY, (8, 64), 0, cfg.vocab)}
+    tools = gum_accum_tools(1e-2, rank=4, gamma=1, period=3, projector="svd")
+    step = jax.jit(make_train_step(model, tools.transform, grad_clip=1.0,
+                                   microbatches=4, lowrank_accum=tools))
+    st = tools.transform.init(params)
+    losses = []
+    for _ in range(8):
+        params, st, m = step(params, st, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses

@@ -1,0 +1,74 @@
+"""HLO roofline analyzer: trip-count handling, dot flops, collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (
+    analyze_hlo,
+    model_flops,
+    parse_hlo,
+    roofline_from_text,
+    shape_bytes,
+)
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[8,4]{1,0}") == 64
+    assert shape_bytes("f32[2,3] f32[10]") == 64
+    assert shape_bytes("(f32[4], s32[2])") == 24
+    assert shape_bytes("pred[]") == 1
+
+
+def test_scan_trip_count_flops():
+    def scanned(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jnp.ones((64, 128))
+    w = jnp.ones((16, 128, 128))
+    txt = jax.jit(scanned).lower(x, w).compile().as_text()
+    rc = analyze_hlo(txt)
+    analytic = 16 * 2 * 64 * 128 * 128
+    assert abs(rc.flops - analytic) / analytic < 0.01, rc.flops
+
+
+def test_unrolled_matches_xla_cost_analysis():
+    def f(x, w):
+        for i in range(4):
+            x = jnp.tanh(x @ w[i])
+        return x
+
+    x = jnp.ones((32, 64))
+    w = jnp.ones((4, 64, 64))
+    comp = jax.jit(f).lower(x, w).compile()
+    rc = analyze_hlo(comp.as_text())
+    xla = comp.cost_analysis()["flops"]
+    assert abs(rc.flops - xla) / xla < 0.05, (rc.flops, xla)
+
+
+def test_roofline_report_bottleneck():
+    rep = roofline_from_text("", model_flops_per_device=0)
+    assert rep.flops == 0
+    txt = """
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  ROOT %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    rep = roofline_from_text(txt)
+    assert rep.flops == 2 * 8 * 8 * 8
+    assert rep.bottleneck == "memory"  # tiny dot is bandwidth-bound
+
+
+def test_model_flops_dense_vs_moe():
+    from repro.configs import get_config, get_shape
+
+    dense = model_flops(get_config("qwen1.5-4b"), get_shape("train_4k"))
+    # ~6 * 4B * 1M tokens ~ 2.4e16 within 2x
+    assert 1e16 < dense < 6e16, dense
+    moe_active = model_flops(get_config("llama4-maverick-400b-a17b"), get_shape("train_4k"))
+    # active params (~17B) not total (400B): 6*17e9*1e6 ~ 1e17
+    assert 4e16 < moe_active < 3e17, moe_active

@@ -1,0 +1,152 @@
+"""Theory tests: Lemma 1/2 (unbiasedness), Property I (orthonormal
+projectors), Property II (projection/Newton-Schulz commutativity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    apply_updates,
+    make_projector,
+    msign_exact,
+    newton_schulz,
+    sgdm,
+    unbiased_lowrank,
+)
+from repro.core.lowrank_common import back_project, project
+
+KEY = jax.random.PRNGKey(0)
+PROJECTORS = ["svd", "subspace", "random", "grass"]
+
+
+# ---------------------------------------------------------------- Property I
+
+
+@pytest.mark.parametrize("kind", PROJECTORS)
+@pytest.mark.parametrize("shape,rank", [((8, 12), 3), ((16, 6), 4), ((32, 32), 8)])
+def test_property_i_orthonormal_columns(kind, shape, rank):
+    g = jax.random.normal(KEY, shape)
+    p = make_projector(kind, g, rank, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(p.T @ p, np.eye(rank), atol=1e-5)
+
+
+def test_svd_projector_captures_top_subspace():
+    # low-rank signal + tiny noise: svd and subspace projectors must capture it
+    u = jnp.linalg.qr(jax.random.normal(KEY, (32, 4)))[0]
+    v = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    g = u @ (jnp.diag(jnp.array([10.0, 8.0, 6.0, 4.0])) @ v[:4]) \
+        + 1e-3 * jax.random.normal(jax.random.PRNGKey(2), (32, 64))
+    for kind in ("svd", "subspace"):
+        p = make_projector(kind, g, 4, jax.random.PRNGKey(3))
+        # energy captured: ||PPᵀG|| / ||G|| ~ 1
+        cap = jnp.linalg.norm(p @ (p.T @ g)) / jnp.linalg.norm(g)
+        assert cap > 0.999, (kind, float(cap))
+
+
+# ---------------------------------------------------------------- Property II
+
+
+def test_property_ii_newton_schulz_commutes():
+    p = jnp.linalg.qr(jax.random.normal(KEY, (24, 6)))[0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 16))
+    left = newton_schulz(p @ x)
+    right = p @ newton_schulz(x)
+    np.testing.assert_allclose(left, right, atol=2e-4, rtol=2e-4)
+
+
+def test_property_ii_rank_preserved():
+    """NS is a matrix polynomial: zero singular values stay zero, so NS(P X)
+    lies entirely in span(P) (unlike SVD-based UVᵀ, which is arbitrary on the
+    null space — that's why Property II is stated for Newton–Schulz)."""
+    p = jnp.linalg.qr(jax.random.normal(KEY, (20, 5)))[0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 12))
+    out = newton_schulz(p @ x)
+    # component orthogonal to span(P) must vanish
+    resid = out - p @ (p.T @ out)
+    assert float(jnp.linalg.norm(resid)) < 1e-4 * float(jnp.linalg.norm(out))
+
+
+def test_newton_schulz_approximates_msign():
+    x = jax.random.normal(KEY, (12, 20))
+    ns = newton_schulz(x)
+    ex = msign_exact(x)
+    # quintic NS oscillates around 1 by design; direction must match closely
+    assert jnp.linalg.norm(ns - ex) / jnp.linalg.norm(ex) < 0.2
+    # singular values of the NS output near 1
+    s = jnp.linalg.svd(ns.astype(jnp.float32), compute_uv=False)
+    assert float(jnp.max(jnp.abs(s - 1.0))) < 0.35
+
+
+# ---------------------------------------------------------------- Lemma 2
+
+
+@pytest.mark.parametrize("q", [0.25, 0.5, 0.75])
+@pytest.mark.parametrize("comp", ["paper", "finetune"])
+def test_estimator_identity_exact(q, comp):
+    """E[G_hat] = G is a deterministic two-branch identity given P."""
+    g = jax.random.normal(KEY, (10, 14))
+    p = make_projector("svd", g + jax.random.normal(jax.random.PRNGKey(1), g.shape), 4,
+                       jax.random.PRNGKey(2))
+    pptg = p @ (p.T @ g)
+    if comp == "paper":
+        full = (g - pptg) / q
+        low = pptg / (1 - q)
+    else:
+        full = (g - (1 - q) * pptg) / q
+        low = pptg
+    expectation = q * full + (1 - q) * low
+    np.testing.assert_allclose(expectation, g, atol=1e-5)
+
+
+def test_lemma1_monte_carlo_unbiased():
+    """Through the actual optimizer (sgdm base, beta=0, period=1, lr=1):
+    the mean update over seeds approximates -G."""
+    g_fixed = jax.random.normal(KEY, (6, 9))
+    params = {"w": jnp.zeros((6, 9))}
+    total = np.zeros((6, 9))
+    n = 400
+    for seed in range(n):
+        opt = unbiased_lowrank(1.0, rank=2, q=0.5, period=1, projector="svd",
+                               base="sgdm", beta=0.0, seed=seed)
+        st = opt.init(params)
+        upd, _ = opt.update({"w": g_fixed}, st, params)
+        total += np.asarray(upd["w"])
+    mean_update = total / n
+    # -lr * G_hat averaged ~ -G; MC error ~ sigma/sqrt(n)
+    err = np.linalg.norm(mean_update + np.asarray(g_fixed)) / np.linalg.norm(g_fixed)
+    assert err < 0.15, err
+
+
+def test_unbiased_optimizer_descends_quadratic():
+    # Muon moves every singular direction at rate ~lr per step (msign has
+    # unit singular values), so give it enough steps to cover ||w0||.
+    opt = unbiased_lowrank(0.15, rank=2, q=0.5, period=5, base="muon")
+    params = {"w": jax.random.normal(KEY, (8, 10))}
+    st = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda p: 0.5 * jnp.sum(p["w"] ** 2))(p)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s
+
+    l0 = float(jnp.sum(params["w"] ** 2))
+    for _ in range(120):
+        params, st = step(params, st)
+    l1 = float(jnp.sum(params["w"] ** 2))
+    assert l1 < 0.2 * l0
+
+
+# ------------------------------------------------- project/back_project algebra
+
+
+def test_projection_roundtrip_left_right():
+    g = jax.random.normal(KEY, (1, 12, 8))  # right projection (m > n)
+    p = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (1, 8, 3)))[0]
+    r = project(p, g, "right")
+    assert r.shape == (1, 12, 3)
+    gg = back_project(p, r, "right")
+    assert gg.shape == g.shape
+    # idempotence of the projection operator
+    r2 = project(p, gg, "right")
+    np.testing.assert_allclose(r, r2, atol=1e-5)
