@@ -156,3 +156,10 @@ class OptimizerConfig:
     compensation: str = "paper"  # paper | finetune (App. C.1 variant)
     grad_clip: float = 0.0
     seed: int = 0
+    # Hot-loop implementation: auto | jnp | pallas | interpret — "auto" runs
+    # the fused Pallas kernels on TPU and the jnp reference elsewhere
+    # (see repro.kernels.dispatch).
+    kernel_impl: str = "auto"
+    # Muon's sqrt(max(1, m/n)) RMS-matching factor.  None = each optimizer's
+    # default (muon: on, matching Jordan et al.; gum: off, matching Alg. 2).
+    use_muon_scale: bool | None = None

@@ -1,4 +1,9 @@
-"""Optimizer factory: OptimizerConfig -> Transform."""
+"""Optimizer factory: OptimizerConfig -> Transform.
+
+``cfg.kernel_impl`` is forwarded to every optimizer with a low-rank /
+Newton–Schulz hot loop (gum, galore, galore_muon, golore, fira, muon);
+``cfg.use_muon_scale`` (None = per-optimizer default) to muon and gum.
+"""
 from __future__ import annotations
 
 from .adamw import adamw, sgdm
@@ -17,29 +22,37 @@ def build_optimizer(cfg: OptimizerConfig) -> Transform:
     if name == "sgdm":
         return sgdm(cfg.lr, beta=cfg.beta, weight_decay=cfg.weight_decay)
     if name == "muon":
-        return muon(cfg.lr, beta=cfg.beta, weight_decay=cfg.weight_decay, ns_steps=cfg.ns_steps)
+        kw = {} if cfg.use_muon_scale is None else {"use_muon_scale": cfg.use_muon_scale}
+        return muon(cfg.lr, beta=cfg.beta, weight_decay=cfg.weight_decay,
+                    ns_steps=cfg.ns_steps, kernel_impl=cfg.kernel_impl, **kw)
     if name == "galore":
         return galore(
             cfg.lr, rank=cfg.rank, period=cfg.period, projector=cfg.projector,
             base="adam", weight_decay=cfg.weight_decay, seed=cfg.seed,
+            kernel_impl=cfg.kernel_impl,
         )
     if name == "galore_muon":
         return galore(
             cfg.lr, rank=cfg.rank, period=cfg.period, projector=cfg.projector,
             base="muon", beta=cfg.beta, ns_steps=cfg.ns_steps,
             weight_decay=cfg.weight_decay, seed=cfg.seed,
+            kernel_impl=cfg.kernel_impl,
         )
     if name == "golore":
-        return golore(cfg.lr, rank=cfg.rank, period=cfg.period, base=cfg.base, seed=cfg.seed)
+        return golore(cfg.lr, rank=cfg.rank, period=cfg.period, base=cfg.base,
+                      seed=cfg.seed, kernel_impl=cfg.kernel_impl)
     if name == "gum":
+        kw = {} if cfg.use_muon_scale is None else {"use_muon_scale": cfg.use_muon_scale}
         return gum(
             cfg.lr, rank=cfg.rank, gamma=cfg.gamma, period=cfg.period,
             projector=cfg.projector, base=cfg.base, beta=cfg.beta,
             ns_steps=cfg.ns_steps, weight_decay=cfg.weight_decay,
             compensation=cfg.compensation, seed=cfg.seed,
+            kernel_impl=cfg.kernel_impl, **kw,
         )
     if name == "fira":
-        return fira(cfg.lr, rank=cfg.rank, period=cfg.period, seed=cfg.seed)
+        return fira(cfg.lr, rank=cfg.rank, period=cfg.period, seed=cfg.seed,
+                    kernel_impl=cfg.kernel_impl)
     if name == "lisa":
         return lisa(cfg.lr, gamma=cfg.gamma, period=cfg.period, seed=cfg.seed)
     raise ValueError(f"unknown optimizer: {cfg.name!r}")

@@ -5,6 +5,10 @@ projected subspace is added back, scaled by the ratio phi_t between the
 low-rank Adam update norm and the low-rank gradient norm, with Fira's
 norm-growth limiter on the residual term.  No unbiasedness guarantee (the
 paper's point of comparison).
+
+``kernel_impl`` routes the projection GEMM through the fused Pallas kernel
+(repro.kernels.dispatch); the Adam moments and residual stay in jnp since
+they consume the projected gradient elementwise.
 """
 from __future__ import annotations
 
@@ -21,8 +25,8 @@ from .lowrank_common import (
     default_lowrank_filter,
     family_shape,
     lowrank_state_shape,
-    project,
     proj_shape,
+    project_dispatched,
 )
 
 
@@ -49,6 +53,7 @@ def fira_matrices(
     scale: float = 0.25,
     limiter: float = 1.01,
     seed: int = 0,
+    kernel_impl: str = "auto",
 ) -> Transform:
     def init(params: PyTree) -> FiraState:
         def init_family(p_leaf):
@@ -80,7 +85,7 @@ def fira_matrices(
             None,
         )
 
-        r_g = project(p_proj, g, fs.side)
+        r_g = project_dispatched(p_proj, g, fs.side, kernel_impl)
         c = count.astype(jnp.float32)
         m1 = b1 * st.m1 + (1 - b1) * r_g
         m2 = b2 * st.m2 + (1 - b2) * jnp.square(r_g)

@@ -10,6 +10,11 @@ Any base optimizer runs *inside* the low-rank space:
 
 ``projector="random"`` gives GoLore.  Non-matrix leaves (embeddings, norms,
 biases) are routed to a full AdamW fallback, matching GaLore practice.
+
+``kernel_impl`` ("auto" | "jnp" | "pallas" | "interpret") routes the
+per-step hot loops (projected momentum update / projection GEMM /
+Newton–Schulz) through the fused Pallas TPU kernels via
+repro.kernels.dispatch; "auto" = Pallas on TPU, jnp reference elsewhere.
 """
 from __future__ import annotations
 
@@ -25,9 +30,10 @@ from .lowrank_common import (
     compute_projectors,
     default_lowrank_filter,
     family_shape,
+    lowrank_momentum_update,
     lowrank_state_shape,
-    project,
     proj_shape,
+    project_dispatched,
 )
 from .newton_schulz import newton_schulz
 
@@ -59,6 +65,7 @@ def galore_matrices(
     reset_on_update: bool = False,
     seed: int = 0,
     subspace_iters: int = 2,
+    kernel_impl: str = "auto",
 ) -> Transform:
     """GaLore over matrix leaves only (route others via :func:`galore`)."""
     if base not in ("adam", "muon", "sgdm"):
@@ -104,9 +111,10 @@ def galore_matrices(
 
         p_proj, m1, m2 = jax.lax.cond(refresh, do_refresh, keep, None)
 
-        r_g = project(p_proj, g, fs.side)  # low-rank gradient
-
         if base == "adam":
+            # Adam needs the projected gradient itself (second moment), so the
+            # kernel fuses only the projection GEMM (beta=0 path).
+            r_g = project_dispatched(p_proj, g, fs.side, kernel_impl)
             c = count.astype(jnp.float32)
             m1 = b1 * m1 + (1 - b1) * r_g
             m2 = b2 * m2 + (1 - b2) * jnp.square(r_g)
@@ -115,10 +123,12 @@ def galore_matrices(
             s = mhat / (jnp.sqrt(vhat) + eps)
             upd_lr = scale * s
         elif base == "muon":
-            m1 = beta * m1 + r_g
-            upd_lr = newton_schulz(m1, steps=ns_steps)
+            m1 = lowrank_momentum_update(p_proj, g, m1, beta, 1.0, fs.side,
+                                         kernel_impl)
+            upd_lr = newton_schulz(m1, steps=ns_steps, impl=kernel_impl)
         else:  # sgdm
-            m1 = beta * m1 + r_g
+            m1 = lowrank_momentum_update(p_proj, g, m1, beta, 1.0, fs.side,
+                                         kernel_impl)
             upd_lr = m1
 
         full = back_project(p_proj, upd_lr, fs.side)

@@ -30,6 +30,15 @@ Update rules (left projection, block l, coefficients per ``compensation``):
                             (App. C.1 — recovers full Muon at q=1)
 
 Both choices satisfy E[update] = Muon update with E[G_hat] = G.
+
+``kernel_impl`` ("auto" | "jnp" | "pallas" | "interpret") routes the two
+per-step hot loops — the projected momentum update R <- beta R + c PᵀG and
+the Newton–Schulz iteration — through the fused Pallas TPU kernels
+(repro.kernels.dispatch); "auto" uses them on TPU and the jnp reference
+elsewhere, so the default CPU trajectory is unchanged.  ``use_muon_scale``
+additionally applies Muon's sqrt(max(1, m/n)) RMS-matching factor to both
+branches' orthogonalized updates (off by default — the paper's Algorithm 2
+does not scale).
 """
 from __future__ import annotations
 
@@ -46,12 +55,13 @@ from .lowrank_common import (
     default_lowrank_filter,
     family_shape,
     gather_blocks,
+    lowrank_momentum_update,
     lowrank_state_shape,
     project,
     proj_shape,
     scatter_blocks,
 )
-from .newton_schulz import newton_schulz
+from .newton_schulz import muon_scale, newton_schulz
 
 
 class GUMFamilyState(NamedTuple):
@@ -80,12 +90,17 @@ def gum_matrices(
     seed: int = 0,
     subspace_iters: int = 2,
     external_refresh: bool = False,
+    kernel_impl: str = "auto",
+    use_muon_scale: bool = False,
 ) -> Transform:
     """GUM over matrix leaves (route 1-D/embedding leaves via :func:`gum`).
 
     ``external_refresh=True`` skips the in-update period refresh — used by
     the low-rank gradient-accumulation path, where :func:`gum_accum_tools`
-    refreshes against a raw microbatch gradient before projection."""
+    refreshes against a raw microbatch gradient before projection.
+
+    ``kernel_impl`` selects the hot-loop implementation (see module
+    docstring); ``use_muon_scale`` applies Muon's RMS-matching shape factor."""
     if base not in ("muon", "sgdm"):
         raise ValueError("GUM requires a Property-II base optimizer: muon | sgdm")
     if compensation not in ("paper", "finetune"):
@@ -166,9 +181,13 @@ def gum_matrices(
         # is overwritten by the scatter below and their r_low restarts at the
         # next period boundary, so advancing it is trajectory-neutral).
         if q < 1.0:
-            r_g = project(p_proj, g, fs.side)
-            r_low = beta * r_low + c_low * r_g
-            s_low = newton_schulz(r_low, steps=ns_steps) if use_ns else r_low
+            r_low = lowrank_momentum_update(
+                p_proj, g, r_low, beta, c_low, fs.side, kernel_impl
+            )
+            s_low = (
+                newton_schulz(r_low, steps=ns_steps, impl=kernel_impl)
+                if use_ns else r_low
+            )
             u = back_project(p_proj, s_low, fs.side)
         else:
             u = jnp.zeros_like(g)
@@ -181,9 +200,14 @@ def gum_matrices(
             pptg = back_project(p_s, project(p_s, g_s, fs.side), fs.side)
             resid = g_s - c_comp * pptg
             r_full = beta * r_full + c_full * resid
-            s_full = newton_schulz(r_full, steps=ns_steps) if use_ns else r_full
+            s_full = (
+                newton_schulz(r_full, steps=ns_steps, impl=kernel_impl)
+                if use_ns else r_full
+            )
             u = scatter_blocks(u, idx, s_full, fs)
 
+        if use_muon_scale:
+            u = muon_scale((fs.m, fs.n)) * u
         u = -step_lr * (u + weight_decay * p_leaf.astype(jnp.float32))
         return u, GUMFamilyState(p=p_proj, r_low=r_low, r_full=r_full, idx=idx)
 

@@ -11,6 +11,11 @@ as "[SPMD] Involuntary full rematerialization" on MoE cells).
 The projector ``P`` acts on the shorter matrix side per GaLore:
   left  (m <= n): state = Pᵀ G in (*lead, r, n);  back-projection  P @ S
   right (m >  n): state = G P in (*lead, m, r);   back-projection  S @ Pᵀ
+
+The per-step hot loop (momentum update / projection) is dispatched through
+:func:`lowrank_momentum_update` / :func:`project_dispatched`, whose
+``kernel_impl`` knob ("auto" | "jnp" | "pallas" | "interpret") selects the
+fused Pallas TPU kernels or the jnp reference (see repro.kernels.dispatch).
 """
 from __future__ import annotations
 
@@ -75,6 +80,38 @@ def back_project(p: jax.Array, s: jax.Array, side: str) -> jax.Array:
 def reconstruct(p: jax.Array, g: jax.Array, side: str) -> jax.Array:
     """P Pᵀ G (left) or G P Pᵀ (right): the biased low-rank gradient."""
     return back_project(p, project(p, g, side), side)
+
+
+def lowrank_momentum_update(
+    p: jax.Array,
+    g: jax.Array,
+    r_state: jax.Array,
+    beta: float,
+    coeff: float,
+    side: str,
+    kernel_impl: str = "jnp",
+) -> jax.Array:
+    """The per-step hot loop ``R' = beta·R + coeff·⟨P, G⟩`` with kernel
+    dispatch: ``kernel_impl`` routes to the fused Pallas kernel (TPU, or the
+    interpreter off-TPU for "pallas"/"interpret") or the jnp einsum path
+    ("jnp"; also what "auto" resolves to off-TPU).  All impls agree within
+    fp32 roundoff; the jnp path is bit-identical to the pre-dispatch code."""
+    from repro.kernels import dispatch  # lazy: kernels imports this module's peers
+
+    return dispatch.lowrank_update(
+        p, g, r_state, beta, coeff, side=side, impl=kernel_impl
+    )
+
+
+def project_dispatched(
+    p: jax.Array, g: jax.Array, side: str, kernel_impl: str = "jnp"
+) -> jax.Array:
+    """``project`` routed through the projection kernel when requested —
+    used by the Adam-based low-rank optimizers that need the projected
+    gradient itself (for second moments / residuals)."""
+    from repro.kernels import dispatch
+
+    return dispatch.project(p, g, side=side, impl=kernel_impl)
 
 
 def block_index(idx: jax.Array, fs: FamilyShape):

@@ -3,6 +3,13 @@
 Applies to >=2-D parameters (leading axes are treated as stacked blocks, e.g.
 scan-stacked layers ``(L, m, n)``).  1-D parameters (norm scales, biases) and
 anything excluded by ``matrix_filter`` fall back to AdamW, as in practice.
+
+``use_muon_scale`` (default True, matching Jordan et al. and this module's
+historical behaviour) multiplies the orthogonalized update by
+:func:`repro.core.newton_schulz.muon_scale` — sqrt(max(1, m/n)) — so update
+RMS is comparable across aspect ratios.  ``kernel_impl`` routes the
+Newton–Schulz hot loop through the fused Pallas TPU kernels
+(repro.kernels.dispatch); "auto" = Pallas on TPU, jnp reference elsewhere.
 """
 from __future__ import annotations
 
@@ -13,22 +20,12 @@ import jax.numpy as jnp
 
 from .adamw import adamw
 from .api import PyTree, Schedule, Transform, multi_transform, schedule_value, tree_paths
-from .newton_schulz import newton_schulz
+from .newton_schulz import muon_scale, newton_schulz
 
 
 class MuonState(NamedTuple):
     count: jax.Array
     mu: PyTree
-
-
-def _blockwise_ns(m: jax.Array, ns_steps: int) -> jax.Array:
-    """Newton–Schulz over the trailing two dims; leading dims are blocks."""
-    return newton_schulz(m, steps=ns_steps)
-
-
-def _shape_scale(shape) -> float:
-    m, n = shape[-2], shape[-1]
-    return max(1.0, m / n) ** 0.5
 
 
 def muon_matrices(
@@ -37,6 +34,8 @@ def muon_matrices(
     weight_decay: float = 0.0,
     ns_steps: int = 5,
     nesterov: bool = True,
+    use_muon_scale: bool = True,
+    kernel_impl: str = "auto",
 ) -> Transform:
     """Muon over matrix leaves only (callers route 1-D leaves elsewhere)."""
 
@@ -58,9 +57,10 @@ def muon_matrices(
             g32 = g.astype(jnp.float32)
             mu = beta * mu + g32
             mom = beta * mu + g32 if nesterov else mu
-            o = _blockwise_ns(mom, ns_steps)
+            o = newton_schulz(mom, steps=ns_steps, impl=kernel_impl)
+            scale = muon_scale(p.shape) if use_muon_scale else 1.0
             u = -step_lr * (
-                _shape_scale(p.shape) * o + weight_decay * p.astype(jnp.float32)
+                scale * o + weight_decay * p.astype(jnp.float32)
             )
             return u, mu
 
@@ -88,10 +88,14 @@ def muon(
     ns_steps: int = 5,
     adam_lr: Optional[Schedule] = None,
     matrix_filter: Callable[[str, jax.Array], bool] = default_matrix_filter,
+    use_muon_scale: bool = True,
+    kernel_impl: str = "auto",
 ) -> Transform:
     """Full Muon optimizer: Muon on hidden matrices, AdamW on the rest."""
     inner = {
-        "muon": muon_matrices(lr, beta=beta, weight_decay=weight_decay, ns_steps=ns_steps),
+        "muon": muon_matrices(lr, beta=beta, weight_decay=weight_decay,
+                              ns_steps=ns_steps, use_muon_scale=use_muon_scale,
+                              kernel_impl=kernel_impl),
         "adamw": adamw(adam_lr if adam_lr is not None else lr, weight_decay=weight_decay),
     }
 

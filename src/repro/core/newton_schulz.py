@@ -4,9 +4,16 @@
 We use Keller Jordan's quintic iteration with the standard coefficients
 (a, b, c) = (3.4445, -4.7750, 2.0315), 5 steps, computed in bf16-or-f32.
 
-This is the pure-jnp implementation used by the optimizers by default; a
-Pallas-fused TPU version of one iteration lives in
-``repro.kernels.newton_schulz`` (dispatch via ``impl='pallas'``).
+Implementation dispatch (the ``impl`` argument):
+
+  * ``"jnp"`` / ``"xla"`` — the pure-jnp path below (bit-stable reference).
+  * ``"auto"``            — :mod:`repro.kernels.dispatch` picks the fused
+                            Pallas TPU kernels on TPU and this jnp path
+                            elsewhere (shape-illegal inputs also fall back).
+  * ``"pallas"``          — the Pallas kernels; off-TPU this degrades to the
+                            Pallas interpreter so tests exercise the kernel
+                            code on any backend.
+  * ``"interpret"``       — the Pallas interpreter explicitly.
 
 Key property for the paper (Lemma 1 / Property II):
 ``newton_schulz(P @ X) == P @ newton_schulz(X)`` whenever ``PᵀP = I`` —
@@ -21,12 +28,22 @@ NS_COEFFS = (3.4445, -4.7750, 2.0315)
 NS_STEPS = 5
 
 
-def newton_schulz(x: jax.Array, *, steps: int = NS_STEPS, eps: float = 1e-7) -> jax.Array:
+def newton_schulz(
+    x: jax.Array, *, steps: int = NS_STEPS, eps: float = 1e-7, impl: str = "jnp"
+) -> jax.Array:
     """Quintic Newton–Schulz iteration toward the matrix sign/polar factor.
 
     Works on (..., m, n); iterates on the transposed problem when m > n so the
     Gram matrix XXᵀ is the small side (exactly Muon's reference trick).
     """
+    if impl not in ("jnp", "xla"):
+        # Lazy import: repro.kernels.newton_schulz imports NS_COEFFS from here.
+        from repro.kernels import dispatch
+
+        resolved = dispatch.resolve_impl(impl)
+        if resolved != "jnp":
+            return dispatch.newton_schulz(x, steps=steps, eps=eps, impl=resolved)
+
     a, b, c = NS_COEFFS
     orig_dtype = x.dtype
     x = x.astype(jnp.float32)
@@ -59,6 +76,7 @@ def msign_exact(x: jax.Array) -> jax.Array:
 
 def muon_scale(shape: tuple[int, int]) -> float:
     """Muon's shape-dependent update scale: sqrt(max(1, m/n)) keeps the RMS of
-    the orthogonalized update comparable across aspect ratios (Jordan et al.)."""
+    the orthogonalized update comparable across aspect ratios (Jordan et al.).
+    Applied by ``muon`` (default on) and, behind ``use_muon_scale``, by GUM."""
     m, n = shape[-2], shape[-1]
     return max(1.0, m / n) ** 0.5

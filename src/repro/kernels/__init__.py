@@ -1,8 +1,18 @@
-"""Pallas TPU kernels (hot spots) + jnp oracles.
+"""Pallas TPU kernels (hot spots) + jnp oracles + dispatch.
 
 Layout per task spec: <name>.py holds the pl.pallas_call + BlockSpec kernel,
-ops.py the jit'd wrappers (impl dispatch), ref.py the pure-jnp oracles.
-"""
-from . import ops, ref
+ops.py the jit'd wrappers (legacy impl dispatch), ref.py the pure-jnp
+oracles, dispatch.py the backend-aware dispatch subsystem the optimizers
+use (auto backend detection, shape-legality fallback, ragged-shape padding,
+family batching).
 
-__all__ = ["ops", "ref"]
+``KERNEL_REGISTRY`` maps op name -> :class:`repro.kernels.dispatch.KernelEntry`
+(dispatch entry point, jnp oracle, legality predicate); ``get_kernel`` looks
+one up by name.
+"""
+from . import dispatch, ops, ref
+
+__all__ = ["dispatch", "ops", "ref", "KERNEL_REGISTRY", "get_kernel"]
+
+KERNEL_REGISTRY = dispatch.REGISTRY
+get_kernel = dispatch.get_kernel

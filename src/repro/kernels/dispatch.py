@@ -1,0 +1,318 @@
+"""Kernel dispatch: route optimizer hot loops to Pallas or pure-jnp.
+
+Every low-rank optimizer step has two hot loops — the projected momentum
+update ``R' = beta·R + coeff·PᵀG`` and the Muon Newton–Schulz iteration.
+The fused Pallas TPU kernels for both live in
+:mod:`repro.kernels.lowrank_update` / :mod:`repro.kernels.newton_schulz`;
+this module is the single entry point that decides, per call, which
+implementation actually runs:
+
+  impl="auto"      — Pallas on TPU, the jnp reference elsewhere (default).
+  impl="jnp"/"xla" — the pure-jnp reference path, everywhere.
+  impl="pallas"    — the Pallas kernel; off-TPU it degrades to the Pallas
+                     interpreter so the kernel code is still exercised
+                     (this is what CI parity tests rely on).
+  impl="interpret" — the Pallas interpreter explicitly.
+
+On top of backend selection the dispatchers add what the raw kernels
+deliberately do not have:
+
+  * shape-legality checks — shapes whose VMEM working set cannot fit
+    (rank > MAX_LOWRANK_RANK, NS Gram side > MAX_NS_DIM) silently fall
+    back to the jnp reference instead of failing to compile;
+  * padding-aware wrappers — ragged (non tile-divisible) ``(m, n)`` are
+    zero-padded to legal tiles and the result sliced back, which is exact
+    for both ops (zero rows/columns contribute nothing to PᵀG or X Xᵀ and
+    stay zero through the NS iteration);
+  * family batching — ``(*lead, m, n)`` stacked families are flattened to
+    one leading axis and run through the kernels' native batch grid, so a
+    whole family is a single ``pallas_call``.  (The kernels carry their own
+    batch grid axis rather than relying on ``jax.vmap``, whose batching
+    rule would renumber the ``pl.program_id`` axes inside the kernels.)
+
+``KernelEntry``/``REGISTRY`` (re-exported as ``repro.kernels.KERNEL_REGISTRY``)
+name each dispatched op with its reference oracle and legality predicate, so
+benchmarks and tests can enumerate the dispatch surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .lowrank_update import lowrank_update_batched, project_batched
+from .newton_schulz import newton_schulz_pallas
+
+VALID_IMPLS = ("auto", "jnp", "xla", "pallas", "interpret")
+
+# VMEM working-set bounds (fp32): the lowrank kernel keeps an (r, block_n)
+# accumulator plus (block_m, r) / (block_m, block_n) tiles resident; the NS
+# kernels keep the whole (m, m) Gram matrix resident.
+MAX_LOWRANK_RANK = 512
+MAX_NS_DIM = 1024
+
+_LANE = 128   # TPU lane width: last-dim tiling granule
+_SUBLANE = 8  # fp32 sublane granule
+
+
+def backend() -> str:
+    """The default JAX backend ("tpu" | "gpu" | "cpu")."""
+    return jax.default_backend()
+
+
+def resolve_impl(impl: str) -> str:
+    """Normalize an impl request to one of {"jnp", "pallas", "interpret"}.
+
+    "auto" picks Pallas on TPU and jnp elsewhere; an explicit "pallas" off
+    TPU degrades to the interpreter so the kernel code still runs.
+    """
+    if impl not in VALID_IMPLS:
+        raise ValueError(f"impl must be one of {VALID_IMPLS}, got {impl!r}")
+    if impl in ("jnp", "xla"):
+        return "jnp"
+    if impl == "auto":
+        return "pallas" if backend() == "tpu" else "jnp"
+    if impl == "pallas" and backend() != "tpu":
+        return "interpret"
+    return impl
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _pad_and_block(dim: int, target: int, granule: int) -> tuple[int, int]:
+    """(padded dim, block) for tiling one axis.  Prefers a granule-multiple
+    block in [target/4, target] that divides the granule-padded dim exactly
+    (zero extra padding); when none exists (e.g. 8·prime dims, whose only
+    divisor-block would be a tiny MXU-starving granule), pads up to a full
+    target multiple instead — bounded extra padding, full-size blocks."""
+    target = max(granule, _round_up(target, granule))
+    dim_pad = _round_up(dim, granule)
+    if dim_pad <= target:
+        return dim_pad, dim_pad  # single block
+    floor = max(granule, target // 4)
+    for b in range(target, floor - 1, -granule):
+        if dim_pad % b == 0:
+            return dim_pad, b
+    return _round_up(dim_pad, target), target
+
+
+def _pad_axis(x: jax.Array, axis: int, new_dim: int) -> jax.Array:
+    pad = new_dim - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _flatten_lead(x: jax.Array) -> jax.Array:
+    """(*lead, a, b) -> (L, a, b).  Pallas calls are per-device (they run
+    under shard_map / fully replicated optimizer math), so this reshape is
+    invisible to GSPMD — the no-lead-reshape rule in lowrank_common applies
+    to the partitioned jnp path, not here."""
+    return x.reshape((-1,) + x.shape[-2:])
+
+
+# --------------------------------------------------------------------------
+# Fused low-rank momentum update:  R' = beta·R + coeff·<P, G>
+# --------------------------------------------------------------------------
+
+
+def lowrank_update_supported(p: jax.Array, g: jax.Array, side: str) -> bool:
+    """Legality of the fused kernel for this family shape."""
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    return int(p.shape[-1]) <= MAX_LOWRANK_RANK
+
+
+def _project_jnp(p: jax.Array, g: jax.Array, side: str) -> jax.Array:
+    """The fp32 jnp oracle for PᵀG / G P shared by every fallback path —
+    delegates to lowrank_common.project (safe non-lazy import: lowrank_common
+    only imports this module inside function bodies)."""
+    from repro.core.lowrank_common import project
+
+    return project(p.astype(jnp.float32), g.astype(jnp.float32), side)
+
+
+def _lowrank_kernel_form(p, g, r_state, side):
+    """Normalize (p, g[, r_state]) to the kernel's left-side batched layout:
+    flatten leads, transpose the right side ((G P)ᵀ = Pᵀ Gᵀ), zero-pad to
+    tile-legal shapes.  Zero rows/cols are exact: they add nothing to PᵀG,
+    and padded R rows/cols are zero so beta·R stays zero there.  Returns the
+    prepared operands plus everything needed to undo the normalization."""
+    lead = g.shape[:-2]
+    if side == "right":
+        g = jnp.swapaxes(g, -1, -2)
+        if r_state is not None:
+            r_state = jnp.swapaxes(r_state, -1, -2)
+    pk, gk = _flatten_lead(p), _flatten_lead(g)
+    m, r = int(pk.shape[-2]), int(pk.shape[-1])
+    n = int(gk.shape[-1])
+    m_pad, bm = _pad_and_block(m, 256, _SUBLANE)
+    n_pad, bn = _pad_and_block(n, 512, _LANE)
+    r_pad = _round_up(r, _SUBLANE)
+    pk = _pad_axis(_pad_axis(pk, -2, m_pad), -1, r_pad)
+    gk = _pad_axis(_pad_axis(gk, -2, m_pad), -1, n_pad)
+    rk = None
+    if r_state is not None:
+        rk = _pad_axis(_pad_axis(_flatten_lead(r_state), -2, r_pad), -1, n_pad)
+    return pk, gk, rk, (lead, r, n, bm, bn)
+
+
+def _lowrank_unkernel_form(out, lead, r, n, side):
+    out = out[..., :r, :n].reshape(lead + (r, n))
+    return jnp.swapaxes(out, -1, -2) if side == "right" else out
+
+
+def lowrank_update(
+    p: jax.Array,
+    g: jax.Array,
+    r_state: jax.Array,
+    beta: float,
+    coeff: float,
+    *,
+    side: str = "left",
+    impl: str = "auto",
+) -> jax.Array:
+    """Dispatched momentum update over a family ``g (*lead, m, n)``.
+
+    left  side: p (*lead, m, r), r_state (*lead, r, n) -> beta·R + coeff·PᵀG
+    right side: p (*lead, n, r), r_state (*lead, m, r) -> beta·R + coeff·G P
+
+    Returns fp32, identical (within fp32 roundoff) across impls.
+    """
+    impl = resolve_impl(impl)
+    if impl != "jnp" and not lowrank_update_supported(p, g, side):
+        impl = "jnp"
+    if impl == "jnp":
+        return beta * r_state.astype(jnp.float32) + coeff * _project_jnp(p, g, side)
+
+    pk, gk, rk, (lead, r, n, bm, bn) = _lowrank_kernel_form(p, g, r_state, side)
+    out = lowrank_update_batched(
+        pk, gk, rk, beta, coeff, block_m=bm, block_n=bn,
+        interpret=(impl == "interpret"),
+    )
+    return _lowrank_unkernel_form(out, lead, r, n, side)
+
+
+def project(p: jax.Array, g: jax.Array, *, side: str = "left",
+            impl: str = "auto") -> jax.Array:
+    """Plain low-rank projection PᵀG / G P through the projection kernel —
+    the dispatched counterpart of ``lowrank_common.project`` (used by the
+    Adam-based optimizers, which consume the projected gradient itself)."""
+    impl = resolve_impl(impl)
+    if impl != "jnp" and not lowrank_update_supported(p, g, side):
+        impl = "jnp"
+    if impl == "jnp":
+        return _project_jnp(p, g, side)
+
+    pk, gk, _, (lead, r, n, bm, bn) = _lowrank_kernel_form(p, g, None, side)
+    out = project_batched(
+        pk, gk, 1.0, block_m=bm, block_n=bn, interpret=(impl == "interpret")
+    )
+    return _lowrank_unkernel_form(out, lead, r, n, side)
+
+
+# --------------------------------------------------------------------------
+# Newton–Schulz orthogonalization
+# --------------------------------------------------------------------------
+
+
+def newton_schulz_supported(x: jax.Array) -> bool:
+    """The NS kernels hold the (s, s) Gram matrix (s = short side) in VMEM."""
+    return min(int(x.shape[-2]), int(x.shape[-1])) <= MAX_NS_DIM
+
+
+def newton_schulz(
+    x: jax.Array, *, steps: int = 5, eps: float = 1e-7, impl: str = "auto",
+    block_n: int = 512,
+) -> jax.Array:
+    """Dispatched Newton–Schulz over (..., m, n), matching
+    :func:`repro.core.newton_schulz.newton_schulz` semantics."""
+    from repro.core.newton_schulz import newton_schulz as ns_jnp
+
+    impl = resolve_impl(impl)
+    if impl != "jnp" and not newton_schulz_supported(x):
+        impl = "jnp"
+    if impl == "jnp":
+        return ns_jnp(x, steps=steps, eps=eps)
+
+    interpret = impl == "interpret"
+    orig_dtype = x.dtype
+    lead = x.shape[:-2]
+
+    transposed = x.shape[-2] > x.shape[-1]
+    if transposed:
+        x = jnp.swapaxes(x, -1, -2)
+    m, n = int(x.shape[-2]), int(x.shape[-1])
+    # Zero padding is exact for NS: padded rows/cols of X are zero, stay zero
+    # through every iteration (Gram gains zero blocks; a·X + A2·X preserves
+    # them), and the Frobenius norm used for the initial scaling is unchanged.
+    m_pad = _round_up(m, _SUBLANE)
+    n_pad, bn = _pad_and_block(n, block_n, _LANE)
+    xk = _flatten_lead(_pad_axis(_pad_axis(x, -2, m_pad), -1, n_pad))
+
+    out = newton_schulz_pallas(
+        xk, steps=steps, eps=eps, block_n=bn, interpret=interpret
+    )[..., :m, :n]
+    out = out.reshape(lead + (m, n))
+    if transposed:
+        out = jnp.swapaxes(out, -1, -2)
+    return out.astype(orig_dtype)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """One dispatched op: its entry point, jnp oracle, and legality check."""
+
+    name: str
+    fn: Callable        # dispatching wrapper; accepts impl=
+    reference: Callable  # pure-jnp oracle (repro.kernels.ref)
+    supported: Callable  # shape-legality predicate for the Pallas path
+
+
+REGISTRY: dict[str, KernelEntry] = {}
+
+
+def register(entry: KernelEntry) -> KernelEntry:
+    REGISTRY[entry.name] = entry
+    return entry
+
+
+def get_kernel(name: str) -> KernelEntry:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel {name!r}; registered: {sorted(REGISTRY)}"
+        ) from None
+
+
+register(KernelEntry(
+    name="lowrank_update",
+    fn=lowrank_update,
+    reference=ref.lowrank_update_ref,
+    supported=lowrank_update_supported,
+))
+def _newton_schulz_ref(x, *, steps=5, eps=1e-7):
+    from repro.core.newton_schulz import newton_schulz as ns_jnp
+
+    return ns_jnp(x, steps=steps, eps=eps)
+
+
+register(KernelEntry(
+    name="newton_schulz",
+    fn=newton_schulz,
+    reference=_newton_schulz_ref,
+    supported=newton_schulz_supported,
+))

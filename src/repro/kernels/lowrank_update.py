@@ -8,6 +8,14 @@ beta·R exactly once at the first reduction step.
 
 Layout: P (m, r), G (m, n), R (r, n); r ≤ 512 so a whole (r, block_n) output
 tile plus (block_m, r) / (block_m, block_n) input tiles fit VMEM.
+
+The kernel runs on a (L, nblocks, mblocks) grid so a whole stacked family
+(L, m, n) is one ``pallas_call`` — NOT ``jax.vmap``, whose batching rule
+prepends a grid axis and would renumber the ``pl.program_id`` axes the
+reduction relies on.  2-D callers are lifted to L=1.  Ragged (non
+tile-divisible) shapes are handled by the padding wrappers in
+:mod:`repro.kernels.dispatch`; this file keeps the bare divisibility
+contract.
 """
 from __future__ import annotations
 
@@ -22,24 +30,59 @@ from jax.experimental.pallas import tpu as pltpu
 def _lowrank_update_kernel(
     p_ref, g_ref, r_ref, out_ref, acc, *, beta: float, coeff: float, mblocks: int
 ):
-    mi = pl.program_id(1)
+    mi = pl.program_id(2)
 
     @pl.when(mi == 0)
     def _init():
-        acc[...] = beta * r_ref[...].astype(jnp.float32)
+        acc[...] = beta * r_ref[0].astype(jnp.float32)
 
-    p = p_ref[...].astype(jnp.float32)  # (bm, r)
-    g = g_ref[...].astype(jnp.float32)  # (bm, bn)
+    p = p_ref[0].astype(jnp.float32)  # (bm, r)
+    g = g_ref[0].astype(jnp.float32)  # (bm, bn)
     acc[...] += coeff * (p.T @ g)
 
     @pl.when(mi == mblocks - 1)
     def _done():
-        out_ref[...] = acc[...].astype(out_ref.dtype)
+        out_ref[0] = acc[...].astype(out_ref.dtype)
 
 
 @functools.partial(
     jax.jit, static_argnames=("beta", "coeff", "block_m", "block_n", "interpret")
 )
+def lowrank_update_batched(
+    p: jax.Array,
+    g: jax.Array,
+    r_state: jax.Array,
+    beta: float,
+    coeff: float,
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched fused update: p (L, m, r), g (L, m, n), r_state (L, r, n)."""
+    L, m, r = p.shape
+    _, _, n = g.shape
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0
+    mblocks = m // block_m
+    return pl.pallas_call(
+        functools.partial(
+            _lowrank_update_kernel, beta=beta, coeff=coeff, mblocks=mblocks
+        ),
+        grid=(L, n // block_n, mblocks),  # m innermost: sequential reduction
+        in_specs=[
+            pl.BlockSpec((1, block_m, r), lambda l, ni, mi: (l, mi, 0)),
+            pl.BlockSpec((1, block_m, block_n), lambda l, ni, mi: (l, mi, ni)),
+            pl.BlockSpec((1, r, block_n), lambda l, ni, mi: (l, 0, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, r, block_n), lambda l, ni, mi: (l, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((L, r, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((r, block_n), jnp.float32)],
+        interpret=interpret,
+    )(p, g, r_state)
+
+
 def lowrank_update(
     p: jax.Array,
     g: jax.Array,
@@ -51,24 +94,59 @@ def lowrank_update(
     block_n: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    m, r = p.shape
-    _, n = g.shape
+    """Single-matrix form: p (m, r), g (m, n), r_state (r, n) -> (r, n)."""
+    out = lowrank_update_batched(
+        p[None], g[None], r_state[None], beta, coeff,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    return out[0]
+
+
+def _project_kernel(p_ref, g_ref, out_ref, acc, *, coeff: float, mblocks: int):
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    p = p_ref[0].astype(jnp.float32)  # (bm, r)
+    g = g_ref[0].astype(jnp.float32)  # (bm, bn)
+    acc[...] += coeff * (p.T @ g)
+
+    @pl.when(mi == mblocks - 1)
+    def _done():
+        out_ref[0] = acc[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("coeff", "block_m", "block_n", "interpret")
+)
+def project_batched(
+    p: jax.Array,
+    g: jax.Array,
+    coeff: float,
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Projection-only form (the beta == 0 momentum update without the dead
+    R operand): p (L, m, r), g (L, m, n) -> coeff·PᵀG (L, r, n)."""
+    L, m, r = p.shape
+    _, _, n = g.shape
     block_m = min(block_m, m)
     block_n = min(block_n, n)
     assert m % block_m == 0 and n % block_n == 0
     mblocks = m // block_m
     return pl.pallas_call(
-        functools.partial(
-            _lowrank_update_kernel, beta=beta, coeff=coeff, mblocks=mblocks
-        ),
-        grid=(n // block_n, mblocks),  # m innermost: sequential reduction
+        functools.partial(_project_kernel, coeff=coeff, mblocks=mblocks),
+        grid=(L, n // block_n, mblocks),
         in_specs=[
-            pl.BlockSpec((block_m, r), lambda ni, mi: (mi, 0)),
-            pl.BlockSpec((block_m, block_n), lambda ni, mi: (mi, ni)),
-            pl.BlockSpec((r, block_n), lambda ni, mi: (0, ni)),
+            pl.BlockSpec((1, block_m, r), lambda l, ni, mi: (l, mi, 0)),
+            pl.BlockSpec((1, block_m, block_n), lambda l, ni, mi: (l, mi, ni)),
         ],
-        out_specs=pl.BlockSpec((r, block_n), lambda ni, mi: (0, ni)),
-        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        out_specs=pl.BlockSpec((1, r, block_n), lambda l, ni, mi: (l, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((L, r, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((r, block_n), jnp.float32)],
         interpret=interpret,
-    )(p, g, r_state)
+    )(p, g)

@@ -13,6 +13,11 @@ into two MXU-friendly kernels plus an O(r³) polynomial evaluated inline:
 
 The (r, r) polynomial A2 = b·G + c·G@G stays in jnp — it's ~2r³ FLOPs,
 negligible next to the 2·r²·n Gram/apply work, and XLA fuses it fine.
+
+Both kernels run on a (L, nblocks) grid so a stacked family (L, m, n) is a
+single ``pallas_call`` (``jax.vmap`` would renumber the ``pl.program_id``
+axis the Gram reduction keys on).  2-D inputs are lifted to L=1.  Ragged n
+is handled by the padding wrappers in :mod:`repro.kernels.dispatch`.
 """
 from __future__ import annotations
 
@@ -27,82 +32,98 @@ from repro.core.newton_schulz import NS_COEFFS
 
 
 def _gram_kernel(x_ref, g_ref, acc, *, nblocks):
-    ki = pl.program_id(0)
+    ki = pl.program_id(1)
 
     @pl.when(ki == 0)
     def _init():
         acc[...] = jnp.zeros_like(acc)
 
-    x = x_ref[...].astype(jnp.float32)  # (m, bn)
+    x = x_ref[0].astype(jnp.float32)  # (m, bn)
     acc[...] += x @ x.T
 
     @pl.when(ki == nblocks - 1)
     def _done():
-        g_ref[...] = acc[...].astype(g_ref.dtype)
+        g_ref[0] = acc[...].astype(g_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def gram(x: jax.Array, *, block_n: int = 512, interpret: bool = False) -> jax.Array:
-    """G = X Xᵀ for X (m, n); the m side must fit VMEM (m ≤ ~1024)."""
-    m, n = x.shape
+    """G = X Xᵀ for X (m, n) or (L, m, n); the m side must fit VMEM (m ≤ ~1024)."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    L, m, n = x.shape
     block_n = min(block_n, n)
-    assert n % block_n == 0, "pad n to a block multiple"
+    assert n % block_n == 0, "pad n to a block multiple (see kernels.dispatch)"
     nblocks = n // block_n
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_gram_kernel, nblocks=nblocks),
-        grid=(nblocks,),
-        in_specs=[pl.BlockSpec((m, block_n), lambda k: (0, k))],
-        out_specs=pl.BlockSpec((m, m), lambda k: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        grid=(L, nblocks),
+        in_specs=[pl.BlockSpec((1, m, block_n), lambda l, k: (l, 0, k))],
+        out_specs=pl.BlockSpec((1, m, m), lambda l, k: (l, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, m, m), jnp.float32),
         scratch_shapes=[pltpu.VMEM((m, m), jnp.float32)],
         interpret=interpret,
     )(x)
+    return out[0] if squeeze else out
 
 
 def _poly_apply_kernel(a2_ref, x_ref, y_ref, *, a: float):
-    x = x_ref[...].astype(jnp.float32)
-    a2 = a2_ref[...].astype(jnp.float32)
-    y_ref[...] = (a * x + a2 @ x).astype(y_ref.dtype)
+    x = x_ref[0].astype(jnp.float32)
+    a2 = a2_ref[0].astype(jnp.float32)
+    y_ref[0] = (a * x + a2 @ x).astype(y_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("a", "block_n", "interpret"))
 def poly_matmul_axpy(
     a2: jax.Array, x: jax.Array, a: float, *, block_n: int = 512, interpret: bool = False
 ) -> jax.Array:
-    """Y = a·X + A2 @ X for A2 (m, m), X (m, n), tiled over n."""
-    m, n = x.shape
+    """Y = a·X + A2 @ X for A2 (..., m, m), X (..., m, n), tiled over n."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        a2, x = a2[None], x[None]
+    L, m, n = x.shape
     block_n = min(block_n, n)
     assert n % block_n == 0
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_poly_apply_kernel, a=a),
-        grid=(n // block_n,),
+        grid=(L, n // block_n),
         in_specs=[
-            pl.BlockSpec((m, m), lambda k: (0, 0)),
-            pl.BlockSpec((m, block_n), lambda k: (0, k)),
+            pl.BlockSpec((1, m, m), lambda l, k: (l, 0, 0)),
+            pl.BlockSpec((1, m, block_n), lambda l, k: (l, 0, k)),
         ],
-        out_specs=pl.BlockSpec((m, block_n), lambda k: (0, k)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_specs=pl.BlockSpec((1, m, block_n), lambda l, k: (l, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((L, m, n), jnp.float32),
         interpret=interpret,
     )(a2, x)
+    return out[0] if squeeze else out
 
 
-def ns_iteration(x: jax.Array, *, interpret: bool = False) -> jax.Array:
-    """One fused NS step via the two kernels (fp32 in/out)."""
+def ns_iteration(
+    x: jax.Array, *, block_n: int = 512, interpret: bool = False
+) -> jax.Array:
+    """One fused NS step via the two kernels (fp32 in/out, 2-D or batched)."""
     a, b, c = NS_COEFFS
-    g = gram(x, interpret=interpret)
-    a2 = b * g + c * (g @ g)  # (m, m) — tiny, stays in XLA
-    return poly_matmul_axpy(a2, x, a, interpret=interpret)
+    g = gram(x, block_n=block_n, interpret=interpret)
+    a2 = b * g + c * (g @ g)  # (..., m, m) — tiny, stays in XLA
+    return poly_matmul_axpy(a2, x, a, block_n=block_n, interpret=interpret)
 
 
 def newton_schulz_pallas(
-    x: jax.Array, *, steps: int = 5, eps: float = 1e-7, interpret: bool = False
+    x: jax.Array,
+    *,
+    steps: int = 5,
+    eps: float = 1e-7,
+    block_n: int = 512,
+    interpret: bool = False,
 ) -> jax.Array:
-    """Drop-in replacement for core.newton_schulz on a single (m, n) matrix
-    with m <= n (transpose handled by the wrapper in ops.py)."""
+    """Pallas Newton–Schulz on (m, n) or a stacked (L, m, n) family with
+    m <= n (transposition and ragged-shape padding are handled by the
+    dispatch wrapper :func:`repro.kernels.dispatch.newton_schulz`)."""
     orig_dtype = x.dtype
     x = x.astype(jnp.float32)
-    norm = jnp.linalg.norm(x)
+    norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
     x = x / (norm + eps)
     for _ in range(steps):
-        x = ns_iteration(x, interpret=interpret)
+        x = ns_iteration(x, block_n=block_n, interpret=interpret)
     return x.astype(orig_dtype)

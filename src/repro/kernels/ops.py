@@ -13,10 +13,8 @@ import jax.numpy as jnp
 
 from repro.core.newton_schulz import newton_schulz as ns_xla
 
-from . import ref
+from . import dispatch, ref
 from .flash_attention import flash_attention as _flash
-from .lowrank_update import lowrank_update as _lowrank_update
-from .newton_schulz import newton_schulz_pallas
 from .ssd_scan import ssd_scan as _ssd_scan
 
 
@@ -45,19 +43,7 @@ def newton_schulz(x: jax.Array, *, steps: int = 5, impl: str = "xla") -> jax.Arr
     """Batched (…, m, n) Newton–Schulz with impl dispatch."""
     if impl == "xla":
         return ns_xla(x, steps=steps)
-    interpret = impl == "interpret"
-
-    def one(m):
-        transposed = m.shape[0] > m.shape[1]
-        m2 = m.T if transposed else m
-        out = newton_schulz_pallas(m2, steps=steps, interpret=interpret)
-        return out.T if transposed else out
-
-    if x.ndim == 2:
-        return one(x).astype(x.dtype)
-    flat = x.reshape((-1,) + x.shape[-2:])
-    out = jax.lax.map(one, flat)
-    return out.reshape(x.shape).astype(x.dtype)
+    return dispatch.newton_schulz(x, steps=steps, impl=impl)
 
 
 def lowrank_update(
@@ -66,9 +52,7 @@ def lowrank_update(
 ) -> jax.Array:
     if impl == "xla":
         return ref.lowrank_update_ref(p, g, r_state, beta, coeff)
-    return _lowrank_update(
-        p, g, r_state, beta, coeff, interpret=(impl == "interpret")
-    )
+    return dispatch.lowrank_update(p, g, r_state, beta, coeff, impl=impl)
 
 
 def ssd(

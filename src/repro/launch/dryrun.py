@@ -37,6 +37,7 @@ from repro.launch.roofline import (  # noqa: E402
     PEAK_FLOPS,
     model_flops,
     roofline_from_text,
+    xla_cost_dict,
 )
 from repro.launch.steps import (  # noqa: E402
     batch_shardings,
@@ -157,7 +158,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
             v = getattr(mem, attr, None)
             if v is not None:
                 mem_info[attr] = int(v)
-        cost = compiled.cost_analysis() or {}
+        # cost_analysis() is a dict on old JAX, a list-of-dicts on newer.
+        cost = xla_cost_dict(compiled)
 
         mf = model_flops(cfg, shape) / chips
         report = roofline_from_text(compiled.as_text(), model_flops_per_device=mf)

@@ -55,6 +55,18 @@ _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _OPCODE_RE = re.compile(r"^(?:\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([\w\-]+)\(")
 
 
+def xla_cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across JAX versions.
+
+    Older JAX returns a dict; newer versions return a list with one dict per
+    executable module (and may return None when analysis is unavailable).
+    Always yields a plain {metric: value} dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 def shape_bytes(text: str) -> float:
     """Sum of bytes of every dtype[shape] token in ``text``."""
     total = 0.0

@@ -24,7 +24,21 @@ def make_inputs(cfg, B=2, S=32):
     return tokens, kw
 
 
-@pytest.mark.parametrize("arch", ASSIGNED + ["llama-60m"])
+# The giant-config cells dominate this module's runtime (pure jit compile);
+# they stay in the `slow` sweep, out of the tier-1 loop.  starcoder2/chatglm3
+# are dense decoders whose code paths the qwen1.5 / llama cells already
+# cover, and zamba2's hybrid glue sits on the mamba2 + attention paths both
+# still in tier-1; dbrx (MoE), vision-11b (VLM) and hubert (audio) keep
+# their families in the default selection.
+_SLOW_ARCHS = {"nemotron-4-340b", "llama4-maverick-400b-a17b",
+               "starcoder2-7b", "chatglm3-6b", "zamba2-1.2b"}
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS else a
+     for a in ASSIGNED + ["llama-60m"]],
+)
 def test_forward_and_train_step(arch):
     cfg = get_smoke(arch)
     model = build_model(cfg)

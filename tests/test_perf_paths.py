@@ -1,11 +1,12 @@
 """Correctness of the §Perf optimization paths: chunked attention and
 sequence-chunked cross-entropy must be numerically identical to the plain
-implementations (these get flipped on for the hillclimbed cells)."""
+implementations (these get flipped on for the hillclimbed cells).
+Deterministic parametrize grids (stdlib + pytest only; the seed's hypothesis
+dependency is not in the CI image)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_smoke
 from repro.kernels import ref
@@ -15,15 +16,14 @@ from repro.models.transformer import chunked_lm_loss, forward, lm_loss
 KEY = jax.random.PRNGKey(0)
 
 
-@settings(deadline=None, max_examples=8)
-@given(
-    b=st.sampled_from([1, 2]),
-    s=st.sampled_from([32, 64]),
-    t_mult=st.sampled_from([1, 2]),
-    h=st.sampled_from([2, 4]),
-    kv=st.sampled_from([1, 2]),
-    causal=st.booleans(),
-)
+@pytest.mark.parametrize("b,s,t_mult,h,kv,causal", [
+    (1, 32, 1, 2, 1, True),
+    (1, 64, 2, 4, 2, True),
+    (2, 32, 2, 2, 2, False),
+    (2, 64, 1, 4, 1, False),
+    (1, 32, 2, 4, 1, True),
+    (2, 64, 2, 2, 1, True),
+])
 def test_chunked_attention_matches_oracle(b, s, t_mult, h, kv, causal):
     if kv > h:
         kv = h

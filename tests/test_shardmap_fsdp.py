@@ -5,6 +5,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = """
@@ -67,6 +69,7 @@ print("SHARDMAP_FSDP_OK", len(bf16_colls))
 """
 
 
+@pytest.mark.slow
 def test_shardmap_fsdp_bf16_reduction():
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,

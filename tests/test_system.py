@@ -54,6 +54,7 @@ def _train(tmpdir, steps, resume=True, seed=0):
     return trainer
 
 
+@pytest.mark.slow
 def test_trainer_resume_exact(tmp_path):
     """train(12) straight == train(8) + crash + resume to 12 — exact same
     final params (counter-based data + deterministic optimizer)."""
@@ -115,6 +116,7 @@ def test_straggler_monitor():
 # ------------------------------------------------- sharded step (8 devices)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device(tmp_path):
     """pjit on a (2,4) debug mesh must produce the same loss/params as the
     unsharded step (same inputs, same seed)."""
