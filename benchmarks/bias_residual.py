@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke
-from repro.core import apply_updates, galore_matrices
+from repro.core import apply_updates, find_lowrank_states, galore_matrices
 from repro.core.lowrank_common import family_shape, reconstruct
 from repro.data import DataConfig, build_stream
 from repro.models import build_model
@@ -58,8 +58,8 @@ def main() -> None:
         gb = {"blocks": g["blocks"]}
         upd, st = opt.update(gb, st, blocks)
         # chi for the attention wq family using the CURRENT projector
-        fam = st.families["blocks"]["attn"]["wq"]
-        x = float(chi(gb["blocks"]["attn"]["wq"], fam.p))
+        proj = find_lowrank_states(st)[0].projs["blocks"]["attn"]["wq"]
+        x = float(chi(gb["blocks"]["attn"]["wq"], proj))
         (at_refresh if t % period == 0 else mid_period).append(x)
         params = dict(params)
         params["blocks"] = apply_updates(blocks, upd)["blocks"]

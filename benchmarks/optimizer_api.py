@@ -1,0 +1,108 @@
+"""Per-step overhead of the combinator API vs the legacy monoliths (PR 2).
+
+The combinator redesign (repro.core.combinators) replaced the monolithic
+gum/galore/fira update functions with chains of small transforms.  Under jit
+the chains fuse into the same XLA program, so the steady-state step time
+should be unchanged — this benchmark proves (or disproves) that, per
+optimizer, on a synthetic stacked-family tree at the smoke operating point.
+
+Emits ``name,us_per_call,derived`` CSV rows (derived = overhead_pct of the
+chained vs legacy step) and a ``BENCH_optimizer_api.json`` trajectory entry
+under --out (default results/) so regressions are visible across PRs.
+
+Usage: PYTHONPATH=src python benchmarks/optimizer_api.py [--steps N] [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as core
+from repro.core import apply_updates, legacy
+
+KEY = jax.random.PRNGKey(0)
+
+# Stacked-family tree roughly at the LLaMA-60M smoke operating point.
+PARAMS = {
+    "blocks": {
+        "wq": jax.random.normal(KEY, (8, 256, 512)) * 0.02,
+        "w_out": jax.random.normal(jax.random.fold_in(KEY, 1), (8, 512, 256)) * 0.02,
+    },
+    "embed": jax.random.normal(jax.random.fold_in(KEY, 2), (4096, 256)) * 0.02,
+    "norm_scale": jnp.ones((256,)),
+}
+
+OPT_KW = dict(rank=32, period=50, seed=0, kernel_impl="jnp")
+
+
+def _builders():
+    return [
+        ("gum", lambda: core.gum(1e-3, gamma=2, **OPT_KW),
+                lambda: legacy.gum(1e-3, gamma=2, **OPT_KW)),
+        ("galore", lambda: core.galore(1e-3, **OPT_KW),
+                   lambda: legacy.galore(1e-3, **OPT_KW)),
+        ("galore_muon", lambda: core.galore(1e-3, base="muon", **OPT_KW),
+                        lambda: legacy.galore(1e-3, base="muon", **OPT_KW)),
+        ("fira", lambda: core.fira(1e-3, **OPT_KW),
+                 lambda: legacy.fira(1e-3, **OPT_KW)),
+    ]
+
+
+def _time_step(opt, steps: int) -> float:
+    st = opt.init(PARAMS)
+    g = jax.tree_util.tree_map(lambda p: 0.01 * jnp.ones_like(p), PARAMS)
+
+    @jax.jit
+    def step(p, s):
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s
+
+    p = PARAMS
+    p, st = step(p, st)  # compile
+    jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        p, st = step(p, st)
+    jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
+    return (time.perf_counter() - t0) / steps * 1e6
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--out", default="results")
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+    rows = []
+    for name, new_b, old_b in _builders():
+        us_new = _time_step(new_b(), args.steps)
+        us_old = _time_step(old_b(), args.steps)
+        overhead = (us_new - us_old) / us_old * 100.0
+        print(f"optapi_{name}_chained,{us_new:.0f},overhead_pct={overhead:+.1f}")
+        print(f"optapi_{name}_legacy,{us_old:.0f},baseline")
+        rows.append({"optimizer": name, "us_chained": round(us_new, 1),
+                     "us_legacy": round(us_old, 1),
+                     "overhead_pct": round(overhead, 2)})
+
+    os.makedirs(args.out, exist_ok=True)
+    entry = {
+        "suite": "optimizer_api",
+        "backend": jax.default_backend(),
+        "steps": args.steps,
+        "kernel_impl": OPT_KW["kernel_impl"],
+        "rows": rows,
+    }
+    path = os.path.join(args.out, "BENCH_optimizer_api.json")
+    with open(path, "w") as f:
+        json.dump(entry, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,8 @@ with BENCH_ONLY=<name>; default runs everything.
   bias_residual             — Fig. 4 (GaLore's chi_t bias curve)
   stable_rank               — Figs. 2/3/5 (stable rank & spectra)
   roofline_report           — §Roofline aggregation from the dry-run JSONs
+  optimizer_api             — combinator-chain vs legacy-monolith per-step
+                              overhead (PR 2; writes BENCH_optimizer_api.json)
   kernel_micro              — per-kernel wall-time microbenchmarks (CPU
                               interpret/xla; indicative only, not TPU)
 """
@@ -65,6 +67,7 @@ SUITES = [
     "bias_residual",
     "stable_rank",
     "roofline_report",
+    "optimizer_api",
 ]
 
 

@@ -1,4 +1,5 @@
-"""Quickstart: train a tiny LLaMA with GUM in ~30 lines.
+"""Quickstart: train a tiny LLaMA with GUM in ~30 lines — then compose a
+brand-new unbiased optimizer from the combinator API in one expression.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,7 +7,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke
-from repro.core import OptimizerConfig, apply_updates, build_optimizer
+from repro.core import (
+    OptimizerConfig,
+    add_decayed_weights,
+    apply_updates,
+    build_optimizer,
+    chain,
+    layerwise_unbias,
+    lowrank,
+    scale_by_adam,
+    scale_by_lr,
+    with_matrix_routing,
+)
+from repro.core.adamw import adamw
 from repro.data import DataConfig, build_stream
 from repro.models import build_model
 
@@ -14,7 +27,10 @@ cfg = get_smoke("llama-60m")
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 
-# GUM: rank-8 GaLore projection + 1 full-rank sampled layer per period of 10
+# GUM: rank-8 GaLore projection + 1 full-rank sampled layer per period of 10.
+# Under the hood this IS a combinator chain:
+#   chain(lowrank(layerwise_unbias(scale_by_muon())), add_decayed_weights(),
+#         scale_by_lr()) routed against an AdamW fallback.
 opt = build_optimizer(OptimizerConfig(name="gum", lr=5e-3, rank=8, gamma=1, period=10))
 opt_state = opt.init(params)
 
@@ -37,3 +53,36 @@ for step, tokens in zip(range(30), stream):
     if step % 10 == 0 or step == 29:
         print(f"step {step:3d}  loss {float(loss):.4f}")
 print("quickstart OK")
+
+# ---------------------------------------------------------------------------
+# The paradigm is the API: debiasing ANY projected base is one composition.
+# Unbiased GaLore-Adam (layerwise_unbias wrapping scale_by_adam) — a new
+# optimizer, zero new optimizer files (also available as
+# OptimizerConfig(name="unbiased_galore_adam")).
+# ---------------------------------------------------------------------------
+uga = with_matrix_routing(
+    chain(
+        lowrank(layerwise_unbias(scale_by_adam(scale=0.25), gamma=1),
+                rank=8, period=10, reset_on_refresh=True),
+        add_decayed_weights(0.01),
+        scale_by_lr(5e-3),
+    ),
+    adamw(5e-3, weight_decay=0.01),
+)
+uga_state = uga.init(params)
+
+
+@jax.jit
+def uga_step(params, opt_state, tokens):
+    def loss_fn(p):
+        logits, aux, _ = model.forward(p, tokens)
+        return model.loss(logits, tokens, aux)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    updates, opt_state = uga.update(grads, opt_state, params)
+    return apply_updates(params, updates), opt_state, loss
+
+
+for step, tokens in zip(range(10), stream):
+    params, uga_state, loss = uga_step(params, uga_state, jnp.asarray(tokens))
+print(f"unbiased GaLore-Adam composition OK  loss {float(loss):.4f}")

@@ -1,12 +1,44 @@
 """repro.core — the paper's contribution: unbiased gradient low-rank projection.
 
-Public API:
-  * gum / gum_matrices            — Algorithm 2 (GaLore Unbiased with Muon)
-  * unbiased_lowrank              — Algorithm 3 (general Bernoulli paradigm)
-  * galore / galore_muon / golore — Algorithm 1 baselines
+The package is organised around *composable gradient transforms*
+(:mod:`repro.core.combinators`, optax-style): the paper's central claim —
+layerwise sampling debiases ANY low-rank projection mechanism — is the API
+itself, not a family of monolithic optimizer files.
+
+Combinator API (the building blocks):
+  * chain(*transforms)            — sequential composition
+  * scale_by_momentum / scale_by_adam / scale_by_muon — base directions
+  * add_decayed_weights / scale_by_lr / scale_by_factor — tail transforms
+  * lowrank(inner, ...)           — periodic-refresh low-rank projection
+                                    wrapper (svd|subspace|random|grass),
+                                    project/back-project through the Pallas
+                                    kernel dispatch layer
+  * layerwise_unbias(base, ...)   — the paper's sampling debiasing (gamma
+                                    full-rank slots, paper/finetune
+                                    compensation) as an independent wrapper
+  * with_fira_residual(base, ...) — Fira's out-of-subspace residual
+  * with_matrix_routing(m, f)     — hidden-matrix vs fallback label routing
+
+Named optimizers (thin shims over the combinators, signatures unchanged):
+  * gum / gum_matrices            — Algorithm 2:
+                                    lowrank(layerwise_unbias(scale_by_muon))
+  * unbiased_galore_adam          — NEW: layerwise_unbias(scale_by_adam) —
+                                    an unbiased variant that is a one-line
+                                    composition, not a file
+  * unbiased_lowrank              — Algorithm 3 (general Bernoulli paradigm,
+                                    reference semantics)
+  * galore / galore_muon / golore — Algorithm 1 baselines: lowrank(base)
   * muon / adamw / sgdm / fira / lisa — paper baselines
   * projectors (svd | subspace | random | grass), newton_schulz
   * build_optimizer(OptimizerConfig)
+
+Migration note (PR 2): optimizer *state* pytrees changed shape — a named
+optimizer's state is now the tuple of its chain stages (e.g. gum:
+``MultiState(inner={"gum": (LowRankState, (), ScaleByLrState), "adamw":
+(ScaleByAdamState, (), ScaleByLrState)})``).  Checkpoints from the monolith
+era do not restore into the new layout.  Trajectories are preserved
+loss-for-loss (equivalence suite: tests/test_combinators.py vs the frozen
+:mod:`repro.core.legacy`).
 """
 from .adamw import adamw, sgdm
 from .api import (
@@ -19,10 +51,28 @@ from .api import (
     state_bytes,
     tree_paths,
 )
+from .combinators import (
+    FullUpdate,
+    LayerwiseUnbiasState,
+    LowRankState,
+    ProjGrad,
+    add_decayed_weights,
+    chain,
+    find_lowrank_states,
+    layerwise_unbias,
+    lowrank,
+    scale_by_adam,
+    scale_by_factor,
+    scale_by_lr,
+    scale_by_momentum,
+    scale_by_muon,
+    with_fira_residual,
+    with_matrix_routing,
+)
 from .factory import build_optimizer
-from .fira import fira
+from .fira import fira, fira_matrices
 from .galore import galore, galore_matrices, golore
-from .gum import gum, gum_matrices
+from .gum import gum, gum_accum_tools, gum_matrices, unbiased_galore_adam
 from .lisa import lisa
 from .lowrank_common import default_lowrank_filter
 from .muon import muon, muon_matrices
@@ -38,11 +88,17 @@ from .schedules import constant, linear_warmup, warmup_cosine
 from .unbiased import unbiased_lowrank
 
 __all__ = [
-    "OptimizerConfig", "Transform", "adamw", "apply_updates", "build_optimizer",
-    "clip_by_global_norm", "constant", "default_lowrank_filter", "fira", "galore",
-    "galore_matrices", "global_norm", "golore", "grass_projector", "gum",
-    "gum_matrices", "linear_warmup", "lisa", "make_projector", "msign_exact",
+    "FullUpdate", "LayerwiseUnbiasState", "LowRankState", "OptimizerConfig",
+    "ProjGrad", "Transform", "adamw", "add_decayed_weights", "apply_updates",
+    "build_optimizer", "chain", "clip_by_global_norm", "constant",
+    "default_lowrank_filter", "find_lowrank_states", "fira", "fira_matrices",
+    "galore", "galore_matrices", "global_norm", "golore", "grass_projector",
+    "gum", "gum_accum_tools", "gum_matrices", "layerwise_unbias",
+    "linear_warmup", "lisa", "lowrank", "make_projector", "msign_exact",
     "multi_transform", "muon", "muon_matrices", "muon_scale", "newton_schulz",
-    "random_projector", "sgdm", "state_bytes", "subspace_projector",
-    "svd_projector", "tree_paths", "unbiased_lowrank", "warmup_cosine",
+    "random_projector", "scale_by_adam", "scale_by_factor", "scale_by_lr",
+    "scale_by_momentum", "scale_by_muon", "sgdm", "state_bytes",
+    "subspace_projector", "svd_projector", "tree_paths",
+    "unbiased_galore_adam", "unbiased_lowrank", "warmup_cosine",
+    "with_fira_residual", "with_matrix_routing",
 ]

@@ -1,18 +1,25 @@
-"""AdamW (decoupled weight decay) — the paper's FT-AdamW baseline."""
+"""AdamW / SGDM — the paper's full-rank baselines, as combinator chains.
+
+Both are now one-line compositions over :mod:`repro.core.combinators`::
+
+    adamw = chain(scale_by_adam(b1, b2, eps), add_decayed_weights(wd),
+                  scale_by_lr(lr))
+    sgdm  = chain(scale_by_momentum(beta), add_decayed_weights(wd),
+                  scale_by_lr(lr))
+
+Public signatures and trajectories match the pre-combinator monoliths
+(verified loss-for-loss in tests/test_combinators.py against
+:mod:`repro.core.legacy`)."""
 from __future__ import annotations
 
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from .api import PyTree, Schedule, Transform, schedule_value
-
-
-class AdamWState(NamedTuple):
-    count: jax.Array
-    mu: PyTree
-    nu: PyTree
+from .api import Schedule, Transform
+from .combinators import (
+    add_decayed_weights,
+    chain,
+    scale_by_adam,
+    scale_by_lr,
+    scale_by_momentum,
+)
 
 
 def adamw(
@@ -22,74 +29,18 @@ def adamw(
     eps: float = 1e-8,
     weight_decay: float = 0.0,
 ) -> Transform:
-    def init(params: PyTree) -> AdamWState:
-        zeros = lambda t: jax.tree_util.tree_map(
-            lambda p: None if p is None else jnp.zeros_like(p, dtype=jnp.float32),
-            t,
-            is_leaf=lambda x: x is None,
-        )
-        return AdamWState(count=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
-
-    def update(grads: PyTree, state: AdamWState, params: PyTree):
-        count = state.count + 1
-        step_lr = schedule_value(lr, count)
-        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
-        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
-
-        def upd(g, mu, nu, p):
-            if g is None:
-                return None, None, None
-            g32 = g.astype(jnp.float32)
-            mu = b1 * mu + (1 - b1) * g32
-            nu = b2 * nu + (1 - b2) * jnp.square(g32)
-            mhat = mu / bc1
-            nhat = nu / bc2
-            u = -step_lr * (mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32))
-            return u, mu, nu
-
-        flat = jax.tree_util.tree_map(
-            upd, grads, state.mu, state.nu, params, is_leaf=lambda x: x is None
-        )
-        # tree_map returned tuples at leaves; transpose into three trees.
-        is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
-        updates = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_triple)
-        mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_triple)
-        nu = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=is_triple)
-        return updates, AdamWState(count=count, mu=mu, nu=nu)
-
-    return Transform(init, update)
+    """AdamW (decoupled weight decay) — the paper's FT-AdamW baseline."""
+    return chain(
+        scale_by_adam(b1=b1, b2=b2, eps=eps),
+        add_decayed_weights(weight_decay),
+        scale_by_lr(lr),
+    )
 
 
 def sgdm(lr: Schedule, beta: float = 0.9, weight_decay: float = 0.0) -> Transform:
     """SGD with (EMA) momentum — Property-II compliant base optimizer."""
-
-    class SGDMState(NamedTuple):
-        count: jax.Array
-        mu: PyTree
-
-    def init(params: PyTree) -> SGDMState:
-        mu = jax.tree_util.tree_map(
-            lambda p: None if p is None else jnp.zeros_like(p, dtype=jnp.float32),
-            params,
-            is_leaf=lambda x: x is None,
-        )
-        return SGDMState(count=jnp.zeros((), jnp.int32), mu=mu)
-
-    def update(grads: PyTree, state: SGDMState, params: PyTree):
-        count = state.count + 1
-        step_lr = schedule_value(lr, count)
-
-        def upd(g, mu, p):
-            if g is None:
-                return None, None
-            mu = beta * mu + g.astype(jnp.float32)
-            u = -step_lr * (mu + weight_decay * p.astype(jnp.float32))
-            return u, mu
-
-        flat = jax.tree_util.tree_map(upd, grads, state.mu, params, is_leaf=lambda x: x is None)
-        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
-        updates = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_pair)
-        mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_pair)
-        return updates, SGDMState(count=count, mu=mu)
-
-    return Transform(init, update)
+    return chain(
+        scale_by_momentum(beta=beta),
+        add_decayed_weights(weight_decay),
+        scale_by_lr(lr),
+    )

@@ -139,7 +139,9 @@ def state_bytes(state: PyTree) -> int:
 class OptimizerConfig:
     """Config resolved by :func:`repro.core.factory.build_optimizer`."""
 
-    name: str = "gum"  # gum | galore | galore_muon | golore | muon | adamw | sgdm | fira | lisa
+    # gum | galore | galore_muon | golore | muon | adamw | sgdm | fira | lisa
+    # | unbiased_galore_adam (combinator-only composition, PR 2)
+    name: str = "gum"
     lr: float = 1e-3
     weight_decay: float = 0.0
     beta: float = 0.95          # momentum (muon-family)
@@ -160,6 +162,10 @@ class OptimizerConfig:
     # the fused Pallas kernels on TPU and the jnp reference elsewhere
     # (see repro.kernels.dispatch).
     kernel_impl: str = "auto"
+    # Opt-in lane-aligned rank padding for the low-rank Pallas kernels:
+    # 128 rounds ragged ranks (e.g. r=96) up to a full MXU lane multiple for
+    # peak systolic-array utilization; 0 keeps the minimal sublane granule.
+    pad_rank_to: int = 0
     # Muon's sqrt(max(1, m/n)) RMS-matching factor.  None = each optimizer's
     # default (muon: on, matching Jordan et al.; gum: off, matching Alg. 2).
     use_muon_scale: bool | None = None

@@ -1,0 +1,1015 @@
+"""Composable optimizer combinators — the paradigm as an API.
+
+The paper's claim is that *layerwise sampling debiases any low-rank
+projection mechanism*; GUM is merely the GaLore x Muon instantiation.  This
+module makes that claim the API surface (optax-style, zero dependencies):
+
+atomic gradient transforms
+    scale_by_momentum   EMA momentum (SGDM direction; Property II holds)
+    scale_by_muon       momentum + Newton-Schulz orthogonalization
+    scale_by_adam       bias-corrected Adam direction (Property II does NOT
+                        hold — documented per-composition)
+    add_decayed_weights decoupled weight decay   u + wd * p
+    scale_by_lr         -schedule(count) * u     (terminal step of a chain)
+    scale_by_factor     constant multiplier (GaLore's alpha)
+    clip_by_global_norm global-norm gradient clipping as a chain head
+
+wrapper transforms
+    lowrank(inner, ...)           owns ALL projector state: family stacking,
+                                  periodic refresh, svd|subspace|random|grass
+                                  choice, project / back-project through the
+                                  Pallas dispatch layer (repro.kernels) —
+                                  runs ``inner`` in the projected space
+    layerwise_unbias(base, ...)   the paper's sampling debiasing (gamma
+                                  full-rank slots, paper/finetune
+                                  compensation) as an independent combinator
+    with_fira_residual(base, ...) Fira's norm-scaled out-of-subspace residual
+    with_matrix_routing(m, f)     label routing: matrices -> ``m``, the rest
+                                  (embeddings/norms/biases) -> ``f``
+
+composition
+    chain(*transforms)            sequential application, optax semantics
+
+so the paper's optimizers are one-liners::
+
+    gum = chain(lowrank(layerwise_unbias(scale_by_muon(beta=0.95))),
+                add_decayed_weights(wd), scale_by_lr(lr))
+    galore_adam = chain(lowrank(scale_by_adam(scale=0.25)),
+                        add_decayed_weights(wd), scale_by_lr(lr))
+    unbiased_galore_adam = chain(
+        lowrank(layerwise_unbias(scale_by_adam(scale=0.25))),
+        add_decayed_weights(wd), scale_by_lr(lr))   # a NEW method: no new file
+
+Protocol between ``lowrank`` and the transforms it wraps
+--------------------------------------------------------
+``lowrank`` hands its inner transform a pytree whose low-rank leaves are
+:class:`ProjGrad` objects — *lazy* projected gradients carrying the refreshed
+projector, the raw fp32 gradient, the family geometry and the kernel-dispatch
+knobs.  (``ProjGrad`` is deliberately NOT a registered pytree node, so
+``tree_map`` treats it as an opaque leaf.)  Momentum-style transforms call
+``ProjGrad.fused_momentum`` — the single fused Pallas kernel
+``R' = beta R + coeff PᵀG`` — while elementwise consumers (Adam) call
+``ProjGrad.materialize`` for the projected gradient itself.  A wrapped
+transform may return either a projected-space array (``lowrank``
+back-projects it through the fused ``back_project`` kernel) or a
+:class:`FullUpdate`-wrapped full-shape array (returned as-is — how
+``layerwise_unbias`` emits its scatter of sampled full-rank blocks).
+
+At init time the same positions hold :class:`ProjInit` leaves carrying the
+projected-space state template plus the :class:`~repro.core.lowrank_common.
+FamilyShape`, so wrappers like ``layerwise_unbias`` can size their full-rank
+slots without ever seeing real parameters.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .api import (
+    PyTree,
+    Schedule,
+    Transform,
+    multi_transform,
+    schedule_value,
+    tree_paths,
+)
+from .api import clip_by_global_norm as _clip_tree
+from .lowrank_common import (
+    FamilyShape,
+    compute_projectors,
+    default_lowrank_filter,
+    family_shape,
+    gather_blocks,
+    lowrank_state_shape,
+    proj_shape,
+    scatter_blocks,
+)
+from .newton_schulz import muon_scale, newton_schulz
+
+_IS_NONE = lambda x: x is None
+
+
+def _dispatch():
+    # Lazy: repro.kernels wants repro.core importable first (same convention
+    # as lowrank_common).
+    from repro.kernels import dispatch
+
+    return dispatch
+
+
+# ---------------------------------------------------------------------------
+# Leaf protocol objects (opaque leaves — intentionally not pytree nodes)
+# ---------------------------------------------------------------------------
+
+
+class ProjInit:
+    """Init-time stand-in for a low-rank leaf inside :func:`lowrank`.
+
+    ``low`` is a ShapeDtypeStruct of the projected-space state — transforms
+    allocate momenta with ``jnp.zeros_like(leaf.low)`` via
+    :func:`_zeros_momentum`; ``fs`` carries the full family geometry."""
+
+    __slots__ = ("fs", "low")
+
+    def __init__(self, fs: FamilyShape, low):
+        self.fs = fs
+        self.low = low
+
+
+class ProjGrad:
+    """Lazy projected gradient leaf handed to transforms inside ``lowrank``."""
+
+    __slots__ = ("p", "g", "fs", "kernel_impl", "pad_rank_to", "coeff",
+                 "reset", "refresh", "key")
+
+    def __init__(self, p, g, fs, kernel_impl, pad_rank_to=0, coeff=1.0,
+                 reset=None, refresh=False, key=None):
+        self.p = p                      # (*lead, s, r) refreshed projector
+        self.g = g                      # (*lead, m, n) raw fp32 gradient
+        self.fs = fs                    # FamilyShape (static)
+        self.kernel_impl = kernel_impl
+        self.pad_rank_to = pad_rank_to
+        self.coeff = coeff              # static float on the projected grad
+        self.reset = reset              # traced bool: zero momenta first (or None)
+        self.refresh = refresh          # traced bool period boundary (False = external)
+        self.key = key                  # sampling PRNG key (or None)
+
+    def with_coeff(self, coeff: float) -> "ProjGrad":
+        return ProjGrad(self.p, self.g, self.fs, self.kernel_impl,
+                        self.pad_rank_to, coeff, self.reset, self.refresh,
+                        self.key)
+
+    def apply_reset(self, x):
+        """Zero a momentum buffer at the period boundary (no-op if the
+        wrapping ``lowrank`` was built with ``reset_on_refresh=False``)."""
+        if self.reset is None:
+            return x
+        return jnp.where(self.reset, jnp.zeros_like(x), x)
+
+    def materialize(self):
+        """The projected gradient PᵀG / G P through the dispatch layer
+        (coeff NOT applied — elementwise consumers fold it in themselves)."""
+        return _dispatch().project(
+            self.p, self.g, side=self.fs.side, impl=self.kernel_impl,
+            pad_rank_to=self.pad_rank_to,
+        )
+
+    def fused_momentum(self, mu, beta: float):
+        """``beta * mu + coeff * PᵀG`` via the single fused Pallas kernel —
+        the per-step hot loop of every momentum-based low-rank optimizer."""
+        return _dispatch().lowrank_update(
+            self.p, self.g, self.apply_reset(mu), beta, self.coeff,
+            side=self.fs.side, impl=self.kernel_impl,
+            pad_rank_to=self.pad_rank_to,
+        )
+
+    def back(self, s):
+        """Back-project a projected-space array to full shape."""
+        return _dispatch().back_project(
+            self.p, s, side=self.fs.side, impl=self.kernel_impl,
+            pad_rank_to=self.pad_rank_to,
+        )
+
+
+class FullUpdate:
+    """Marker a lowrank-inner transform returns for a leaf that is ALREADY in
+    full (m, n) space and must not be back-projected again."""
+
+    __slots__ = ("u",)
+
+    def __init__(self, u):
+        self.u = u
+
+
+class RefreshMsg:
+    """Per-leaf message for the external-refresh hook (see ``lowrank``)."""
+
+    __slots__ = ("fs", "key")
+
+    def __init__(self, fs: FamilyShape, key):
+        self.fs = fs
+        self.key = key
+
+
+def _zeros_momentum(leaf):
+    if leaf is None:
+        return None
+    if isinstance(leaf, ProjInit):
+        leaf = leaf.low
+    return jnp.zeros(leaf.shape, jnp.float32)
+
+
+def _reset_floats(tree: PyTree, refresh) -> PyTree:
+    """Zero every inexact array leaf when ``refresh`` is true (ints — counts,
+    indices — pass through untouched)."""
+
+    def one(x):
+        if x is None or not hasattr(x, "dtype"):
+            return x
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            return x
+        return jnp.where(refresh, jnp.zeros_like(x), x)
+
+    return jax.tree_util.tree_map(one, tree, is_leaf=_IS_NONE)
+
+
+def _transpose(flat: PyTree, n: int) -> tuple:
+    is_tup = lambda x: isinstance(x, tuple) and len(x) == n
+    return tuple(
+        jax.tree_util.tree_map(lambda t, i=i: t[i], flat, is_leaf=is_tup)
+        for i in range(n)
+    )
+
+
+# ---------------------------------------------------------------------------
+# chain
+# ---------------------------------------------------------------------------
+
+
+def chain(*transforms: Transform) -> Transform:
+    """Sequentially compose gradient transforms (optax semantics): each
+    transform maps (updates, state, params) -> (updates, state); state is the
+    tuple of inner states.
+
+    A chain whose FIRST transform speaks the lowrank leaf protocol (e.g.
+    ``chain(layerwise_unbias(...), scale_by_factor(...))``) forwards that
+    transform's ``wants_sample_key`` / ``refresh_state`` hooks, so such a
+    chain can itself be the inner transform of :func:`lowrank`."""
+
+    def init(params: PyTree) -> tuple:
+        return tuple(t.init(params) for t in transforms)
+
+    def update(updates: PyTree, state: tuple, params: PyTree):
+        new_states = []
+        for t, s in zip(transforms, state):
+            updates, ns = t.update(updates, s, params)
+            new_states.append(ns)
+        return updates, tuple(new_states)
+
+    if transforms and getattr(transforms[0].update, "wants_sample_key", False):
+        update.wants_sample_key = True
+    head_refresh = transforms and getattr(transforms[0].update, "refresh_state", None)
+    if head_refresh:
+        def refresh_state(state, msgs, refresh_now):
+            return (head_refresh(state[0], msgs, refresh_now),) + tuple(state[1:])
+
+        update.refresh_state = refresh_state
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# atomic transforms
+# ---------------------------------------------------------------------------
+
+
+def scale_by_momentum(beta: float = 0.9, use_muon_scale: bool = False) -> Transform:
+    """EMA momentum direction ``mu' = beta mu + g`` (Property-II compliant).
+    On :class:`ProjGrad` leaves the update runs through the fused low-rank
+    kernel.  ``use_muon_scale`` applies Muon's sqrt(max(1, m/n)) factor —
+    only meaningful as the GUM ``base="sgdm"`` variant's scaling."""
+
+    def init(params: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(_zeros_momentum, params, is_leaf=_IS_NONE)
+
+    def update(updates: PyTree, mu: PyTree, params: PyTree):
+        def upd(g, m, p):
+            if g is None:
+                return (None, None)
+            if isinstance(g, ProjGrad):
+                m2 = g.fused_momentum(m, beta)
+                o = m2
+                if use_muon_scale:
+                    o = muon_scale((g.fs.m, g.fs.n)) * o
+                return (o, m2)
+            m2 = beta * m + g.astype(jnp.float32)
+            o = m2
+            if use_muon_scale:
+                shape = p.shape if p is not None else g.shape
+                o = muon_scale(shape) * o
+            return (o, m2)
+
+        flat = jax.tree_util.tree_map(upd, updates, mu, params, is_leaf=_IS_NONE)
+        out, new_mu = _transpose(flat, 2)
+        return out, new_mu
+
+    return Transform(init, update)
+
+
+def scale_by_muon(
+    beta: float = 0.95,
+    ns_steps: int = 5,
+    nesterov: bool = False,
+    use_muon_scale: bool = False,
+    kernel_impl: str = "auto",
+) -> Transform:
+    """Momentum + Newton-Schulz orthogonalization (the Muon direction).
+
+    Full-rank leaves get plain EMA momentum (+ optional Nesterov); ProjGrad
+    leaves run the fused low-rank momentum kernel, then NS in the projected
+    space (Property II: NS(P X) = P NS(X) makes this exact)."""
+
+    def init(params: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(_zeros_momentum, params, is_leaf=_IS_NONE)
+
+    def update(updates: PyTree, mu: PyTree, params: PyTree):
+        def upd(g, m, p):
+            if g is None:
+                return (None, None)
+            if isinstance(g, ProjGrad):
+                if nesterov:
+                    r_g = g.materialize()
+                    if g.coeff != 1.0:
+                        r_g = g.coeff * r_g
+                    m2 = beta * g.apply_reset(m) + r_g
+                    mom = beta * m2 + r_g
+                else:
+                    m2 = g.fused_momentum(m, beta)
+                    mom = m2
+                o = newton_schulz(mom, steps=ns_steps, impl=kernel_impl)
+                if use_muon_scale:
+                    o = muon_scale((g.fs.m, g.fs.n)) * o
+                return (o, m2)
+            g32 = g.astype(jnp.float32)
+            m2 = beta * m + g32
+            mom = beta * m2 + g32 if nesterov else m2
+            o = newton_schulz(mom, steps=ns_steps, impl=kernel_impl)
+            if use_muon_scale:
+                shape = p.shape if p is not None else g.shape
+                o = muon_scale(shape) * o
+            return (o, m2)
+
+        flat = jax.tree_util.tree_map(upd, updates, mu, params, is_leaf=_IS_NONE)
+        out, new_mu = _transpose(flat, 2)
+        return out, new_mu
+
+    return Transform(init, update)
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def scale_by_adam(
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    scale: float = 1.0,
+) -> Transform:
+    """Bias-corrected Adam direction, optionally pre-scaled (GaLore's alpha).
+
+    Property II does NOT hold for Adam: inside ``lowrank`` this reproduces
+    GaLore's (biased) semantics, and inside ``layerwise_unbias`` the
+    *gradient estimate* is debiased even though the update is not exactly
+    full Adam in expectation (the AdaRankGrad-style extension)."""
+
+    def init(params: PyTree) -> ScaleByAdamState:
+        zeros = lambda: jax.tree_util.tree_map(
+            _zeros_momentum, params, is_leaf=_IS_NONE
+        )
+        return ScaleByAdamState(
+            count=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros()
+        )
+
+    def update(updates: PyTree, state: ScaleByAdamState, params: PyTree):
+        count = state.count + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(g, m, v, p):
+            if g is None:
+                return (None, None, None)
+            if isinstance(g, ProjGrad):
+                g32 = g.materialize()
+                if g.coeff != 1.0:
+                    g32 = g.coeff * g32
+                m = g.apply_reset(m)
+                v = g.apply_reset(v)
+            else:
+                g32 = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g32
+            v2 = b2 * v + (1 - b2) * jnp.square(g32)
+            s = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            if scale != 1.0:
+                s = scale * s
+            return (s, m2, v2)
+
+        flat = jax.tree_util.tree_map(
+            upd, updates, state.mu, state.nu, params, is_leaf=_IS_NONE
+        )
+        out, mu, nu = _transpose(flat, 3)
+        return out, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return Transform(init, update)
+
+
+def add_decayed_weights(weight_decay: float = 0.0) -> Transform:
+    """Decoupled weight decay ``u + wd * p`` (apply before scale_by_lr)."""
+
+    def init(params: PyTree):
+        return ()
+
+    def update(updates: PyTree, state, params: PyTree):
+        if weight_decay == 0.0:
+            return updates, ()
+        out = jax.tree_util.tree_map(
+            lambda u, p: None if u is None else u + weight_decay * p.astype(jnp.float32),
+            updates, params, is_leaf=_IS_NONE,
+        )
+        return out, ()
+
+    return Transform(init, update)
+
+
+class ScaleByLrState(NamedTuple):
+    count: jax.Array
+
+
+def scale_by_lr(lr: Schedule) -> Transform:
+    """Terminal step: ``-schedule(count) * u`` (updates are *added* to
+    params, so the minus sign lives here)."""
+
+    def init(params: PyTree) -> ScaleByLrState:
+        return ScaleByLrState(count=jnp.zeros((), jnp.int32))
+
+    def update(updates: PyTree, state: ScaleByLrState, params: PyTree):
+        count = state.count + 1
+        step = schedule_value(lr, count)
+        out = jax.tree_util.tree_map(
+            lambda u: None if u is None else (-step) * u,
+            updates, is_leaf=_IS_NONE,
+        )
+        return out, ScaleByLrState(count=count)
+
+    return Transform(init, update)
+
+
+def scale_by_factor(factor: float) -> Transform:
+    """Constant multiplier (GaLore/Fira's alpha applied outside the base).
+    Protocol-aware, so it also composes INSIDE lowrank(): ProjGrad leaves
+    scale lazily through their coeff, FullUpdate leaves through the payload."""
+
+    def init(params: PyTree):
+        return ()
+
+    def update(updates: PyTree, state, params: PyTree):
+        def one(u):
+            if u is None:
+                return None
+            if isinstance(u, ProjGrad):
+                return u.with_coeff(factor * u.coeff)
+            if isinstance(u, FullUpdate):
+                return FullUpdate(factor * u.u)
+            return factor * u
+
+        out = jax.tree_util.tree_map(one, updates, is_leaf=_IS_NONE)
+        return out, ()
+
+    return Transform(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Transform:
+    """Global-norm gradient clipping as a chain head (the transform twin of
+    :func:`repro.core.api.clip_by_global_norm`)."""
+
+    def init(params: PyTree):
+        return ()
+
+    def update(updates: PyTree, state, params: PyTree):
+        return _clip_tree(updates, max_norm), ()
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def with_matrix_routing(
+    matrix: Transform,
+    fallback: Transform,
+    *,
+    matrix_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+    matrix_label: str = "matrix",
+    fallback_label: str = "adamw",
+) -> Transform:
+    """Route hidden-matrix leaves to ``matrix`` and everything else
+    (embeddings / head / norms / biases / routers) to ``fallback`` — the
+    label plumbing every paper optimizer previously re-implemented."""
+
+    def label_fn(params: PyTree) -> PyTree:
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda path, p: matrix_label if matrix_filter(path, p) else fallback_label,
+            paths, params,
+        )
+
+    return multi_transform({matrix_label: matrix, fallback_label: fallback}, label_fn)
+
+
+# ---------------------------------------------------------------------------
+# lowrank — the projection wrapper
+# ---------------------------------------------------------------------------
+
+
+class LowRankState(NamedTuple):
+    count: jax.Array
+    projs: PyTree   # per-leaf projector (*lead, s, r) arrays (None elsewhere)
+    inner: PyTree   # the wrapped transform's state (projected space)
+
+
+def lowrank(
+    inner: Transform,
+    *,
+    rank: int = 128,
+    period: int = 200,
+    projector: str = "svd",
+    seed: int = 0,
+    subspace_iters: int = 2,
+    reset_on_refresh: bool = False,
+    external_refresh: bool = False,
+    kernel_impl: str = "auto",
+    pad_rank_to: int = 0,
+) -> Transform:
+    """Run ``inner`` inside a periodically-refreshed low-rank subspace.
+
+    Owns everything projection-related: per-family GaLore-side choice,
+    projector computation (``svd | subspace | random | grass``) every
+    ``period`` steps, project / back-project through the Pallas dispatch
+    layer (``kernel_impl``, opt-in ``pad_rank_to`` lane alignment), and the
+    ProjGrad/FullUpdate leaf protocol described in the module docstring.
+
+    ``reset_on_refresh`` zeroes the inner momenta at each period boundary
+    (GUM always does; GaLore only with ``reset_on_update``).
+
+    ``external_refresh=True`` skips the in-update refresh entirely; callers
+    drive it through the attached ``update.refresh(grads, state, params)``
+    hook instead (the projected-space gradient-accumulation path, which must
+    refresh against a raw microbatch gradient *before* projecting)."""
+    wants_key = bool(getattr(inner.update, "wants_sample_key", False))
+    inner_refresh_state = getattr(inner.update, "refresh_state", None)
+
+    def _leaf_key(base_key, i):
+        k = jax.random.fold_in(base_key, i)
+        if wants_key:
+            k_proj, k_samp = jax.random.split(k)
+            return k_proj, k_samp
+        return k, None
+
+    def init(params: PyTree) -> LowRankState:
+        def init_leaf(p):
+            if p is None:
+                return (None, None)
+            fs = family_shape(p, rank)
+            proj = jnp.zeros(proj_shape(fs), jnp.float32)
+            tmpl = ProjInit(
+                fs, jax.ShapeDtypeStruct(lowrank_state_shape(fs), jnp.float32)
+            )
+            return (proj, tmpl)
+
+        flat = jax.tree_util.tree_map(init_leaf, params, is_leaf=_IS_NONE)
+        projs, tmpls = _transpose(flat, 2)
+        return LowRankState(
+            count=jnp.zeros((), jnp.int32), projs=projs, inner=inner.init(tmpls)
+        )
+
+    def update(updates: PyTree, state: LowRankState, params: PyTree):
+        count = state.count + 1
+        refresh = (count - 1) % period == 0
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=_IS_NONE)
+        g_leaves = treedef.flatten_up_to(updates)
+        p_leaves = treedef.flatten_up_to(state.projs)
+
+        msg_leaves, proj_leaves = [], []
+        for i, (g, proj, p) in enumerate(zip(g_leaves, p_leaves, leaves)):
+            if g is None or p is None:
+                msg_leaves.append(None)
+                proj_leaves.append(proj)
+                continue
+            fs = family_shape(p, rank)
+            key_proj, key_samp = _leaf_key(base_key, i)
+            g32 = g.astype(jnp.float32)
+            if external_refresh:
+                p_proj = proj
+            else:
+                p_proj = jax.lax.cond(
+                    refresh,
+                    lambda _: compute_projectors(
+                        projector, g32, fs.rank, key_proj, fs.side, subspace_iters
+                    ),
+                    lambda _: proj,
+                    None,
+                )
+            msg_leaves.append(ProjGrad(
+                p=p_proj, g=g32, fs=fs, kernel_impl=kernel_impl,
+                pad_rank_to=pad_rank_to, coeff=1.0,
+                reset=(refresh if (reset_on_refresh and not external_refresh) else None),
+                refresh=(False if external_refresh else refresh),
+                key=key_samp,
+            ))
+            proj_leaves.append(p_proj)
+
+        inner_updates = jax.tree_util.tree_unflatten(treedef, msg_leaves)
+        inner_out, new_inner = inner.update(inner_updates, state.inner, params)
+
+        out_leaves = []
+        for msg, o in zip(msg_leaves, treedef.flatten_up_to(inner_out)):
+            if msg is None or o is None:
+                out_leaves.append(None)
+            elif isinstance(o, FullUpdate):
+                out_leaves.append(o.u)
+            else:
+                out_leaves.append(msg.back(o))
+
+        return (
+            jax.tree_util.tree_unflatten(treedef, out_leaves),
+            LowRankState(
+                count=count,
+                projs=jax.tree_util.tree_unflatten(treedef, proj_leaves),
+                inner=new_inner,
+            ),
+        )
+
+    def refresh(grads: PyTree, state: LowRankState, params: PyTree) -> LowRankState:
+        """External period-boundary refresh against raw gradients: recompute
+        projectors, resample the inner transform's block assignments, zero
+        momenta — leaving ``count`` untouched (the subsequent ``update`` on
+        the same step sees fresh state and, in external mode, never
+        refreshes itself).  Key derivation matches the in-update path
+        exactly, so trajectories are identical either way."""
+        count = state.count + 1
+        refresh_now = (count - 1) % period == 0
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=_IS_NONE)
+        g_leaves = treedef.flatten_up_to(grads)
+        p_leaves = treedef.flatten_up_to(state.projs)
+
+        new_projs, msgs = [], []
+        for i, (g, proj, p) in enumerate(zip(g_leaves, p_leaves, leaves)):
+            if g is None or p is None or proj is None:
+                new_projs.append(proj)
+                msgs.append(None)
+                continue
+            fs = family_shape(p, rank)
+            key_proj, key_samp = _leaf_key(base_key, i)
+            g32 = g.astype(jnp.float32)
+            p_new = jax.lax.cond(
+                refresh_now,
+                lambda _: compute_projectors(
+                    projector, g32, fs.rank, key_proj, fs.side, subspace_iters
+                ),
+                lambda _: proj,
+                None,
+            )
+            new_projs.append(p_new)
+            msgs.append(RefreshMsg(fs=fs, key=key_samp))
+
+        msgs_tree = jax.tree_util.tree_unflatten(treedef, msgs)
+        if inner_refresh_state is not None:
+            new_inner = inner_refresh_state(state.inner, msgs_tree, refresh_now)
+        elif reset_on_refresh:
+            new_inner = _reset_floats(state.inner, refresh_now)
+        else:
+            new_inner = state.inner
+        return LowRankState(
+            count=state.count,
+            projs=jax.tree_util.tree_unflatten(treedef, new_projs),
+            inner=new_inner,
+        )
+
+    update.refresh = refresh
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# layerwise_unbias — the paper's debiasing, as a combinator
+# ---------------------------------------------------------------------------
+
+
+class LayerwiseUnbiasState(NamedTuple):
+    low: PyTree    # base state over the projected-space leaves
+    full: PyTree   # base state over the (gamma, m, n) full-rank slots
+    idx: PyTree    # per-leaf (gamma,) int32 slot -> block assignment
+
+
+def layerwise_unbias(
+    base: Transform,
+    *,
+    gamma: int = 2,
+    compensation: str = "paper",
+) -> Transform:
+    """Layerwise-sampling debiasing (Lemma 1) around ANY base transform.
+
+    Per period, a fixed count ``gamma`` of blocks per family runs the base
+    on the *compensated full-rank* gradient (``gamma`` static slots,
+    resampled at each projector refresh); the rest run it on the scaled
+    projected gradient.  Coefficients per ``compensation``:
+
+      paper    : c_low = 1/(1-q),  c_full = 1/q,  c_comp = 1
+      finetune : c_low = 1,        c_full = 1/q,  c_comp = 1-q   (App. C.1)
+
+    Must be composed inside :func:`lowrank` (it consumes the ProjGrad
+    protocol and sizes its slots from the ProjInit templates).  With a
+    Property-II base (scale_by_muon / scale_by_momentum) the expected update
+    equals the full-rank base update — this is GUM; with scale_by_adam the
+    *gradient estimate* is unbiased (the new unbiased GaLore-Adam)."""
+    if compensation not in ("paper", "finetune"):
+        raise ValueError(f"unknown compensation: {compensation}")
+
+    def _coeffs(fs: FamilyShape):
+        g_f = min(gamma, fs.L)
+        q = g_f / fs.L
+        if q >= 1.0:
+            c_low = 0.0  # low branch fully overwritten by the scatter
+        elif compensation == "finetune":
+            c_low = 1.0
+        else:
+            c_low = 1.0 / max(1.0 - q, 1e-12)
+        c_comp = (1.0 - q) if compensation == "finetune" else 1.0
+        c_full = (1.0 / q) if g_f > 0 else 0.0
+        return g_f, q, c_low, c_comp, c_full
+
+    _is_tmpl = lambda x: x is None or isinstance(x, ProjInit)
+
+    def init(params: PyTree) -> LayerwiseUnbiasState:
+        def full_tmpl(t):
+            if t is None:
+                return None
+            if not isinstance(t, ProjInit):
+                raise TypeError(
+                    "layerwise_unbias must be composed inside lowrank() "
+                    f"(init saw a {type(t).__name__} leaf, expected ProjInit)"
+                )
+            g_f = min(gamma, t.fs.L)
+            if g_f == 0:
+                return None
+            return jax.ShapeDtypeStruct((g_f, t.fs.m, t.fs.n), jnp.float32)
+
+        def idx0(t):
+            if t is None:
+                return None
+            g_f = min(gamma, t.fs.L)
+            if g_f == 0:
+                return None
+            return jnp.arange(g_f, dtype=jnp.int32)
+
+        def low_tmpl(t):
+            # q >= 1 (gamma covers every block): the scatter overwrites the
+            # whole family, so the low branch carries no state and does no
+            # work for this leaf (mirrors the monoliths' `if q < 1` guard).
+            if t is None or min(gamma, t.fs.L) >= t.fs.L:
+                return None
+            return t
+
+        fulls = jax.tree_util.tree_map(full_tmpl, params, is_leaf=_is_tmpl)
+        lows = jax.tree_util.tree_map(low_tmpl, params, is_leaf=_is_tmpl)
+        idx = jax.tree_util.tree_map(idx0, params, is_leaf=_is_tmpl)
+        return LayerwiseUnbiasState(
+            low=base.init(lows), full=base.init(fulls), idx=idx
+        )
+
+    _is_pg = lambda x: x is None or isinstance(x, ProjGrad)
+
+    def update(updates: PyTree, state: LayerwiseUnbiasState, params: PyTree):
+        g_leaves, treedef = jax.tree_util.tree_flatten(updates, is_leaf=_is_pg)
+        idx_leaves = treedef.flatten_up_to(state.idx)
+        param_leaves = treedef.flatten_up_to(params)
+        d = _dispatch()
+
+        low_upds, new_idx, full_upds, full_params = [], [], [], []
+        refresh_any = False
+        for g, idx, p in zip(g_leaves, idx_leaves, param_leaves):
+            if g is None:
+                low_upds.append(None)
+                new_idx.append(None)
+                full_upds.append(None)
+                full_params.append(None)
+                continue
+            if not isinstance(g, ProjGrad):
+                raise TypeError(
+                    "layerwise_unbias must be composed inside lowrank() "
+                    f"(got a {type(g).__name__} leaf)"
+                )
+            fs = g.fs
+            g_f, q, c_low, c_comp, c_full = _coeffs(fs)
+            # q >= 1: no low branch at all (state is None too — see init)
+            low_upds.append(g.with_coeff(c_low) if q < 1.0 else None)
+            if g_f == 0:
+                new_idx.append(None)
+                full_upds.append(None)
+                full_params.append(None)
+                continue
+            if g.refresh is False:  # static: external-refresh mode
+                idx2 = idx
+            else:
+                refresh_any = g.refresh
+                fresh = jax.random.choice(
+                    g.key, fs.L, (g_f,), replace=False
+                ).astype(jnp.int32)
+                idx2 = jnp.where(g.refresh, fresh, idx)
+            new_idx.append(idx2)
+            g_s = gather_blocks(g.g, idx2, fs)        # (gamma, m, n)
+            p_s = gather_blocks(g.p, idx2, fs)        # (gamma, s, r)
+            pptg = d.back_project(
+                p_s,
+                d.project(p_s, g_s, side=fs.side, impl=g.kernel_impl,
+                          pad_rank_to=g.pad_rank_to),
+                side=fs.side, impl=g.kernel_impl, pad_rank_to=g.pad_rank_to,
+            )
+            resid = g_s - c_comp * pptg
+            full_upds.append(c_full * resid)
+            full_params.append(gather_blocks(p, idx2, fs))
+
+        # Slot -> block assignments change at the boundary, so the slots'
+        # base momenta always reset there (independent of reset_on_refresh).
+        full_state = state.full
+        if refresh_any is not False:
+            full_state = _reset_floats(state.full, refresh_any)
+
+        low_out, new_low = base.update(
+            jax.tree_util.tree_unflatten(treedef, low_upds), state.low, params
+        )
+        full_out, new_full = base.update(
+            jax.tree_util.tree_unflatten(treedef, full_upds),
+            full_state,
+            jax.tree_util.tree_unflatten(treedef, full_params),
+        )
+
+        lo_leaves = treedef.flatten_up_to(low_out)
+        fo_leaves = treedef.flatten_up_to(full_out)
+        outs = []
+        for g, lo, fo, idx2 in zip(g_leaves, lo_leaves, fo_leaves, new_idx):
+            if g is None:
+                outs.append(None)
+                continue
+            fs = g.fs
+            g_f, q, *_ = _coeffs(fs)
+            if q < 1.0:
+                u = g.back(lo)
+            else:
+                u = jnp.zeros(fs.lead + (fs.m, fs.n), jnp.float32)
+            if g_f > 0:
+                u = scatter_blocks(u, idx2, fo, fs)
+            outs.append(FullUpdate(u))
+
+        return (
+            jax.tree_util.tree_unflatten(treedef, outs),
+            LayerwiseUnbiasState(
+                low=new_low,
+                full=new_full,
+                idx=jax.tree_util.tree_unflatten(treedef, new_idx),
+            ),
+        )
+
+    _is_msg = lambda x: x is None or isinstance(x, RefreshMsg)
+
+    def refresh_state(state: LayerwiseUnbiasState, msgs: PyTree, refresh_now):
+        """External-refresh hook (driven by ``lowrank``'s refresh): resample
+        slot assignments and zero both branches' momenta."""
+        msg_leaves, treedef = jax.tree_util.tree_flatten(msgs, is_leaf=_is_msg)
+        idx_leaves = treedef.flatten_up_to(state.idx)
+        new_idx = []
+        for msg, idx in zip(msg_leaves, idx_leaves):
+            if msg is None or idx is None:
+                new_idx.append(idx)
+                continue
+            g_f = int(idx.shape[0])
+            fresh = jax.random.choice(
+                msg.key, msg.fs.L, (g_f,), replace=False
+            ).astype(jnp.int32)
+            new_idx.append(jnp.where(refresh_now, fresh, idx))
+        return LayerwiseUnbiasState(
+            low=_reset_floats(state.low, refresh_now),
+            full=_reset_floats(state.full, refresh_now),
+            idx=jax.tree_util.tree_unflatten(treedef, new_idx),
+        )
+
+    update.wants_sample_key = True
+    update.refresh_state = refresh_state
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# with_fira_residual — Fira's out-of-subspace residual, as a combinator
+# ---------------------------------------------------------------------------
+
+
+class FiraResidualState(NamedTuple):
+    inner: PyTree
+    prev_norm: PyTree  # per-leaf (*lead,) norm-growth-limiter memory
+
+
+def with_fira_residual(
+    base: Transform,
+    *,
+    limiter: float = 1.01,
+    eps: float = 1e-8,
+) -> Transform:
+    """Fira (Chen et al., 2024): add back the gradient component OUTSIDE the
+    projected subspace, scaled per block by phi = ||s|| / ||PᵀG|| (s = the
+    base's projected-space update), with the norm-growth limiter.  Must be
+    composed inside :func:`lowrank`; no unbiasedness guarantee (the paper's
+    point of comparison)."""
+    _is_tmpl = lambda x: x is None or isinstance(x, ProjInit)
+    _is_pg = lambda x: x is None or isinstance(x, ProjGrad)
+
+    def init(params: PyTree) -> FiraResidualState:
+        def pn(t):
+            return None if t is None else jnp.zeros(t.fs.lead, jnp.float32)
+
+        return FiraResidualState(
+            inner=base.init(params),
+            prev_norm=jax.tree_util.tree_map(pn, params, is_leaf=_is_tmpl),
+        )
+
+    def update(updates: PyTree, state: FiraResidualState, params: PyTree):
+        g_leaves, treedef = jax.tree_util.tree_flatten(updates, is_leaf=_is_pg)
+
+        r_gs, reset = [], None
+        for g in g_leaves:
+            if g is None:
+                r_gs.append(None)
+                continue
+            if not isinstance(g, ProjGrad):
+                raise TypeError("with_fira_residual must be composed inside lowrank()")
+            reset = g.reset if g.reset is not None else reset
+            r_gs.append(g.materialize())
+
+        # The base consumes plain arrays here, so lowrank's ProjGrad.reset
+        # never reaches it — honor reset_on_refresh ourselves (keeps the
+        # in-update and external-refresh paths trajectory-identical).
+        inner_state, prev_norm = state.inner, state.prev_norm
+        if reset is not None:
+            inner_state = _reset_floats(inner_state, reset)
+            prev_norm = _reset_floats(prev_norm, reset)
+        state = FiraResidualState(inner=inner_state, prev_norm=prev_norm)
+
+        s_out, new_inner = base.update(
+            jax.tree_util.tree_unflatten(treedef, r_gs), state.inner, params
+        )
+
+        s_leaves = treedef.flatten_up_to(s_out)
+        pn_leaves = treedef.flatten_up_to(state.prev_norm)
+        outs, new_pn = [], []
+        for g, r_g, s, prev in zip(g_leaves, r_gs, s_leaves, pn_leaves):
+            if g is None:
+                outs.append(None)
+                new_pn.append(prev)
+                continue
+            resid = g.g - g.back(r_g)
+            s_norm = jnp.linalg.norm(s, axis=(-2, -1))
+            rg_norm = jnp.linalg.norm(r_g, axis=(-2, -1))
+            phi = s_norm / (rg_norm + eps)
+            scaled = phi[..., None, None] * resid
+
+            rnorm = jnp.linalg.norm(scaled, axis=(-2, -1))
+            cap = jnp.where(prev > 0, limiter * prev, rnorm)
+            shrink = jnp.minimum(1.0, cap / (rnorm + eps))
+            scaled = scaled * shrink[..., None, None]
+            new_pn.append(rnorm * shrink)
+
+            outs.append(FullUpdate(g.back(s) + scaled))
+
+        return (
+            jax.tree_util.tree_unflatten(treedef, outs),
+            FiraResidualState(
+                inner=new_inner,
+                prev_norm=jax.tree_util.tree_unflatten(treedef, new_pn),
+            ),
+        )
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# state introspection
+# ---------------------------------------------------------------------------
+
+
+def find_lowrank_states(state: PyTree) -> list[LowRankState]:
+    """Every :class:`LowRankState` inside an optimizer state (benchmarks and
+    tests read projectors through this instead of guessing chain indices)."""
+    found: list[LowRankState] = []
+
+    def walk(s):
+        if isinstance(s, LowRankState):
+            found.append(s)
+            return
+        if isinstance(s, tuple):
+            for c in s:
+                walk(c)
+        elif isinstance(s, dict):
+            for c in s.values():
+                walk(c)
+
+    walk(state)
+    return found

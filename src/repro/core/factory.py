@@ -1,7 +1,14 @@
-"""Optimizer factory: OptimizerConfig -> Transform.
+"""Optimizer factory: OptimizerConfig -> combinator-composed Transform.
+
+Every named optimizer resolves to a :mod:`repro.core.combinators` chain
+(built by the thin shims in gum/galore/fira/muon/adamw) — public names and
+signatures are unchanged from the monolith era, and the equivalence suite
+(tests/test_combinators.py) proves loss-for-loss parity against
+:mod:`repro.core.legacy`.
 
 ``cfg.kernel_impl`` is forwarded to every optimizer with a low-rank /
-Newton–Schulz hot loop (gum, galore, galore_muon, golore, fira, muon);
+Newton–Schulz hot loop (gum, galore, galore_muon, golore, fira, muon,
+unbiased_galore_adam); ``cfg.pad_rank_to`` to every low-rank optimizer;
 ``cfg.use_muon_scale`` (None = per-optimizer default) to muon and gum.
 """
 from __future__ import annotations
@@ -10,7 +17,7 @@ from .adamw import adamw, sgdm
 from .api import OptimizerConfig, Transform
 from .fira import fira
 from .galore import galore, golore
-from .gum import gum
+from .gum import gum, unbiased_galore_adam
 from .lisa import lisa
 from .muon import muon
 
@@ -29,18 +36,19 @@ def build_optimizer(cfg: OptimizerConfig) -> Transform:
         return galore(
             cfg.lr, rank=cfg.rank, period=cfg.period, projector=cfg.projector,
             base="adam", weight_decay=cfg.weight_decay, seed=cfg.seed,
-            kernel_impl=cfg.kernel_impl,
+            kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
         )
     if name == "galore_muon":
         return galore(
             cfg.lr, rank=cfg.rank, period=cfg.period, projector=cfg.projector,
             base="muon", beta=cfg.beta, ns_steps=cfg.ns_steps,
             weight_decay=cfg.weight_decay, seed=cfg.seed,
-            kernel_impl=cfg.kernel_impl,
+            kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
         )
     if name == "golore":
         return golore(cfg.lr, rank=cfg.rank, period=cfg.period, base=cfg.base,
-                      seed=cfg.seed, kernel_impl=cfg.kernel_impl)
+                      seed=cfg.seed, kernel_impl=cfg.kernel_impl,
+                      pad_rank_to=cfg.pad_rank_to)
     if name == "gum":
         kw = {} if cfg.use_muon_scale is None else {"use_muon_scale": cfg.use_muon_scale}
         return gum(
@@ -48,11 +56,19 @@ def build_optimizer(cfg: OptimizerConfig) -> Transform:
             projector=cfg.projector, base=cfg.base, beta=cfg.beta,
             ns_steps=cfg.ns_steps, weight_decay=cfg.weight_decay,
             compensation=cfg.compensation, seed=cfg.seed,
-            kernel_impl=cfg.kernel_impl, **kw,
+            kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to, **kw,
+        )
+    if name == "unbiased_galore_adam":
+        return unbiased_galore_adam(
+            cfg.lr, rank=cfg.rank, gamma=cfg.gamma, period=cfg.period,
+            projector=cfg.projector, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+            weight_decay=cfg.weight_decay, compensation=cfg.compensation,
+            seed=cfg.seed, kernel_impl=cfg.kernel_impl,
+            pad_rank_to=cfg.pad_rank_to,
         )
     if name == "fira":
         return fira(cfg.lr, rank=cfg.rank, period=cfg.period, seed=cfg.seed,
-                    kernel_impl=cfg.kernel_impl)
+                    kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to)
     if name == "lisa":
         return lisa(cfg.lr, gamma=cfg.gamma, period=cfg.period, seed=cfg.seed)
     raise ValueError(f"unknown optimizer: {cfg.name!r}")

@@ -6,40 +6,33 @@ low-rank Adam update norm and the low-rank gradient norm, with Fira's
 norm-growth limiter on the residual term.  No unbiasedness guarantee (the
 paper's point of comparison).
 
-``kernel_impl`` routes the projection GEMM through the fused Pallas kernel
-(repro.kernels.dispatch); the Adam moments and residual stay in jnp since
-they consume the projected gradient elementwise.
+Now a pure composition (see :mod:`repro.core.combinators`)::
+
+    fira = chain(lowrank(with_fira_residual(scale_by_adam())),
+                 scale_by_factor(alpha), scale_by_lr(lr))
+
+``kernel_impl`` routes the projection / back-projection GEMMs through the
+fused Pallas kernels (repro.kernels.dispatch); the Adam moments and residual
+stay in jnp since they consume the projected gradient elementwise.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from .adamw import adamw
-from .api import PyTree, Schedule, Transform, multi_transform, schedule_value, tree_paths
-from .lowrank_common import (
-    back_project,
-    compute_projectors,
-    default_lowrank_filter,
-    family_shape,
-    lowrank_state_shape,
-    proj_shape,
-    project_dispatched,
+from .api import Schedule, Transform
+from .combinators import (
+    chain,
+    lowrank,
+    scale_by_adam,
+    scale_by_factor,
+    scale_by_lr,
+    with_fira_residual,
+    with_matrix_routing,
 )
-
-
-class FiraFamilyState(NamedTuple):
-    p: jax.Array
-    m1: jax.Array
-    m2: jax.Array
-    prev_resid_norm: jax.Array  # (L,) norm-growth limiter memory
-
-
-class FiraState(NamedTuple):
-    count: jax.Array
-    families: PyTree
+from .lowrank_common import default_lowrank_filter
 
 
 def fira_matrices(
@@ -54,84 +47,19 @@ def fira_matrices(
     limiter: float = 1.01,
     seed: int = 0,
     kernel_impl: str = "auto",
+    pad_rank_to: int = 0,
 ) -> Transform:
-    def init(params: PyTree) -> FiraState:
-        def init_family(p_leaf):
-            if p_leaf is None:
-                return None
-            fs = family_shape(p_leaf, rank)
-            st = jnp.zeros(lowrank_state_shape(fs), jnp.float32)
-            return FiraFamilyState(
-                p=jnp.zeros(proj_shape(fs), jnp.float32),
-                m1=st,
-                m2=st,
-                prev_resid_norm=jnp.zeros(fs.lead, jnp.float32),
-            )
-
-        fams = jax.tree_util.tree_map(
-            init_family, params, is_leaf=lambda x: x is None
-        )
-        return FiraState(count=jnp.zeros((), jnp.int32), families=fams)
-
-    def update_family(g_leaf, st, p_leaf, count, step_lr, key):
-        fs = family_shape(p_leaf, rank)
-        g = g_leaf.astype(jnp.float32)  # (*lead, m, n)
-        refresh = (count - 1) % period == 0
-
-        p_proj = jax.lax.cond(
-            refresh,
-            lambda _: compute_projectors(projector, g, fs.rank, key, fs.side),
-            lambda _: st.p,
-            None,
-        )
-
-        r_g = project_dispatched(p_proj, g, fs.side, kernel_impl)
-        c = count.astype(jnp.float32)
-        m1 = b1 * st.m1 + (1 - b1) * r_g
-        m2 = b2 * st.m2 + (1 - b2) * jnp.square(r_g)
-        s = (m1 / (1 - b1**c)) / (jnp.sqrt(m2 / (1 - b2**c)) + eps)
-
-        # Residual outside the subspace, scaled by ||s|| / ||r_g|| per block.
-        resid = g - back_project(p_proj, r_g, fs.side)
-        s_norm = jnp.linalg.norm(s, axis=(-2, -1))
-        rg_norm = jnp.linalg.norm(r_g, axis=(-2, -1))
-        phi = s_norm / (rg_norm + eps)
-        scaled_resid = phi[..., None, None] * resid
-
-        # Norm-growth limiter: cap per-block residual norm at limiter x prev.
-        rnorm = jnp.linalg.norm(scaled_resid, axis=(-2, -1))
-        cap = jnp.where(st.prev_resid_norm > 0, limiter * st.prev_resid_norm, rnorm)
-        shrink = jnp.minimum(1.0, cap / (rnorm + eps))
-        scaled_resid = scaled_resid * shrink[..., None, None]
-        new_rnorm = rnorm * shrink
-
-        u = -step_lr * scale * (back_project(p_proj, s, fs.side) + scaled_resid)
-        return u, FiraFamilyState(
-            p=p_proj, m1=m1, m2=m2, prev_resid_norm=new_rnorm
-        )
-
-    def update(grads: PyTree, state: FiraState, params: PyTree):
-        count = state.count + 1
-        step_lr = schedule_value(lr, count)
-        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
-        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
-        g_leaves = treedef.flatten_up_to(grads)
-        s_leaves = treedef.flatten_up_to(state.families)
-        upds, news = [], []
-        for i, (g, fst, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
-            if g is None or p is None:
-                upds.append(None)
-                news.append(None)
-                continue
-            u, ns = update_family(g, fst, p, count, step_lr, jax.random.fold_in(base_key, i))
-            upds.append(u)
-            news.append(ns)
-        return (
-            jax.tree_util.tree_unflatten(treedef, upds),
-            FiraState(count=count, families=jax.tree_util.tree_unflatten(treedef, news)),
-        )
-
-    return Transform(init, update)
+    return chain(
+        lowrank(
+            with_fira_residual(
+                scale_by_adam(b1=b1, b2=b2, eps=eps), limiter=limiter, eps=eps
+            ),
+            rank=rank, period=period, projector=projector, seed=seed,
+            kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
+        ),
+        scale_by_factor(scale),
+        scale_by_lr(lr),
+    )
 
 
 def fira(
@@ -141,15 +69,9 @@ def fira(
     lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
     **kw,
 ) -> Transform:
-    inner = {
-        "fira": fira_matrices(lr, rank=rank, period=period, **kw),
-        "adamw": adamw(lr),
-    }
-
-    def label_fn(params: PyTree) -> PyTree:
-        paths = tree_paths(params)
-        return jax.tree_util.tree_map(
-            lambda path, p: "fira" if lowrank_filter(path, p) else "adamw", paths, params
-        )
-
-    return multi_transform(inner, label_fn)
+    return with_matrix_routing(
+        fira_matrices(lr, rank=rank, period=period, **kw),
+        adamw(lr),
+        matrix_filter=lowrank_filter,
+        matrix_label="fira",
+    )

@@ -1,52 +1,47 @@
 """GaLore (Zhao et al., 2024) and GoLore — Algorithm 1 of the paper.
 
-Low-rank-projected optimizer states with a periodically refreshed projector.
-Any base optimizer runs *inside* the low-rank space:
+Low-rank-projected optimizer states with a periodically refreshed projector;
+any base runs *inside* the projected space.  Each variant is now a
+combinator composition (see :mod:`repro.core.combinators`)::
+
+    galore      = chain(lowrank(scale_by_adam(scale=alpha)), ...)   # biased
+    galore_muon = chain(lowrank(scale_by_muon(...)), ...)           # = GUM q=0
+    golore      = galore with projector="random" (He et al., convergent)
 
   * base="adam"  — the original GaLore (biased; Property II does not hold,
                    states live in low-rank space, update is back-projected).
   * base="muon"  — GaLore-Muon, the paper's biased baseline (= GUM with q=0).
   * base="sgdm"  — GaLore with SGD momentum (He et al. analysis setting).
 
-``projector="random"`` gives GoLore.  Non-matrix leaves (embeddings, norms,
-biases) are routed to a full AdamW fallback, matching GaLore practice.
+Non-matrix leaves (embeddings, norms, biases) are routed to a full AdamW
+fallback via :func:`with_matrix_routing`, matching GaLore practice.
 
 ``kernel_impl`` ("auto" | "jnp" | "pallas" | "interpret") routes the
-per-step hot loops (projected momentum update / projection GEMM /
-Newton–Schulz) through the fused Pallas TPU kernels via
-repro.kernels.dispatch; "auto" = Pallas on TPU, jnp reference elsewhere.
+per-step hot loops (fused projected momentum update / projection GEMM /
+back-projection GEMM / Newton–Schulz) through the fused Pallas TPU kernels
+via repro.kernels.dispatch; "auto" = Pallas on TPU, jnp reference elsewhere.
+``pad_rank_to=128`` opts into lane-aligned rank padding for peak MXU
+utilization at ragged ranks.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from .adamw import adamw
-from .api import PyTree, Schedule, Transform, multi_transform, schedule_value, tree_paths
-from .lowrank_common import (
-    back_project,
-    compute_projectors,
-    default_lowrank_filter,
-    family_shape,
-    lowrank_momentum_update,
-    lowrank_state_shape,
-    proj_shape,
-    project_dispatched,
+from .api import Schedule, Transform
+from .combinators import (
+    add_decayed_weights,
+    chain,
+    lowrank,
+    scale_by_adam,
+    scale_by_lr,
+    scale_by_momentum,
+    scale_by_muon,
+    with_matrix_routing,
 )
-from .newton_schulz import newton_schulz
-
-
-class GaLoreFamilyState(NamedTuple):
-    p: jax.Array        # (L, s, r) projector
-    m1: jax.Array       # (L, r, n)/(L, m, r) first moment (or momentum)
-    m2: jax.Array | None  # second moment (adam only)
-
-
-class GaLoreState(NamedTuple):
-    count: jax.Array
-    families: PyTree  # leaf -> GaLoreFamilyState
+from .lowrank_common import default_lowrank_filter
 
 
 def galore_matrices(
@@ -66,102 +61,27 @@ def galore_matrices(
     seed: int = 0,
     subspace_iters: int = 2,
     kernel_impl: str = "auto",
+    pad_rank_to: int = 0,
 ) -> Transform:
     """GaLore over matrix leaves only (route others via :func:`galore`)."""
-    if base not in ("adam", "muon", "sgdm"):
+    if base == "adam":
+        inner = scale_by_adam(b1=b1, b2=b2, eps=eps, scale=scale)
+    elif base == "muon":
+        inner = scale_by_muon(beta=beta, ns_steps=ns_steps, nesterov=False,
+                              kernel_impl=kernel_impl)
+    elif base == "sgdm":
+        inner = scale_by_momentum(beta=beta)
+    else:
         raise ValueError(f"unsupported base: {base}")
-    use_m2 = base == "adam"
-
-    def init_family(p_leaf: jax.Array) -> GaLoreFamilyState:
-        fs = family_shape(p_leaf, rank)
-        p0 = jnp.zeros(proj_shape(fs), jnp.float32)
-        st = jnp.zeros(lowrank_state_shape(fs), jnp.float32)
-        return GaLoreFamilyState(p=p0, m1=st, m2=st if use_m2 else None)
-
-    def init(params: PyTree) -> GaLoreState:
-        fams = jax.tree_util.tree_map(
-            lambda p: None if p is None else init_family(p),
-            params,
-            is_leaf=lambda x: x is None,
-        )
-        return GaLoreState(count=jnp.zeros((), jnp.int32), families=fams)
-
-    def update_family(
-        g_leaf: jax.Array,
-        st: GaLoreFamilyState,
-        p_leaf: jax.Array,
-        count: jax.Array,
-        step_lr: jax.Array,
-        key: jax.Array,
-    ) -> tuple[jax.Array, GaLoreFamilyState]:
-        fs = family_shape(p_leaf, rank)
-        g = g_leaf.astype(jnp.float32)  # (*lead, m, n)
-
-        refresh = (count - 1) % period == 0
-
-        def do_refresh(_):
-            p_new = compute_projectors(projector, g, fs.rank, key, fs.side, subspace_iters)
-            if reset_on_update:
-                z = jnp.zeros_like(st.m1)
-                return p_new, z, (z if use_m2 else st.m2)
-            return p_new, st.m1, st.m2
-
-        def keep(_):
-            return st.p, st.m1, st.m2
-
-        p_proj, m1, m2 = jax.lax.cond(refresh, do_refresh, keep, None)
-
-        if base == "adam":
-            # Adam needs the projected gradient itself (second moment), so the
-            # kernel fuses only the projection GEMM (beta=0 path).
-            r_g = project_dispatched(p_proj, g, fs.side, kernel_impl)
-            c = count.astype(jnp.float32)
-            m1 = b1 * m1 + (1 - b1) * r_g
-            m2 = b2 * m2 + (1 - b2) * jnp.square(r_g)
-            mhat = m1 / (1.0 - b1 ** c)
-            vhat = m2 / (1.0 - b2 ** c)
-            s = mhat / (jnp.sqrt(vhat) + eps)
-            upd_lr = scale * s
-        elif base == "muon":
-            m1 = lowrank_momentum_update(p_proj, g, m1, beta, 1.0, fs.side,
-                                         kernel_impl)
-            upd_lr = newton_schulz(m1, steps=ns_steps, impl=kernel_impl)
-        else:  # sgdm
-            m1 = lowrank_momentum_update(p_proj, g, m1, beta, 1.0, fs.side,
-                                         kernel_impl)
-            upd_lr = m1
-
-        full = back_project(p_proj, upd_lr, fs.side)
-        u = -step_lr * (full + weight_decay * p_leaf.astype(jnp.float32))
-        return u, GaLoreFamilyState(p=p_proj, m1=m1, m2=m2)
-
-    def update(grads: PyTree, state: GaLoreState, params: PyTree):
-        count = state.count + 1
-        step_lr = schedule_value(lr, count)
-        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
-
-        leaves, treedef = jax.tree_util.tree_flatten(
-            params, is_leaf=lambda x: x is None
-        )
-        g_leaves = treedef.flatten_up_to(grads)
-        s_leaves = treedef.flatten_up_to(state.families)
-
-        upds, new_states = [], []
-        for i, (g, fst, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
-            if g is None or p is None:
-                upds.append(None)
-                new_states.append(None)
-                continue
-            key = jax.random.fold_in(base_key, i)
-            u, ns = update_family(g, fst, p, count, step_lr, key)
-            upds.append(u)
-            new_states.append(ns)
-
-        updates = jax.tree_util.tree_unflatten(treedef, upds)
-        families = jax.tree_util.tree_unflatten(treedef, new_states)
-        return updates, GaLoreState(count=count, families=families)
-
-    return Transform(init, update)
+    return chain(
+        lowrank(
+            inner, rank=rank, period=period, projector=projector, seed=seed,
+            subspace_iters=subspace_iters, reset_on_refresh=reset_on_update,
+            kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
+        ),
+        add_decayed_weights(weight_decay),
+        scale_by_lr(lr),
+    )
 
 
 def galore(
@@ -174,22 +94,14 @@ def galore(
     **kw,
 ) -> Transform:
     """Full GaLore: low-rank on hidden matrices, AdamW elsewhere."""
-    inner = {
-        "galore": galore_matrices(
+    return with_matrix_routing(
+        galore_matrices(
             lr, rank=rank, period=period, projector=projector, base=base, **kw
         ),
-        "adamw": adamw(lr, weight_decay=kw.get("weight_decay", 0.0)),
-    }
-
-    def label_fn(params: PyTree) -> PyTree:
-        paths = tree_paths(params)
-        return jax.tree_util.tree_map(
-            lambda path, p: "galore" if lowrank_filter(path, p) else "adamw",
-            paths,
-            params,
-        )
-
-    return multi_transform(inner, label_fn)
+        adamw(lr, weight_decay=kw.get("weight_decay", 0.0)),
+        matrix_filter=lowrank_filter,
+        matrix_label="galore",
+    )
 
 
 def golore(lr: Schedule, rank: int = 128, period: int = 200, base: str = "sgdm", **kw) -> Transform:

@@ -7,16 +7,32 @@ to run the *compensated full-rank* Muon update; the rest run the scaled
 low-rank GaLore-Muon update.  In expectation the update equals full Muon with
 an unbiased gradient estimate (Lemma 1).
 
-Static-shape formulation (DESIGN.md §3): per family (a stacked leaf
-``(L, m, n)``) we store
+GUM is now a pure composition over :mod:`repro.core.combinators` — the
+debiasing is a combinator (:func:`~repro.core.combinators.layerwise_unbias`)
+rather than a bespoke file::
 
-  p       (L, s, r)     projector (s = min(m, n) side)
-  r_low   (L, r, n)     low-rank momentum (or (L, m, r) for right projection)
-  r_full  (gamma, m, n) full-rank momentum *slots*
-  idx     (gamma,)      slot -> block assignment, resampled each period
+    gum_matrices = chain(
+        lowrank(layerwise_unbias(scale_by_muon(beta), gamma, compensation),
+                rank, period, projector, ...),
+        add_decayed_weights(wd), scale_by_lr(lr))
+    gum = with_matrix_routing(gum_matrices, adamw, ...)
+
+which also makes new unbiased variants one-liners — see
+:func:`unbiased_galore_adam` below (``layerwise_unbias`` wrapping
+``scale_by_adam``).
+
+State layout per family (a stacked leaf ``(L, m, n)``), unchanged from the
+paper's accounting:
+
+  projs                (L, s, r)     projector (s = min(m, n) side)
+  inner.low[leaf]      (L, r, n)     low-rank base momentum ((L, m, r) right)
+  inner.full[leaf]     (gamma, m, n) full-rank base momentum *slots*
+  inner.idx[leaf]      (gamma,)      slot -> block assignment, resampled
+                                     each period
 
 Memory per family = L·s·r + L·r·n + gamma·m·n  ==  O((2-q)·mr·L + q·L·m·n)
-— exactly Table 1's GUM complexity.
+— exactly Table 1's GUM complexity (regression-checked in
+tests/test_combinators.py via ``state_bytes``).
 
 Update rules (left projection, block l, coefficients per ``compensation``):
 
@@ -31,49 +47,43 @@ Update rules (left projection, block l, coefficients per ``compensation``):
 
 Both choices satisfy E[update] = Muon update with E[G_hat] = G.
 
-``kernel_impl`` ("auto" | "jnp" | "pallas" | "interpret") routes the two
-per-step hot loops — the projected momentum update R <- beta R + c PᵀG and
-the Newton–Schulz iteration — through the fused Pallas TPU kernels
-(repro.kernels.dispatch); "auto" uses them on TPU and the jnp reference
-elsewhere, so the default CPU trajectory is unchanged.  ``use_muon_scale``
-additionally applies Muon's sqrt(max(1, m/n)) RMS-matching factor to both
-branches' orthogonalized updates (off by default — the paper's Algorithm 2
-does not scale).
+``kernel_impl`` ("auto" | "jnp" | "pallas" | "interpret") routes the per-step
+hot loops — the fused projected momentum update R <- beta R + c PᵀG, the
+projection / back-projection GEMMs and the Newton–Schulz iteration — through
+the fused Pallas TPU kernels (repro.kernels.dispatch); "auto" uses them on
+TPU and the jnp reference elsewhere, so the default CPU trajectory is
+unchanged.  ``use_muon_scale`` additionally applies Muon's sqrt(max(1, m/n))
+RMS-matching factor to both branches' orthogonalized updates (off by default
+— the paper's Algorithm 2 does not scale).  ``pad_rank_to=128`` opts into
+lane-aligned rank padding.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .adamw import adamw
-from .api import PyTree, Schedule, Transform, multi_transform, schedule_value, tree_paths
+from .api import Schedule, Transform, tree_paths
+from .combinators import (
+    LowRankState,
+    add_decayed_weights,
+    chain,
+    layerwise_unbias,
+    lowrank,
+    scale_by_adam,
+    scale_by_lr,
+    scale_by_momentum,
+    scale_by_muon,
+    with_matrix_routing,
+)
 from .lowrank_common import (
-    back_project,
-    compute_projectors,
     default_lowrank_filter,
     family_shape,
     gather_blocks,
-    lowrank_momentum_update,
-    lowrank_state_shape,
-    project,
-    proj_shape,
     scatter_blocks,
 )
-from .newton_schulz import muon_scale, newton_schulz
-
-
-class GUMFamilyState(NamedTuple):
-    p: jax.Array               # (L, s, r)
-    r_low: jax.Array           # (L, r, n) | (L, m, r)
-    r_full: Optional[jax.Array]  # (gamma, m, n) or None when gamma == 0
-    idx: Optional[jax.Array]     # (gamma,) int32 or None
-
-
-class GUMState(NamedTuple):
-    count: jax.Array
-    families: PyTree
 
 
 def gum_matrices(
@@ -92,6 +102,7 @@ def gum_matrices(
     external_refresh: bool = False,
     kernel_impl: str = "auto",
     use_muon_scale: bool = False,
+    pad_rank_to: int = 0,
 ) -> Transform:
     """GUM over matrix leaves (route 1-D/embedding leaves via :func:`gum`).
 
@@ -101,141 +112,98 @@ def gum_matrices(
 
     ``kernel_impl`` selects the hot-loop implementation (see module
     docstring); ``use_muon_scale`` applies Muon's RMS-matching shape factor."""
-    if base not in ("muon", "sgdm"):
+    if base == "muon":
+        inner = scale_by_muon(beta=beta, ns_steps=ns_steps, nesterov=False,
+                              use_muon_scale=use_muon_scale,
+                              kernel_impl=kernel_impl)
+    elif base == "sgdm":
+        inner = scale_by_momentum(beta=beta, use_muon_scale=use_muon_scale)
+    else:
         raise ValueError("GUM requires a Property-II base optimizer: muon | sgdm")
-    if compensation not in ("paper", "finetune"):
-        raise ValueError(f"unknown compensation: {compensation}")
-    use_ns = base == "muon"
+    lowrank_t = lowrank(
+        layerwise_unbias(inner, gamma=gamma, compensation=compensation),
+        rank=rank, period=period, projector=projector, seed=seed,
+        subspace_iters=subspace_iters, reset_on_refresh=True,
+        external_refresh=external_refresh, kernel_impl=kernel_impl,
+        pad_rank_to=pad_rank_to,
+    )
+    t = chain(lowrank_t, add_decayed_weights(weight_decay), scale_by_lr(lr))
+    # Hook for gum_accum_tools: the external-refresh entry point + the fact
+    # that the lowrank state sits at chain position 0.
+    t.update.lowrank_transform = lowrank_t
+    return t
 
-    def fam_gamma(L: int) -> int:
-        return min(gamma, L)
 
-    def init_family(p_leaf: jax.Array) -> GUMFamilyState:
-        fs = family_shape(p_leaf, rank)
-        g_f = fam_gamma(fs.L)
-        p0 = jnp.zeros(proj_shape(fs), jnp.float32)
-        r_low = jnp.zeros(lowrank_state_shape(fs), jnp.float32)
-        if g_f == 0:
-            return GUMFamilyState(p=p0, r_low=r_low, r_full=None, idx=None)
-        r_full = jnp.zeros((g_f, fs.m, fs.n), jnp.float32)
-        idx = jnp.arange(g_f, dtype=jnp.int32)
-        return GUMFamilyState(p=p0, r_low=r_low, r_full=r_full, idx=idx)
+def gum(
+    lr: Schedule,
+    rank: int = 128,
+    gamma: int = 2,
+    period: int = 200,
+    projector: str = "svd",
+    lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+    **kw,
+) -> Transform:
+    """Full GUM: unbiased low-rank Muon on hidden matrices, AdamW elsewhere
+    (embeddings / head / norms / biases), mirroring the paper's setup."""
+    matrices = gum_matrices(
+        lr, rank=rank, gamma=gamma, period=period, projector=projector, **kw
+    )
+    t = with_matrix_routing(
+        matrices,
+        adamw(lr, weight_decay=kw.get("weight_decay", 0.0)),
+        matrix_filter=lowrank_filter,
+        matrix_label="gum",
+    )
+    t.update.lowrank_transform = matrices.update.lowrank_transform
+    return t
 
-    def init(params: PyTree) -> GUMState:
-        fams = jax.tree_util.tree_map(
-            lambda p: None if p is None else init_family(p),
-            params,
-            is_leaf=lambda x: x is None,
-        )
-        return GUMState(count=jnp.zeros((), jnp.int32), families=fams)
 
-    def update_family(
-        g_leaf: jax.Array,
-        st: GUMFamilyState,
-        p_leaf: jax.Array,
-        count: jax.Array,
-        step_lr: jax.Array,
-        key: jax.Array,
-    ) -> tuple[jax.Array, GUMFamilyState]:
-        fs = family_shape(p_leaf, rank)
-        g_f = fam_gamma(fs.L)
-        q = g_f / fs.L
-        g = g_leaf.astype(jnp.float32)  # (*lead, m, n) — never reshaped
-
-        refresh = (count - 1) % period == 0
-        key_proj, key_idx = jax.random.split(key)
-
-        # --- period boundary: new projector, resample blocks, restart momentum
-        def do_refresh(_):
-            p_new = compute_projectors(
-                projector, g, fs.rank, key_proj, fs.side, subspace_iters
-            )
-            out = (p_new, jnp.zeros_like(st.r_low))
-            if g_f > 0:
-                idx_new = jax.random.choice(
-                    key_idx, fs.L, (g_f,), replace=False
-                ).astype(jnp.int32)
-                out += (jnp.zeros_like(st.r_full), idx_new)
-            return out
-
-        def keep(_):
-            out = (st.p, st.r_low)
-            if g_f > 0:
-                out += (st.r_full, st.idx)
-            return out
-
-        if external_refresh:
-            refreshed = keep(None)
-        else:
-            refreshed = jax.lax.cond(refresh, do_refresh, keep, None)
-        if g_f > 0:
-            p_proj, r_low, r_full, idx = refreshed
-        else:
-            p_proj, r_low = refreshed
-            r_full, idx = None, None
-
-        c_low = 1.0 if compensation == "finetune" else 1.0 / max(1.0 - q, 1e-12)
-        c_comp = (1.0 - q) if compensation == "finetune" else 1.0
-
-        # --- low-rank branch (computed for all blocks; sampled blocks' output
-        # is overwritten by the scatter below and their r_low restarts at the
-        # next period boundary, so advancing it is trajectory-neutral).
-        if q < 1.0:
-            r_low = lowrank_momentum_update(
-                p_proj, g, r_low, beta, c_low, fs.side, kernel_impl
-            )
-            s_low = (
-                newton_schulz(r_low, steps=ns_steps, impl=kernel_impl)
-                if use_ns else r_low
-            )
-            u = back_project(p_proj, s_low, fs.side)
-        else:
-            u = jnp.zeros_like(g)
-
-        # --- compensated full-rank branch on the gamma sampled blocks.
-        if g_f > 0:
-            c_full = 1.0 / q
-            g_s = gather_blocks(g, idx, fs)       # (gamma, m, n)
-            p_s = gather_blocks(p_proj, idx, fs)  # (gamma, s, r)
-            pptg = back_project(p_s, project(p_s, g_s, fs.side), fs.side)
-            resid = g_s - c_comp * pptg
-            r_full = beta * r_full + c_full * resid
-            s_full = (
-                newton_schulz(r_full, steps=ns_steps, impl=kernel_impl)
-                if use_ns else r_full
-            )
-            u = scatter_blocks(u, idx, s_full, fs)
-
-        if use_muon_scale:
-            u = muon_scale((fs.m, fs.n)) * u
-        u = -step_lr * (u + weight_decay * p_leaf.astype(jnp.float32))
-        return u, GUMFamilyState(p=p_proj, r_low=r_low, r_full=r_full, idx=idx)
-
-    def update(grads: PyTree, state: GUMState, params: PyTree):
-        count = state.count + 1
-        step_lr = schedule_value(lr, count)
-        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
-
-        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
-        g_leaves = treedef.flatten_up_to(grads)
-        s_leaves = treedef.flatten_up_to(state.families)
-
-        upds, new_states = [], []
-        for i, (g, fst, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
-            if g is None or p is None:
-                upds.append(None)
-                new_states.append(None)
-                continue
-            key = jax.random.fold_in(base_key, i)
-            u, ns = update_family(g, fst, p, count, step_lr, key)
-            upds.append(u)
-            new_states.append(ns)
-
-        updates = jax.tree_util.tree_unflatten(treedef, upds)
-        families = jax.tree_util.tree_unflatten(treedef, new_states)
-        return updates, GUMState(count=count, families=families)
-
-    return Transform(init, update)
+def unbiased_galore_adam(
+    lr: Schedule,
+    rank: int = 128,
+    gamma: int = 2,
+    period: int = 200,
+    projector: str = "svd",
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    scale: float = 0.25,
+    weight_decay: float = 0.0,
+    compensation: str = "paper",
+    seed: int = 0,
+    subspace_iters: int = 2,
+    kernel_impl: str = "auto",
+    pad_rank_to: int = 0,
+    lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+) -> Transform:
+    """Unbiased GaLore-Adam — a NEW method that is a pure composition:
+    :func:`~repro.core.combinators.layerwise_unbias` wrapping
+    ``scale_by_adam`` inside ``lowrank``.  The gamma sampled blocks per
+    period run Adam on the compensated full-rank gradient (their own
+    (gamma, m, n) moment slots); the rest run GaLore-Adam on the scaled
+    projected gradient.  The *gradient estimate* is unbiased (Lemma 1);
+    because Adam violates Property II the update itself is not exactly full
+    Adam in expectation — the AdaRankGrad-style extension of the paradigm,
+    previously inexpressible without writing a new optimizer file."""
+    matrix = chain(
+        lowrank(
+            layerwise_unbias(
+                scale_by_adam(b1=b1, b2=b2, eps=eps, scale=scale),
+                gamma=gamma, compensation=compensation,
+            ),
+            rank=rank, period=period, projector=projector, seed=seed,
+            subspace_iters=subspace_iters, reset_on_refresh=True,
+            kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
+        ),
+        add_decayed_weights(weight_decay),
+        scale_by_lr(lr),
+    )
+    return with_matrix_routing(
+        matrix,
+        adamw(lr, weight_decay=weight_decay),
+        matrix_filter=lowrank_filter,
+        matrix_label="unbiased_galore_adam",
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -258,7 +226,9 @@ def gum_matrices(
 # The projector refresh needs one raw gradient; Algorithm 2 builds P from a
 # *single stochastic gradient* G_{t,0} anyway, so refreshing from the first
 # microbatch's gradient keeps the same estimator class (any Property-I P
-# preserves unbiasedness).  Hooks (all sharing the gum() label routing):
+# preserves unbiasedness).  The refresh itself is the ``lowrank`` combinator's
+# external-refresh hook (``update.refresh``), so projector RNG and slot
+# resampling stay in one place.  Hooks (all sharing the gum() label routing):
 #
 #   tools = gum_accum_tools(lr, rank=..., gamma=..., ...)
 #   state = tools.transform.init(params)
@@ -285,13 +255,17 @@ def gum_accum_tools(
     lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
     seed: int = 0,
     subspace_iters: int = 2,
+    kernel_impl: str = "auto",
+    pad_rank_to: int = 0,
     **kw,
 ) -> GUMAccumTools:
     transform = gum(
         lr, rank=rank, gamma=gamma, period=period, projector=projector,
         lowrank_filter=lowrank_filter, seed=seed, subspace_iters=subspace_iters,
-        external_refresh=True, **kw,
+        external_refresh=True, kernel_impl=kernel_impl,
+        pad_rank_to=pad_rank_to, **kw,
     )
+    lowrank_refresh = transform.update.lowrank_transform.update.refresh
 
     def labels(params):
         paths = tree_paths(params)
@@ -299,136 +273,94 @@ def gum_accum_tools(
             lambda path, p: lowrank_filter(path, p), paths, params
         )
 
-    def refresh(grads, state: "MultiStateLike", params):
+    def mask(tree, is_low):
+        return jax.tree_util.tree_map(
+            lambda x, l: x if l else None, tree, is_low
+        )
+
+    def _lowrank_state(state) -> LowRankState:
+        # gum state: MultiState.inner["gum"] = chain state
+        #   (LowRankState, add_decayed_weights (), scale_by_lr state)
+        return state.inner["gum"][0]
+
+    def _dispatch():
+        from repro.kernels import dispatch
+
+        return dispatch
+
+    def refresh(grads, state, params):
         """Run the period-boundary projector/sampling refresh against raw
-        (microbatch-0) gradients, leaving count untouched (the subsequent
-        transform.update call on the same step sees fresh P and skips its own
-        refresh because we advance its RNG deterministically from count)."""
-        gum_state: GUMState = state.inner["gum"]
-        count = gum_state.count + 1
-        refresh_now = (count - 1) % period == 0
-        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
-
+        (microbatch-0) gradients via the lowrank combinator's external-refresh
+        hook, leaving count untouched (the subsequent transform.update call on
+        the same step sees fresh P and, in external mode, never refreshes
+        itself; key derivation matches the in-update path exactly)."""
         is_low = labels(params)
-        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
-        g_leaves = treedef.flatten_up_to(grads)
-        s_leaves = treedef.flatten_up_to(gum_state.families)
-        lab_leaves = treedef.flatten_up_to(is_low)
-
-        new_fams = []
-        for i, (g, fam, p, is_l) in enumerate(zip(g_leaves, s_leaves, leaves, lab_leaves)):
-            if not is_l or fam is None:
-                new_fams.append(fam)
-                continue
-            fs = family_shape(p, rank)
-            g_f = min(gamma, fs.L)
-            key = jax.random.fold_in(base_key, i)
-            key_proj, key_idx = jax.random.split(key)
-
-            def do(_, g=g, fam=fam, fs=fs, g_f=g_f, key_proj=key_proj, key_idx=key_idx):
-                p_new = compute_projectors(
-                    projector, g.astype(jnp.float32), fs.rank, key_proj, fs.side,
-                    subspace_iters,
-                )
-                out = (p_new, jnp.zeros_like(fam.r_low))
-                if g_f > 0:
-                    idx_new = jax.random.choice(key_idx, fs.L, (g_f,), replace=False
-                                                ).astype(jnp.int32)
-                    out += (jnp.zeros_like(fam.r_full), idx_new)
-                return out
-
-            def keep(_, fam=fam, g_f=g_f):
-                out = (fam.p, fam.r_low)
-                if g_f > 0:
-                    out += (fam.r_full, fam.idx)
-                return out
-
-            res = jax.lax.cond(refresh_now, do, keep, None)
-            if g_f > 0:
-                new_fams.append(GUMFamilyState(*res))
-            else:
-                new_fams.append(GUMFamilyState(res[0], res[1], None, None))
-
-        fams = jax.tree_util.tree_unflatten(treedef, new_fams)
+        chain_state = tuple(state.inner["gum"])
+        new_lr = lowrank_refresh(
+            mask(grads, is_low), chain_state[0], mask(params, is_low)
+        )
         new_inner = dict(state.inner)
-        new_inner["gum"] = GUMState(count=gum_state.count, families=fams)
+        new_inner["gum"] = (new_lr,) + chain_state[1:]
         return state._replace(inner=new_inner)
 
     def project_grads(grads, state, params):
-        gum_state: GUMState = state.inner["gum"]
+        lr_state = _lowrank_state(state)
         is_low = labels(params)
-
-        def one(g, fam, p, is_l):
-            if g is None:
-                return None
-            if not is_l or fam is None:
-                return {"raw": g.astype(jnp.float32)}
-            fs = family_shape(p, rank)
-            g32 = g.astype(jnp.float32)
-            out = {"low": project(fam.p, g32, fs.side)}
-            if fam.idx is not None:
-                out["full"] = gather_blocks(g32, fam.idx, fs)
-            return out
+        d = _dispatch()
 
         leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
         g_l = treedef.flatten_up_to(grads)
-        s_l = treedef.flatten_up_to(gum_state.families)
+        proj_l = treedef.flatten_up_to(lr_state.projs)
+        idx_l = treedef.flatten_up_to(lr_state.inner.idx)
         lab = treedef.flatten_up_to(is_low)
+
+        def one(g, proj, idx, p, is_l):
+            if g is None:
+                return None
+            if not is_l or proj is None:
+                return {"raw": g.astype(jnp.float32)}
+            fs = family_shape(p, rank)
+            g32 = g.astype(jnp.float32)
+            out = {"low": d.project(proj, g32, side=fs.side, impl=kernel_impl,
+                                    pad_rank_to=pad_rank_to)}
+            if idx is not None:
+                out["full"] = gather_blocks(g32, idx, fs)
+            return out
+
         return jax.tree_util.tree_unflatten(
-            treedef, [one(g, f, p, il) for g, f, p, il in zip(g_l, s_l, leaves, lab)]
+            treedef,
+            [one(g, pr, ix, p, il)
+             for g, pr, ix, p, il in zip(g_l, proj_l, idx_l, leaves, lab)],
         )
 
     def reconstruct(compact, state, params):
-        gum_state: GUMState = state.inner["gum"]
+        lr_state = _lowrank_state(state)
         is_low = labels(params)
-
-        def one(c, fam, p, is_l):
-            if c is None:
-                return None
-            if not is_l or fam is None:
-                return c["raw"]
-            fs = family_shape(p, rank)
-            g_hat = back_project(fam.p, c["low"], fs.side)
-            if "full" in c:
-                g_hat = scatter_blocks(g_hat, fam.idx, c["full"], fs)
-            return g_hat
+        d = _dispatch()
 
         leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
         c_l = treedef.flatten_up_to(compact)
-        s_l = treedef.flatten_up_to(gum_state.families)
+        proj_l = treedef.flatten_up_to(lr_state.projs)
+        idx_l = treedef.flatten_up_to(lr_state.inner.idx)
         lab = treedef.flatten_up_to(is_low)
+
+        def one(c, proj, idx, p, is_l):
+            if c is None:
+                return None
+            if not is_l or proj is None:
+                return c["raw"]
+            fs = family_shape(p, rank)
+            g_hat = d.back_project(proj, c["low"], side=fs.side,
+                                   impl=kernel_impl, pad_rank_to=pad_rank_to)
+            if "full" in c:
+                g_hat = scatter_blocks(g_hat, idx, c["full"], fs)
+            return g_hat
+
         return jax.tree_util.tree_unflatten(
-            treedef, [one(c, f, p, il) for c, f, p, il in zip(c_l, s_l, leaves, lab)]
+            treedef,
+            [one(c, pr, ix, p, il)
+             for c, pr, ix, p, il in zip(c_l, proj_l, idx_l, leaves, lab)],
         )
 
     return GUMAccumTools(transform=transform, refresh=refresh,
                          project=project_grads, reconstruct=reconstruct)
-
-
-def gum(
-    lr: Schedule,
-    rank: int = 128,
-    gamma: int = 2,
-    period: int = 200,
-    projector: str = "svd",
-    lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
-    **kw,
-) -> Transform:
-    """Full GUM: unbiased low-rank Muon on hidden matrices, AdamW elsewhere
-    (embeddings / head / norms / biases), mirroring the paper's setup."""
-    inner = {
-        "gum": gum_matrices(
-            lr, rank=rank, gamma=gamma, period=period, projector=projector, **kw
-        ),
-        "adamw": adamw(lr, weight_decay=kw.get("weight_decay", 0.0)),
-    }
-
-    def label_fn(params: PyTree) -> PyTree:
-        paths = tree_paths(params)
-        return jax.tree_util.tree_map(
-            lambda path, p: "gum" if lowrank_filter(path, p) else "adamw",
-            paths,
-            params,
-        )
-
-    return multi_transform(inner, label_fn)

@@ -1,0 +1,696 @@
+"""FROZEN pre-combinator reference implementations (PR 2).
+
+Verbatim copies of the monolithic optimizers that `repro.core` shipped
+before the combinator redesign (gum.py / galore.py / fira.py / muon.py /
+adamw.py as of PR 1), kept ONLY as the ground truth for
+
+  * tests/test_combinators.py — the loss-for-loss equivalence suite proving
+    the combinator-built optimizers reproduce the legacy trajectories, and
+  * benchmarks/optimizer_api.py — the chained-vs-monolithic overhead table.
+
+Never import this module from production code; it will be deleted once the
+combinator API has soaked for a few PRs.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .api import PyTree, Schedule, Transform, multi_transform, schedule_value, tree_paths
+from .lowrank_common import (
+    back_project,
+    compute_projectors,
+    default_lowrank_filter,
+    family_shape,
+    gather_blocks,
+    lowrank_momentum_update,
+    lowrank_state_shape,
+    project,
+    proj_shape,
+    project_dispatched,
+    scatter_blocks,
+)
+from .newton_schulz import muon_scale, newton_schulz
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Transform:
+    def init(params: PyTree) -> AdamWState:
+        zeros = lambda t: jax.tree_util.tree_map(
+            lambda p: None if p is None else jnp.zeros_like(p, dtype=jnp.float32),
+            t,
+            is_leaf=lambda x: x is None,
+        )
+        return AdamWState(count=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+    def update(grads: PyTree, state: AdamWState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            if g is None:
+                return None, None, None
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            mhat = mu / bc1
+            nhat = nu / bc2
+            u = -step_lr * (mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u, mu, nu
+
+        flat = jax.tree_util.tree_map(
+            upd, grads, state.mu, state.nu, params, is_leaf=lambda x: x is None
+        )
+        # tree_map returned tuples at leaves; transpose into three trees.
+        is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_triple)
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_triple)
+        nu = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=is_triple)
+        return updates, AdamWState(count=count, mu=mu, nu=nu)
+
+    return Transform(init, update)
+
+
+def sgdm(lr: Schedule, beta: float = 0.9, weight_decay: float = 0.0) -> Transform:
+    """SGD with (EMA) momentum — Property-II compliant base optimizer."""
+
+    class SGDMState(NamedTuple):
+        count: jax.Array
+        mu: PyTree
+
+    def init(params: PyTree) -> SGDMState:
+        mu = jax.tree_util.tree_map(
+            lambda p: None if p is None else jnp.zeros_like(p, dtype=jnp.float32),
+            params,
+            is_leaf=lambda x: x is None,
+        )
+        return SGDMState(count=jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads: PyTree, state: SGDMState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+
+        def upd(g, mu, p):
+            if g is None:
+                return None, None
+            mu = beta * mu + g.astype(jnp.float32)
+            u = -step_lr * (mu + weight_decay * p.astype(jnp.float32))
+            return u, mu
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, params, is_leaf=lambda x: x is None)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_pair)
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_pair)
+        return updates, SGDMState(count=count, mu=mu)
+
+    return Transform(init, update)
+
+
+class MuonState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+
+
+def muon_matrices(
+    lr: Schedule,
+    beta: float = 0.95,
+    weight_decay: float = 0.0,
+    ns_steps: int = 5,
+    nesterov: bool = True,
+    use_muon_scale: bool = True,
+    kernel_impl: str = "auto",
+) -> Transform:
+    """Muon over matrix leaves only (callers route 1-D leaves elsewhere)."""
+
+    def init(params: PyTree) -> MuonState:
+        mu = jax.tree_util.tree_map(
+            lambda p: None if p is None else jnp.zeros_like(p, dtype=jnp.float32),
+            params,
+            is_leaf=lambda x: x is None,
+        )
+        return MuonState(count=jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads: PyTree, state: MuonState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+
+        def upd(g, mu, p):
+            if g is None:
+                return None, None
+            g32 = g.astype(jnp.float32)
+            mu = beta * mu + g32
+            mom = beta * mu + g32 if nesterov else mu
+            o = newton_schulz(mom, steps=ns_steps, impl=kernel_impl)
+            scale = muon_scale(p.shape) if use_muon_scale else 1.0
+            u = -step_lr * (
+                scale * o + weight_decay * p.astype(jnp.float32)
+            )
+            return u, mu
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, params, is_leaf=lambda x: x is None)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_pair)
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_pair)
+        return updates, MuonState(count=count, mu=mu)
+
+    return Transform(init, update)
+
+
+def default_matrix_filter(path: str, p: jax.Array) -> bool:
+    """Hidden-layer matrices: >=2 trailing dims and not an embedding/head/norm."""
+    if p.ndim < 2:
+        return False
+    lowered = path.lower()
+    return not any(k in lowered for k in ("embed", "lm_head", "norm", "scale", "bias"))
+
+
+def muon(
+    lr: Schedule,
+    beta: float = 0.95,
+    weight_decay: float = 0.0,
+    ns_steps: int = 5,
+    adam_lr: Optional[Schedule] = None,
+    matrix_filter: Callable[[str, jax.Array], bool] = default_matrix_filter,
+    use_muon_scale: bool = True,
+    kernel_impl: str = "auto",
+) -> Transform:
+    """Full Muon optimizer: Muon on hidden matrices, AdamW on the rest."""
+    inner = {
+        "muon": muon_matrices(lr, beta=beta, weight_decay=weight_decay,
+                              ns_steps=ns_steps, use_muon_scale=use_muon_scale,
+                              kernel_impl=kernel_impl),
+        "adamw": adamw(adam_lr if adam_lr is not None else lr, weight_decay=weight_decay),
+    }
+
+    def label_fn(params: PyTree) -> PyTree:
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda path, p: "muon" if matrix_filter(path, p) else "adamw", paths, params
+        )
+
+    return multi_transform(inner, label_fn)
+
+
+class GaLoreFamilyState(NamedTuple):
+    p: jax.Array        # (L, s, r) projector
+    m1: jax.Array       # (L, r, n)/(L, m, r) first moment (or momentum)
+    m2: jax.Array | None  # second moment (adam only)
+
+
+class GaLoreState(NamedTuple):
+    count: jax.Array
+    families: PyTree  # leaf -> GaLoreFamilyState
+
+
+def galore_matrices(
+    lr: Schedule,
+    rank: int = 128,
+    period: int = 200,
+    projector: str = "svd",
+    base: str = "adam",
+    beta: float = 0.95,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    scale: float = 0.25,
+    ns_steps: int = 5,
+    weight_decay: float = 0.0,
+    reset_on_update: bool = False,
+    seed: int = 0,
+    subspace_iters: int = 2,
+    kernel_impl: str = "auto",
+) -> Transform:
+    """GaLore over matrix leaves only (route others via :func:`galore`)."""
+    if base not in ("adam", "muon", "sgdm"):
+        raise ValueError(f"unsupported base: {base}")
+    use_m2 = base == "adam"
+
+    def init_family(p_leaf: jax.Array) -> GaLoreFamilyState:
+        fs = family_shape(p_leaf, rank)
+        p0 = jnp.zeros(proj_shape(fs), jnp.float32)
+        st = jnp.zeros(lowrank_state_shape(fs), jnp.float32)
+        return GaLoreFamilyState(p=p0, m1=st, m2=st if use_m2 else None)
+
+    def init(params: PyTree) -> GaLoreState:
+        fams = jax.tree_util.tree_map(
+            lambda p: None if p is None else init_family(p),
+            params,
+            is_leaf=lambda x: x is None,
+        )
+        return GaLoreState(count=jnp.zeros((), jnp.int32), families=fams)
+
+    def update_family(
+        g_leaf: jax.Array,
+        st: GaLoreFamilyState,
+        p_leaf: jax.Array,
+        count: jax.Array,
+        step_lr: jax.Array,
+        key: jax.Array,
+    ) -> tuple[jax.Array, GaLoreFamilyState]:
+        fs = family_shape(p_leaf, rank)
+        g = g_leaf.astype(jnp.float32)  # (*lead, m, n)
+
+        refresh = (count - 1) % period == 0
+
+        def do_refresh(_):
+            p_new = compute_projectors(projector, g, fs.rank, key, fs.side, subspace_iters)
+            if reset_on_update:
+                z = jnp.zeros_like(st.m1)
+                return p_new, z, (z if use_m2 else st.m2)
+            return p_new, st.m1, st.m2
+
+        def keep(_):
+            return st.p, st.m1, st.m2
+
+        p_proj, m1, m2 = jax.lax.cond(refresh, do_refresh, keep, None)
+
+        if base == "adam":
+            # Adam needs the projected gradient itself (second moment), so the
+            # kernel fuses only the projection GEMM (beta=0 path).
+            r_g = project_dispatched(p_proj, g, fs.side, kernel_impl)
+            c = count.astype(jnp.float32)
+            m1 = b1 * m1 + (1 - b1) * r_g
+            m2 = b2 * m2 + (1 - b2) * jnp.square(r_g)
+            mhat = m1 / (1.0 - b1 ** c)
+            vhat = m2 / (1.0 - b2 ** c)
+            s = mhat / (jnp.sqrt(vhat) + eps)
+            upd_lr = scale * s
+        elif base == "muon":
+            m1 = lowrank_momentum_update(p_proj, g, m1, beta, 1.0, fs.side,
+                                         kernel_impl)
+            upd_lr = newton_schulz(m1, steps=ns_steps, impl=kernel_impl)
+        else:  # sgdm
+            m1 = lowrank_momentum_update(p_proj, g, m1, beta, 1.0, fs.side,
+                                         kernel_impl)
+            upd_lr = m1
+
+        full = back_project(p_proj, upd_lr, fs.side)
+        u = -step_lr * (full + weight_decay * p_leaf.astype(jnp.float32))
+        return u, GaLoreFamilyState(p=p_proj, m1=m1, m2=m2)
+
+    def update(grads: PyTree, state: GaLoreState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+
+        leaves, treedef = jax.tree_util.tree_flatten(
+            params, is_leaf=lambda x: x is None
+        )
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(state.families)
+
+        upds, new_states = [], []
+        for i, (g, fst, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
+            if g is None or p is None:
+                upds.append(None)
+                new_states.append(None)
+                continue
+            key = jax.random.fold_in(base_key, i)
+            u, ns = update_family(g, fst, p, count, step_lr, key)
+            upds.append(u)
+            new_states.append(ns)
+
+        updates = jax.tree_util.tree_unflatten(treedef, upds)
+        families = jax.tree_util.tree_unflatten(treedef, new_states)
+        return updates, GaLoreState(count=count, families=families)
+
+    return Transform(init, update)
+
+
+def galore(
+    lr: Schedule,
+    rank: int = 128,
+    period: int = 200,
+    projector: str = "svd",
+    base: str = "adam",
+    lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+    **kw,
+) -> Transform:
+    """Full GaLore: low-rank on hidden matrices, AdamW elsewhere."""
+    inner = {
+        "galore": galore_matrices(
+            lr, rank=rank, period=period, projector=projector, base=base, **kw
+        ),
+        "adamw": adamw(lr, weight_decay=kw.get("weight_decay", 0.0)),
+    }
+
+    def label_fn(params: PyTree) -> PyTree:
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda path, p: "galore" if lowrank_filter(path, p) else "adamw",
+            paths,
+            params,
+        )
+
+    return multi_transform(inner, label_fn)
+
+
+def golore(lr: Schedule, rank: int = 128, period: int = 200, base: str = "sgdm", **kw) -> Transform:
+    """GoLore (He et al., 2024): GaLore with a gradient-independent random
+    orthonormal projector — convergent but subspace-blind."""
+    return galore(lr, rank=rank, period=period, projector="random", base=base, **kw)
+
+
+class FiraFamilyState(NamedTuple):
+    p: jax.Array
+    m1: jax.Array
+    m2: jax.Array
+    prev_resid_norm: jax.Array  # (L,) norm-growth limiter memory
+
+
+class FiraState(NamedTuple):
+    count: jax.Array
+    families: PyTree
+
+
+def fira_matrices(
+    lr: Schedule,
+    rank: int = 128,
+    period: int = 200,
+    projector: str = "svd",
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    scale: float = 0.25,
+    limiter: float = 1.01,
+    seed: int = 0,
+    kernel_impl: str = "auto",
+) -> Transform:
+    def init(params: PyTree) -> FiraState:
+        def init_family(p_leaf):
+            if p_leaf is None:
+                return None
+            fs = family_shape(p_leaf, rank)
+            st = jnp.zeros(lowrank_state_shape(fs), jnp.float32)
+            return FiraFamilyState(
+                p=jnp.zeros(proj_shape(fs), jnp.float32),
+                m1=st,
+                m2=st,
+                prev_resid_norm=jnp.zeros(fs.lead, jnp.float32),
+            )
+
+        fams = jax.tree_util.tree_map(
+            init_family, params, is_leaf=lambda x: x is None
+        )
+        return FiraState(count=jnp.zeros((), jnp.int32), families=fams)
+
+    def update_family(g_leaf, st, p_leaf, count, step_lr, key):
+        fs = family_shape(p_leaf, rank)
+        g = g_leaf.astype(jnp.float32)  # (*lead, m, n)
+        refresh = (count - 1) % period == 0
+
+        p_proj = jax.lax.cond(
+            refresh,
+            lambda _: compute_projectors(projector, g, fs.rank, key, fs.side),
+            lambda _: st.p,
+            None,
+        )
+
+        r_g = project_dispatched(p_proj, g, fs.side, kernel_impl)
+        c = count.astype(jnp.float32)
+        m1 = b1 * st.m1 + (1 - b1) * r_g
+        m2 = b2 * st.m2 + (1 - b2) * jnp.square(r_g)
+        s = (m1 / (1 - b1**c)) / (jnp.sqrt(m2 / (1 - b2**c)) + eps)
+
+        # Residual outside the subspace, scaled by ||s|| / ||r_g|| per block.
+        resid = g - back_project(p_proj, r_g, fs.side)
+        s_norm = jnp.linalg.norm(s, axis=(-2, -1))
+        rg_norm = jnp.linalg.norm(r_g, axis=(-2, -1))
+        phi = s_norm / (rg_norm + eps)
+        scaled_resid = phi[..., None, None] * resid
+
+        # Norm-growth limiter: cap per-block residual norm at limiter x prev.
+        rnorm = jnp.linalg.norm(scaled_resid, axis=(-2, -1))
+        cap = jnp.where(st.prev_resid_norm > 0, limiter * st.prev_resid_norm, rnorm)
+        shrink = jnp.minimum(1.0, cap / (rnorm + eps))
+        scaled_resid = scaled_resid * shrink[..., None, None]
+        new_rnorm = rnorm * shrink
+
+        u = -step_lr * scale * (back_project(p_proj, s, fs.side) + scaled_resid)
+        return u, FiraFamilyState(
+            p=p_proj, m1=m1, m2=m2, prev_resid_norm=new_rnorm
+        )
+
+    def update(grads: PyTree, state: FiraState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(state.families)
+        upds, news = [], []
+        for i, (g, fst, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
+            if g is None or p is None:
+                upds.append(None)
+                news.append(None)
+                continue
+            u, ns = update_family(g, fst, p, count, step_lr, jax.random.fold_in(base_key, i))
+            upds.append(u)
+            news.append(ns)
+        return (
+            jax.tree_util.tree_unflatten(treedef, upds),
+            FiraState(count=count, families=jax.tree_util.tree_unflatten(treedef, news)),
+        )
+
+    return Transform(init, update)
+
+
+def fira(
+    lr: Schedule,
+    rank: int = 128,
+    period: int = 200,
+    lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+    **kw,
+) -> Transform:
+    inner = {
+        "fira": fira_matrices(lr, rank=rank, period=period, **kw),
+        "adamw": adamw(lr),
+    }
+
+    def label_fn(params: PyTree) -> PyTree:
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda path, p: "fira" if lowrank_filter(path, p) else "adamw", paths, params
+        )
+
+    return multi_transform(inner, label_fn)
+
+
+class GUMFamilyState(NamedTuple):
+    p: jax.Array               # (L, s, r)
+    r_low: jax.Array           # (L, r, n) | (L, m, r)
+    r_full: Optional[jax.Array]  # (gamma, m, n) or None when gamma == 0
+    idx: Optional[jax.Array]     # (gamma,) int32 or None
+
+
+class GUMState(NamedTuple):
+    count: jax.Array
+    families: PyTree
+
+
+def gum_matrices(
+    lr: Schedule,
+    rank: int = 128,
+    gamma: int = 2,
+    period: int = 200,
+    projector: str = "svd",
+    base: str = "muon",
+    beta: float = 0.95,
+    ns_steps: int = 5,
+    weight_decay: float = 0.0,
+    compensation: str = "paper",
+    seed: int = 0,
+    subspace_iters: int = 2,
+    external_refresh: bool = False,
+    kernel_impl: str = "auto",
+    use_muon_scale: bool = False,
+) -> Transform:
+    """GUM over matrix leaves (route 1-D/embedding leaves via :func:`gum`).
+
+    ``external_refresh=True`` skips the in-update period refresh — used by
+    the low-rank gradient-accumulation path, where :func:`gum_accum_tools`
+    refreshes against a raw microbatch gradient before projection.
+
+    ``kernel_impl`` selects the hot-loop implementation (see module
+    docstring); ``use_muon_scale`` applies Muon's RMS-matching shape factor."""
+    if base not in ("muon", "sgdm"):
+        raise ValueError("GUM requires a Property-II base optimizer: muon | sgdm")
+    if compensation not in ("paper", "finetune"):
+        raise ValueError(f"unknown compensation: {compensation}")
+    use_ns = base == "muon"
+
+    def fam_gamma(L: int) -> int:
+        return min(gamma, L)
+
+    def init_family(p_leaf: jax.Array) -> GUMFamilyState:
+        fs = family_shape(p_leaf, rank)
+        g_f = fam_gamma(fs.L)
+        p0 = jnp.zeros(proj_shape(fs), jnp.float32)
+        r_low = jnp.zeros(lowrank_state_shape(fs), jnp.float32)
+        if g_f == 0:
+            return GUMFamilyState(p=p0, r_low=r_low, r_full=None, idx=None)
+        r_full = jnp.zeros((g_f, fs.m, fs.n), jnp.float32)
+        idx = jnp.arange(g_f, dtype=jnp.int32)
+        return GUMFamilyState(p=p0, r_low=r_low, r_full=r_full, idx=idx)
+
+    def init(params: PyTree) -> GUMState:
+        fams = jax.tree_util.tree_map(
+            lambda p: None if p is None else init_family(p),
+            params,
+            is_leaf=lambda x: x is None,
+        )
+        return GUMState(count=jnp.zeros((), jnp.int32), families=fams)
+
+    def update_family(
+        g_leaf: jax.Array,
+        st: GUMFamilyState,
+        p_leaf: jax.Array,
+        count: jax.Array,
+        step_lr: jax.Array,
+        key: jax.Array,
+    ) -> tuple[jax.Array, GUMFamilyState]:
+        fs = family_shape(p_leaf, rank)
+        g_f = fam_gamma(fs.L)
+        q = g_f / fs.L
+        g = g_leaf.astype(jnp.float32)  # (*lead, m, n) — never reshaped
+
+        refresh = (count - 1) % period == 0
+        key_proj, key_idx = jax.random.split(key)
+
+        # --- period boundary: new projector, resample blocks, restart momentum
+        def do_refresh(_):
+            p_new = compute_projectors(
+                projector, g, fs.rank, key_proj, fs.side, subspace_iters
+            )
+            out = (p_new, jnp.zeros_like(st.r_low))
+            if g_f > 0:
+                idx_new = jax.random.choice(
+                    key_idx, fs.L, (g_f,), replace=False
+                ).astype(jnp.int32)
+                out += (jnp.zeros_like(st.r_full), idx_new)
+            return out
+
+        def keep(_):
+            out = (st.p, st.r_low)
+            if g_f > 0:
+                out += (st.r_full, st.idx)
+            return out
+
+        if external_refresh:
+            refreshed = keep(None)
+        else:
+            refreshed = jax.lax.cond(refresh, do_refresh, keep, None)
+        if g_f > 0:
+            p_proj, r_low, r_full, idx = refreshed
+        else:
+            p_proj, r_low = refreshed
+            r_full, idx = None, None
+
+        c_low = 1.0 if compensation == "finetune" else 1.0 / max(1.0 - q, 1e-12)
+        c_comp = (1.0 - q) if compensation == "finetune" else 1.0
+
+        # --- low-rank branch (computed for all blocks; sampled blocks' output
+        # is overwritten by the scatter below and their r_low restarts at the
+        # next period boundary, so advancing it is trajectory-neutral).
+        if q < 1.0:
+            r_low = lowrank_momentum_update(
+                p_proj, g, r_low, beta, c_low, fs.side, kernel_impl
+            )
+            s_low = (
+                newton_schulz(r_low, steps=ns_steps, impl=kernel_impl)
+                if use_ns else r_low
+            )
+            u = back_project(p_proj, s_low, fs.side)
+        else:
+            u = jnp.zeros_like(g)
+
+        # --- compensated full-rank branch on the gamma sampled blocks.
+        if g_f > 0:
+            c_full = 1.0 / q
+            g_s = gather_blocks(g, idx, fs)       # (gamma, m, n)
+            p_s = gather_blocks(p_proj, idx, fs)  # (gamma, s, r)
+            pptg = back_project(p_s, project(p_s, g_s, fs.side), fs.side)
+            resid = g_s - c_comp * pptg
+            r_full = beta * r_full + c_full * resid
+            s_full = (
+                newton_schulz(r_full, steps=ns_steps, impl=kernel_impl)
+                if use_ns else r_full
+            )
+            u = scatter_blocks(u, idx, s_full, fs)
+
+        if use_muon_scale:
+            u = muon_scale((fs.m, fs.n)) * u
+        u = -step_lr * (u + weight_decay * p_leaf.astype(jnp.float32))
+        return u, GUMFamilyState(p=p_proj, r_low=r_low, r_full=r_full, idx=idx)
+
+    def update(grads: PyTree, state: GUMState, params: PyTree):
+        count = state.count + 1
+        step_lr = schedule_value(lr, count)
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(state.families)
+
+        upds, new_states = [], []
+        for i, (g, fst, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
+            if g is None or p is None:
+                upds.append(None)
+                new_states.append(None)
+                continue
+            key = jax.random.fold_in(base_key, i)
+            u, ns = update_family(g, fst, p, count, step_lr, key)
+            upds.append(u)
+            new_states.append(ns)
+
+        updates = jax.tree_util.tree_unflatten(treedef, upds)
+        families = jax.tree_util.tree_unflatten(treedef, new_states)
+        return updates, GUMState(count=count, families=families)
+
+    return Transform(init, update)
+
+
+
+
+def gum(
+    lr: Schedule,
+    rank: int = 128,
+    gamma: int = 2,
+    period: int = 200,
+    projector: str = "svd",
+    lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
+    **kw,
+) -> Transform:
+    """Full GUM: unbiased low-rank Muon on hidden matrices, AdamW elsewhere
+    (embeddings / head / norms / biases), mirroring the paper's setup."""
+    inner = {
+        "gum": gum_matrices(
+            lr, rank=rank, gamma=gamma, period=period, projector=projector, **kw
+        ),
+        "adamw": adamw(lr, weight_decay=kw.get("weight_decay", 0.0)),
+    }
+
+    def label_fn(params: PyTree) -> PyTree:
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda path, p: "gum" if lowrank_filter(path, p) else "adamw",
+            paths,
+            params,
+        )
+
+    return multi_transform(inner, label_fn)

@@ -12,7 +12,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .adamw import AdamWState, adamw
+from .adamw import adamw
 from .api import PyTree, Schedule, Transform, tree_paths
 from .lowrank_common import default_lowrank_filter, family_shape
 

@@ -1,5 +1,12 @@
 """Muon (Jordan et al., 2024) — momentum + Newton–Schulz orthogonalization.
 
+Now a combinator chain (see :mod:`repro.core.combinators`)::
+
+    muon_matrices = chain(scale_by_muon(beta, ns_steps, nesterov=True,
+                                        use_muon_scale, kernel_impl),
+                          add_decayed_weights(wd), scale_by_lr(lr))
+    muon          = with_matrix_routing(muon_matrices, adamw, ...)
+
 Applies to >=2-D parameters (leading axes are treated as stacked blocks, e.g.
 scan-stacked layers ``(L, m, n)``).  1-D parameters (norm scales, biases) and
 anything excluded by ``matrix_filter`` fall back to AdamW, as in practice.
@@ -13,19 +20,19 @@ Newton–Schulz hot loop through the fused Pallas TPU kernels
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from .adamw import adamw
-from .api import PyTree, Schedule, Transform, multi_transform, schedule_value, tree_paths
-from .newton_schulz import muon_scale, newton_schulz
-
-
-class MuonState(NamedTuple):
-    count: jax.Array
-    mu: PyTree
+from .api import Schedule, Transform
+from .combinators import (
+    add_decayed_weights,
+    chain,
+    scale_by_lr,
+    scale_by_muon,
+    with_matrix_routing,
+)
 
 
 def muon_matrices(
@@ -38,39 +45,14 @@ def muon_matrices(
     kernel_impl: str = "auto",
 ) -> Transform:
     """Muon over matrix leaves only (callers route 1-D leaves elsewhere)."""
-
-    def init(params: PyTree) -> MuonState:
-        mu = jax.tree_util.tree_map(
-            lambda p: None if p is None else jnp.zeros_like(p, dtype=jnp.float32),
-            params,
-            is_leaf=lambda x: x is None,
-        )
-        return MuonState(count=jnp.zeros((), jnp.int32), mu=mu)
-
-    def update(grads: PyTree, state: MuonState, params: PyTree):
-        count = state.count + 1
-        step_lr = schedule_value(lr, count)
-
-        def upd(g, mu, p):
-            if g is None:
-                return None, None
-            g32 = g.astype(jnp.float32)
-            mu = beta * mu + g32
-            mom = beta * mu + g32 if nesterov else mu
-            o = newton_schulz(mom, steps=ns_steps, impl=kernel_impl)
-            scale = muon_scale(p.shape) if use_muon_scale else 1.0
-            u = -step_lr * (
-                scale * o + weight_decay * p.astype(jnp.float32)
-            )
-            return u, mu
-
-        flat = jax.tree_util.tree_map(upd, grads, state.mu, params, is_leaf=lambda x: x is None)
-        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
-        updates = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_pair)
-        mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_pair)
-        return updates, MuonState(count=count, mu=mu)
-
-    return Transform(init, update)
+    return chain(
+        scale_by_muon(
+            beta=beta, ns_steps=ns_steps, nesterov=nesterov,
+            use_muon_scale=use_muon_scale, kernel_impl=kernel_impl,
+        ),
+        add_decayed_weights(weight_decay),
+        scale_by_lr(lr),
+    )
 
 
 def default_matrix_filter(path: str, p: jax.Array) -> bool:
@@ -92,17 +74,12 @@ def muon(
     kernel_impl: str = "auto",
 ) -> Transform:
     """Full Muon optimizer: Muon on hidden matrices, AdamW on the rest."""
-    inner = {
-        "muon": muon_matrices(lr, beta=beta, weight_decay=weight_decay,
-                              ns_steps=ns_steps, use_muon_scale=use_muon_scale,
-                              kernel_impl=kernel_impl),
-        "adamw": adamw(adam_lr if adam_lr is not None else lr, weight_decay=weight_decay),
-    }
-
-    def label_fn(params: PyTree) -> PyTree:
-        paths = tree_paths(params)
-        return jax.tree_util.tree_map(
-            lambda path, p: "muon" if matrix_filter(path, p) else "adamw", paths, params
-        )
-
-    return multi_transform(inner, label_fn)
+    return with_matrix_routing(
+        muon_matrices(
+            lr, beta=beta, weight_decay=weight_decay, ns_steps=ns_steps,
+            use_muon_scale=use_muon_scale, kernel_impl=kernel_impl,
+        ),
+        adamw(adam_lr if adam_lr is not None else lr, weight_decay=weight_decay),
+        matrix_filter=matrix_filter,
+        matrix_label="muon",
+    )

@@ -43,7 +43,11 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .lowrank_update import lowrank_update_batched, project_batched
+from .lowrank_update import (
+    back_project_batched,
+    lowrank_update_batched,
+    project_batched,
+)
 from .newton_schulz import newton_schulz_pallas
 
 VALID_IMPLS = ("auto", "jnp", "xla", "pallas", "interpret")
@@ -56,6 +60,18 @@ MAX_NS_DIM = 1024
 
 _LANE = 128   # TPU lane width: last-dim tiling granule
 _SUBLANE = 8  # fp32 sublane granule
+
+
+def _rank_granule(pad_rank_to: int) -> int:
+    """Opt-in lane-aligned rank padding: ``pad_rank_to=128`` rounds the rank
+    axis up to a full MXU lane multiple (e.g. r=96 -> 128) so the (bm, r) /
+    (r, bn) tiles hit peak systolic-array utilization; 0 keeps the minimal
+    fp32 sublane granule.  Zero-padding the rank axis is exact for every
+    dispatched op: padded P columns are zero, so PᵀG gains zero rows (sliced
+    off), R gains zero rows (beta·0 stays 0), and P @ S is untouched."""
+    if pad_rank_to < 0:
+        raise ValueError(f"pad_rank_to must be >= 0, got {pad_rank_to}")
+    return max(_SUBLANE, _round_up(pad_rank_to, _SUBLANE)) if pad_rank_to else _SUBLANE
 
 
 def backend() -> str:
@@ -139,7 +155,7 @@ def _project_jnp(p: jax.Array, g: jax.Array, side: str) -> jax.Array:
     return project(p.astype(jnp.float32), g.astype(jnp.float32), side)
 
 
-def _lowrank_kernel_form(p, g, r_state, side):
+def _lowrank_kernel_form(p, g, r_state, side, pad_rank_to: int = 0):
     """Normalize (p, g[, r_state]) to the kernel's left-side batched layout:
     flatten leads, transpose the right side ((G P)ᵀ = Pᵀ Gᵀ), zero-pad to
     tile-legal shapes.  Zero rows/cols are exact: they add nothing to PᵀG,
@@ -155,7 +171,7 @@ def _lowrank_kernel_form(p, g, r_state, side):
     n = int(gk.shape[-1])
     m_pad, bm = _pad_and_block(m, 256, _SUBLANE)
     n_pad, bn = _pad_and_block(n, 512, _LANE)
-    r_pad = _round_up(r, _SUBLANE)
+    r_pad = _round_up(r, _rank_granule(pad_rank_to))
     pk = _pad_axis(_pad_axis(pk, -2, m_pad), -1, r_pad)
     gk = _pad_axis(_pad_axis(gk, -2, m_pad), -1, n_pad)
     rk = None
@@ -178,6 +194,7 @@ def lowrank_update(
     *,
     side: str = "left",
     impl: str = "auto",
+    pad_rank_to: int = 0,
 ) -> jax.Array:
     """Dispatched momentum update over a family ``g (*lead, m, n)``.
 
@@ -185,6 +202,7 @@ def lowrank_update(
     right side: p (*lead, n, r), r_state (*lead, m, r) -> beta·R + coeff·G P
 
     Returns fp32, identical (within fp32 roundoff) across impls.
+    ``pad_rank_to`` opts into lane-aligned rank padding (see _rank_granule).
     """
     impl = resolve_impl(impl)
     if impl != "jnp" and not lowrank_update_supported(p, g, side):
@@ -192,7 +210,9 @@ def lowrank_update(
     if impl == "jnp":
         return beta * r_state.astype(jnp.float32) + coeff * _project_jnp(p, g, side)
 
-    pk, gk, rk, (lead, r, n, bm, bn) = _lowrank_kernel_form(p, g, r_state, side)
+    pk, gk, rk, (lead, r, n, bm, bn) = _lowrank_kernel_form(
+        p, g, r_state, side, pad_rank_to
+    )
     out = lowrank_update_batched(
         pk, gk, rk, beta, coeff, block_m=bm, block_n=bn,
         interpret=(impl == "interpret"),
@@ -201,7 +221,7 @@ def lowrank_update(
 
 
 def project(p: jax.Array, g: jax.Array, *, side: str = "left",
-            impl: str = "auto") -> jax.Array:
+            impl: str = "auto", pad_rank_to: int = 0) -> jax.Array:
     """Plain low-rank projection PᵀG / G P through the projection kernel —
     the dispatched counterpart of ``lowrank_common.project`` (used by the
     Adam-based optimizers, which consume the projected gradient itself)."""
@@ -211,11 +231,65 @@ def project(p: jax.Array, g: jax.Array, *, side: str = "left",
     if impl == "jnp":
         return _project_jnp(p, g, side)
 
-    pk, gk, _, (lead, r, n, bm, bn) = _lowrank_kernel_form(p, g, None, side)
+    pk, gk, _, (lead, r, n, bm, bn) = _lowrank_kernel_form(
+        p, g, None, side, pad_rank_to
+    )
     out = project_batched(
         pk, gk, 1.0, block_m=bm, block_n=bn, interpret=(impl == "interpret")
     )
     return _lowrank_unkernel_form(out, lead, r, n, side)
+
+
+# --------------------------------------------------------------------------
+# Back-projection GEMM:  P @ S  /  S @ Pᵀ
+# --------------------------------------------------------------------------
+
+
+def back_project_supported(p: jax.Array, s: jax.Array, side: str) -> bool:
+    """The back-projection kernel keeps the whole rank axis resident."""
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    return int(p.shape[-1]) <= MAX_LOWRANK_RANK
+
+
+def _back_project_jnp(p: jax.Array, s: jax.Array, side: str) -> jax.Array:
+    from repro.core.lowrank_common import back_project as bp
+
+    return bp(p.astype(jnp.float32), s.astype(jnp.float32), side)
+
+
+def back_project(p: jax.Array, s: jax.Array, *, side: str = "left",
+                 impl: str = "auto", pad_rank_to: int = 0) -> jax.Array:
+    """Dispatched back-projection of a projected-space array ``s`` to full
+    ``(*lead, m, n)`` shape — the fused counterpart of
+    ``lowrank_common.back_project`` used on every optimizer step's write-back
+    path (``W <- W - lr * P NS(R)``).
+
+    left  side: p (*lead, m, r), s (*lead, r, n) -> P @ S
+    right side: p (*lead, n, r), s (*lead, m, r) -> S @ Pᵀ
+    """
+    impl = resolve_impl(impl)
+    if impl != "jnp" and not back_project_supported(p, s, side):
+        impl = "jnp"
+    if impl == "jnp":
+        return _back_project_jnp(p, s, side)
+
+    lead = s.shape[:-2]
+    if side == "right":
+        # (S @ Pᵀ)ᵀ = P @ Sᵀ: run the left-form kernel on Sᵀ, transpose back.
+        s = jnp.swapaxes(s, -1, -2)
+    pk, sk = _flatten_lead(p), _flatten_lead(s)
+    m, r = int(pk.shape[-2]), int(pk.shape[-1])
+    n = int(sk.shape[-1])
+    m_pad, bm = _pad_and_block(m, 256, _SUBLANE)
+    n_pad, bn = _pad_and_block(n, 512, _LANE)
+    r_pad = _round_up(r, _rank_granule(pad_rank_to))
+    pk = _pad_axis(_pad_axis(pk, -2, m_pad), -1, r_pad)
+    sk = _pad_axis(_pad_axis(sk, -2, r_pad), -1, n_pad)
+    out = back_project_batched(
+        pk, sk, block_m=bm, block_n=bn, interpret=(impl == "interpret")
+    )[..., :m, :n].reshape(lead + (m, n))
+    return jnp.swapaxes(out, -1, -2) if side == "right" else out
 
 
 # --------------------------------------------------------------------------
@@ -303,6 +377,12 @@ register(KernelEntry(
     fn=lowrank_update,
     reference=ref.lowrank_update_ref,
     supported=lowrank_update_supported,
+))
+register(KernelEntry(
+    name="back_project",
+    fn=back_project,
+    reference=ref.back_project_ref,
+    supported=back_project_supported,
 ))
 def _newton_schulz_ref(x, *, steps=5, eps=1e-7):
     from repro.core.newton_schulz import newton_schulz as ns_jnp

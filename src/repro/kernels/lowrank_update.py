@@ -102,6 +102,47 @@ def lowrank_update(
     return out[0]
 
 
+def _back_project_kernel(p_ref, s_ref, out_ref):
+    # Whole contraction dim r (<= 512) is resident, so each (bm, bn) output
+    # tile is one MXU matmul — no reduction loop, no scratch accumulator.
+    p = p_ref[0].astype(jnp.float32)  # (bm, r)
+    s = s_ref[0].astype(jnp.float32)  # (r, bn)
+    out_ref[0] = (p @ s).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def back_project_batched(
+    p: jax.Array,
+    s: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched back-projection GEMM ``P @ S``: p (L, m, r), s (L, r, n) ->
+    (L, m, n) — the second half of every low-rank optimizer step
+    (``W <- W - lr * P NS(R)``), fused so NS(R) never round-trips HBM
+    between the orthogonalization and the back-projection."""
+    L, m, r = p.shape
+    _, _, n = s.shape
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0
+    return pl.pallas_call(
+        _back_project_kernel,
+        grid=(L, m // block_m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((1, block_m, r), lambda l, mi, ni: (l, mi, 0)),
+            pl.BlockSpec((1, r, block_n), lambda l, mi, ni: (l, 0, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n), lambda l, mi, ni: (l, mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((L, m, n), jnp.float32),
+        interpret=interpret,
+    )(p, s)
+
+
 def _project_kernel(p_ref, g_ref, out_ref, acc, *, coeff: float, mblocks: int):
     mi = pl.program_id(2)
 

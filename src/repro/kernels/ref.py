@@ -155,6 +155,11 @@ def lowrank_update_ref(
     )
 
 
+def back_project_ref(p: jax.Array, s: jax.Array) -> jax.Array:
+    """Back-projection GEMM: P (m, r) @ S (r, n) -> (m, n)."""
+    return p.astype(jnp.float32) @ s.astype(jnp.float32)
+
+
 # ------------------------------------------------------------ Mamba-2 SSD
 
 

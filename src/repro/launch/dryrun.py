@@ -62,17 +62,23 @@ TRAIN_MICROBATCHES = {
 }
 
 
-def default_optimizer(arch: str) -> OptimizerConfig:
+def default_optimizer(arch: str, kernel_impl: str = "auto",
+                      pad_rank_to: int = 0) -> OptimizerConfig:
     # GUM (the paper's method) with the TPU-native subspace projector.
+    # kernel_impl is threaded into the compiled cell so dry runs lower the
+    # SAME hot path as training ("pallas" forces the fused kernels into the
+    # HLO even on the host-CPU placeholder devices).
     return OptimizerConfig(
         name="gum", lr=1e-3, rank=128, gamma=2, period=200,
-        projector="subspace", base="muon",
+        projector="subspace", base="muon", kernel_impl=kernel_impl,
+        pad_rank_to=pad_rank_to,
     )
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
              overrides: dict | None = None, microbatches: int | None = None,
-             lowrank_accum: bool = False):
+             lowrank_accum: bool = False, kernel_impl: str = "auto",
+             pad_rank_to: int = 0):
     cfg = get_config(arch)
     if overrides:
         cfg = cfg.replace(**overrides)
@@ -95,10 +101,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
 
     with use_mesh(mesh):
         if shape.kind == "train":
-            ocfg = default_optimizer(arch)
+            ocfg = default_optimizer(arch, kernel_impl, pad_rank_to)
             if opt_name != "gum":
                 ocfg = OptimizerConfig(name=opt_name, rank=128, gamma=2,
-                                       period=200, projector="subspace")
+                                       period=200, projector="subspace",
+                                       kernel_impl=kernel_impl,
+                                       pad_rank_to=pad_rank_to)
             tools = None
             if lowrank_accum:
                 from repro.core.gum import gum_accum_tools
@@ -106,6 +114,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
                 tools = gum_accum_tools(
                     ocfg.lr, rank=ocfg.rank, gamma=ocfg.gamma,
                     period=ocfg.period, projector=ocfg.projector,
+                    kernel_impl=ocfg.kernel_impl,
+                    pad_rank_to=ocfg.pad_rank_to,
                 )
                 opt = tools.transform
             else:
@@ -192,6 +202,14 @@ def main():
     ap.add_argument("--microbatches", type=int, default=0)
     ap.add_argument("--lowrank-accum", action="store_true",
                     help="accumulate microbatch grads in projected space")
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "jnp", "pallas", "interpret"],
+                    help="optimizer hot-loop impl threaded into the compiled "
+                         "cell (OptimizerConfig.kernel_impl) so dry runs "
+                         "lower the same hot path as training")
+    ap.add_argument("--pad-rank-to", type=int, default=0,
+                    help="opt-in lane-aligned rank padding for the low-rank "
+                         "Pallas kernels (e.g. 128)")
     ap.add_argument(
         "--set", action="append", default=[],
         help="ModelConfig overrides, e.g. --set attn_impl=xla_chunked "
@@ -238,7 +256,9 @@ def main():
                 res = run_cell(arch, shape, multi_pod, args.opt,
                                overrides=overrides or None,
                                microbatches=args.microbatches or None,
-                               lowrank_accum=args.lowrank_accum)
+                               lowrank_accum=args.lowrank_accum,
+                               kernel_impl=args.kernel_impl,
+                               pad_rank_to=args.pad_rank_to)
                 res["overrides"] = overrides
                 res["tag"] = args.tag
             except Exception as e:  # record failures — they are bugs to fix

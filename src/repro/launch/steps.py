@@ -121,13 +121,22 @@ def make_train_step(
 ):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
+    ``optimizer`` is any :class:`repro.core.api.Transform` — in practice a
+    combinator chain from :mod:`repro.core.combinators` (built by
+    ``build_optimizer`` or composed by hand, e.g.
+    ``chain(lowrank(layerwise_unbias(scale_by_muon())), scale_by_lr(lr))``).
+
     ``microbatches > 1`` runs gradient accumulation via lax.scan over
     microbatch slices (fp32 accumulator), preserving the global batch size.
 
     ``lowrank_accum`` (a :class:`repro.core.gum.GUMAccumTools`) switches the
     accumulator to the PROJECTED space (beyond-paper): low-rank families
     accumulate Pᵀ G (+ the gamma sampled full blocks) instead of full-shape
-    fp32 gradients — update-equivalent by Property I (see gum.py).
+    fp32 gradients — update-equivalent by Property I (see gum.py).  The
+    tools' project/reconstruct and the refresh hook run through the same
+    kernel dispatch layer as the optimizer itself (``kernel_impl`` /
+    ``pad_rank_to`` are threaded in by the caller, e.g. launch/dryrun.py),
+    so accumulating steps lower the same hot path as plain training.
     """
     cfg = model.cfg
 

@@ -69,13 +69,21 @@ class Trainer:
         data_cfg: DataConfig,
         mesh=None,
         microbatches: int = 1,
+        optimizer=None,
     ):
+        """``optimizer`` (a :class:`repro.core.api.Transform`) overrides the
+        ``opt_cfg`` factory path — pass a hand-composed combinator chain
+        (repro.core.combinators) to train with compositions the factory does
+        not name, e.g. ``chain(combinators.clip_by_global_norm(1.0),
+        lowrank(layerwise_unbias(scale_by_adam())), scale_by_lr(sched))``
+        (the transform-valued clip lives in the combinators namespace; the
+        same name in repro.core is the plain (grads, max_norm) function)."""
         self.model = model
         self.opt_cfg = opt_cfg
         self.run = run_cfg
         self.data_cfg = data_cfg
         self.mesh = mesh
-        self.optimizer = build_optimizer(opt_cfg)
+        self.optimizer = optimizer if optimizer is not None else build_optimizer(opt_cfg)
         self.ckpt = CheckpointManager(run_cfg.ckpt_dir, keep=run_cfg.keep_ckpts)
         self.monitor = StepTimeMonitor()
         self._step_fn = make_train_step(

@@ -1,0 +1,374 @@
+"""The combinator redesign (PR 2): loss-for-loss equivalence of the
+combinator-built optimizers against the frozen pre-redesign monoliths
+(repro.core.legacy), Table-1 memory regression via state_bytes, the new
+unbiased GaLore-Adam composition, and custom-chain composition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import (
+    OptimizerConfig,
+    apply_updates,
+    build_optimizer,
+    chain,
+    combinators,
+    layerwise_unbias,
+    legacy,
+    lowrank,
+    scale_by_adam,
+    scale_by_lr,
+    scale_by_muon,
+    state_bytes,
+    unbiased_galore_adam,
+    with_matrix_routing,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+# A routing-exercising tree: stacked matrix families (left- and right-side
+# projection) plus embedding / norm leaves that fall to the AdamW fallback.
+PARAMS = {
+    "blocks": {
+        "wq": jax.random.normal(KEY, (3, 16, 24)) * 0.1,
+        "w_out": jax.random.normal(jax.random.fold_in(KEY, 1), (3, 24, 16)) * 0.1,
+    },
+    "embed": jax.random.normal(jax.random.fold_in(KEY, 2), (64, 16)) * 0.1,
+    "norm_scale": jnp.ones((16,)),
+}
+
+
+def quad_loss(p):
+    return 0.5 * sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(p))
+
+
+def run_traj(opt, params=PARAMS, steps=8):
+    """(final params, per-step losses) on the shared quadratic."""
+    st = opt.init(params)
+    p = params
+    losses = []
+    for _ in range(steps):
+        g = jax.grad(quad_loss)(p)
+        u, st = opt.update(g, st, p)
+        p = apply_updates(p, u)
+        losses.append(float(quad_loss(p)))
+    return p, losses, st
+
+
+# --------------------------------------------------------- equivalence suite
+
+
+def _builder_pairs(kernel_impl):
+    kw = dict(kernel_impl=kernel_impl)
+    return [
+        ("gum",
+         core.gum(1e-2, rank=4, gamma=1, period=3, seed=5, weight_decay=0.01, **kw),
+         legacy.gum(1e-2, rank=4, gamma=1, period=3, seed=5, weight_decay=0.01, **kw)),
+        ("gum_finetune_sgdm",
+         core.gum(1e-2, rank=4, gamma=1, period=3, seed=7, base="sgdm",
+                  compensation="finetune", **kw),
+         legacy.gum(1e-2, rank=4, gamma=1, period=3, seed=7, base="sgdm",
+                    compensation="finetune", **kw)),
+        ("galore",
+         core.galore(1e-2, rank=4, period=3, **kw),
+         legacy.galore(1e-2, rank=4, period=3, **kw)),
+        ("galore_muon",
+         core.galore(1e-2, rank=4, period=3, base="muon", weight_decay=0.01, **kw),
+         legacy.galore(1e-2, rank=4, period=3, base="muon", weight_decay=0.01, **kw)),
+        ("golore",
+         core.golore(1e-2, rank=4, period=3, seed=2, **kw),
+         legacy.golore(1e-2, rank=4, period=3, seed=2, **kw)),
+        ("fira",
+         core.fira(1e-2, rank=4, period=3, **kw),
+         legacy.fira(1e-2, rank=4, period=3, **kw)),
+        ("muon",
+         core.muon(1e-2, weight_decay=0.01, **kw),
+         legacy.muon(1e-2, weight_decay=0.01, **kw)),
+    ]
+
+
+@pytest.mark.parametrize("idx", range(7))
+def test_equivalence_jnp(idx):
+    """Acceptance: combinator-built optimizers reproduce the pre-redesign
+    trajectories loss-for-loss on the jnp path (bit-level in practice)."""
+    name, new, old = _builder_pairs("jnp")[idx]
+    p_new, l_new, _ = run_traj(new)
+    p_old, l_old, _ = run_traj(old)
+    np.testing.assert_allclose(l_new, l_old, rtol=1e-6, err_msg=name)
+    for a, b in zip(jax.tree_util.tree_leaves(p_new),
+                    jax.tree_util.tree_leaves(p_old)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6, err_msg=name)
+
+
+@pytest.mark.parametrize("idx", [0, 3])  # gum, galore_muon: the kernel users
+def test_equivalence_interpret(idx):
+    """Same trajectories through the Pallas interpreter.  The legacy
+    monoliths back-projected with a plain einsum while the combinators route
+    it through the new fused back_project kernel, so parity here is fp32
+    roundoff, not bit-level."""
+    name, new, old = _builder_pairs("interpret")[idx]
+    p_new, l_new, _ = run_traj(new, steps=5)
+    p_old, l_old, _ = run_traj(old, steps=5)
+    np.testing.assert_allclose(l_new, l_old, rtol=1e-4, err_msg=name)
+    for a, b in zip(jax.tree_util.tree_leaves(p_new),
+                    jax.tree_util.tree_leaves(p_old)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4, err_msg=name)
+
+
+def test_adamw_sgdm_equivalence():
+    for name in ("adamw", "sgdm"):
+        new = (core.adamw if name == "adamw" else core.sgdm)(1e-2, weight_decay=0.01)
+        old = (legacy.adamw if name == "adamw" else legacy.sgdm)(1e-2, weight_decay=0.01)
+        p_new, l_new, _ = run_traj(new)
+        p_old, l_old, _ = run_traj(old)
+        np.testing.assert_allclose(l_new, l_old, rtol=1e-6, err_msg=name)
+
+
+def test_factory_returns_combinator_chains():
+    """build_optimizer resolves every name to combinator-composed transforms
+    (a lowrank() stage is discoverable in each low-rank optimizer's state)."""
+    for name in ("gum", "galore", "galore_muon", "golore", "fira",
+                 "unbiased_galore_adam"):
+        opt = build_optimizer(OptimizerConfig(name=name, lr=1e-2, rank=4,
+                                              gamma=1, period=4))
+        st = opt.init(PARAMS)
+        assert len(core.find_lowrank_states(st)) == 1, name
+    for name in ("adamw", "sgdm", "muon", "lisa"):
+        opt = build_optimizer(OptimizerConfig(name=name, lr=1e-2))
+        opt.init(PARAMS)  # constructs without error
+
+
+# ------------------------------------------------- Table-1 memory regression
+
+
+def test_state_bytes_matches_table1():
+    """state_bytes of lowrank()+layerwise_unbias() matches Table 1's
+    O((2-q)·mrL + q·Lmn) up to the known static-shape overhead (q·L·r·n, the
+    always-allocated low-rank momentum of sampled blocks) plus O(1) counts
+    and the (gamma,) int32 slot index."""
+    L, m, r, gamma = 8, 32, 4, 2
+    q = gamma / L
+    params = {"w": jnp.zeros((L, m, m))}
+    opt = chain(
+        lowrank(layerwise_unbias(scale_by_muon(beta=0.95), gamma=gamma),
+                rank=r, period=10, reset_on_refresh=True),
+        scale_by_lr(1e-2),
+    )
+    st = opt.init(params)
+    got = state_bytes(st)
+    paper_floats = (2 - q) * L * m * r + q * L * m * m
+    static_overhead = q * L * r * m          # low momentum of sampled blocks
+    # idx int32 + the lowrank and lr-schedule counts (scale_by_muon is
+    # count-free: its state is the momentum tree alone)
+    bookkeeping = gamma * 4 + 2 * 4
+    assert got == (paper_floats + static_overhead) * 4 + bookkeeping, got
+    # GaLore at the same rank for comparison: 2·L·m·r floats + 2 counts
+    gal = chain(lowrank(scale_by_muon(beta=0.95), rank=r, period=10),
+                scale_by_lr(1e-2))
+    assert state_bytes(gal.init(params)) == 2 * L * m * r * 4 + 2 * 4
+
+
+# --------------------------------------------- the NEW composition: UGA
+
+
+def test_unbiased_galore_adam_descends_and_samples():
+    """Acceptance: unbiased GaLore-Adam ships as a pure composition —
+    layerwise_unbias wrapping scale_by_adam — with full-rank sampled slots
+    and descent on the quadratic."""
+    opt = build_optimizer(OptimizerConfig(
+        name="unbiased_galore_adam", lr=1e-1, rank=4, gamma=2, period=100,
+        projector="svd", seed=3,
+    ))
+    L, m, n, r = 6, 10, 14, 4
+    params = {"w": jnp.zeros((L, m, n))}
+    st = opt.init(params)
+    g = {"w": jax.random.normal(KEY, (L, m, n))}
+    upd, st2 = opt.update(g, st, params)
+    idx = np.asarray(core.find_lowrank_states(st2)[0].inner.idx["w"])
+    assert idx.shape == (2,)
+    for l in range(L):
+        rank_u = np.linalg.matrix_rank(np.asarray(upd["w"][l]), tol=1e-5)
+        if l in idx:
+            assert rank_u > r, (l, rank_u)   # compensated full-rank Adam slot
+        else:
+            assert rank_u <= r, (l, rank_u)  # projected GaLore-Adam update
+    # the full branch carries its own Adam moment slots: (gamma, m, n) x2
+    full = core.find_lowrank_states(st2)[0].inner.full
+    assert full.mu["w"].shape == (2, m, n) and full.nu["w"].shape == (2, m, n)
+    # and it trains once the subspace/block sampling actually rotates
+    # (short period; lr*alpha = 2.5e-2 effective Adam step)
+    opt_fast = build_optimizer(OptimizerConfig(
+        name="unbiased_galore_adam", lr=1e-1, rank=4, gamma=2, period=5,
+        projector="svd", seed=3,
+    ))
+    p_end, losses, _ = run_traj(
+        opt_fast, {"w": jax.random.normal(KEY, (L, m, n)) * 0.3}, steps=60
+    )
+    assert losses[-1] < 0.2 * losses[0], losses
+
+
+def test_unbiased_galore_adam_gamma0_is_galore_adam():
+    """With no sampled slots the composition degenerates to plain GaLore-Adam
+    (same gradient path, same moments) — the q=0 sanity anchor."""
+    uga = build_optimizer(OptimizerConfig(
+        name="unbiased_galore_adam", lr=1e-2, rank=4, gamma=0, period=3, seed=5))
+    # galore resets moments only with reset_on_update; UGA always resets at
+    # the boundary, so compare against a reset_on_update GaLore-Adam chain.
+    gal = with_matrix_routing(
+        core.galore_matrices(1e-2, rank=4, period=3, reset_on_update=True, seed=5),
+        core.adamw(1e-2),
+        matrix_label="unbiased_galore_adam",
+    )
+    p_a, l_a, _ = run_traj(uga)
+    p_b, l_b, _ = run_traj(gal)
+    np.testing.assert_allclose(l_a, l_b, rtol=1e-6)
+
+
+# ------------------------------------------------------- custom compositions
+
+
+def test_custom_chain_with_clip_descends():
+    """The combinators compose freely: clip -> lowrank(muon) -> lr."""
+    opt = with_matrix_routing(
+        chain(
+            combinators.clip_by_global_norm(1.0),
+            lowrank(scale_by_muon(beta=0.9), rank=4, period=5, seed=1),
+            combinators.add_decayed_weights(0.001),
+            scale_by_lr(3e-2),
+        ),
+        core.adamw(3e-2),
+    )
+    p_end, losses, _ = run_traj(opt, steps=20)
+    assert losses[-1] < 0.6 * losses[0], losses
+
+
+def test_with_matrix_routing_custom_filter():
+    """with_matrix_routing generalizes the old per-optimizer label plumbing:
+    a custom predicate routes leaves, labels name the state entries."""
+    routed = with_matrix_routing(
+        core.sgdm(1e-1),
+        core.adamw(1e-2),
+        matrix_filter=lambda path, p: "wq" in path,
+        matrix_label="sgdm_side",
+        fallback_label="adam_side",
+    )
+    st = routed.init(PARAMS)
+    assert set(st.inner) == {"sgdm_side", "adam_side"}
+    g = jax.tree_util.tree_map(jnp.ones_like, PARAMS)
+    u, _ = routed.update(g, st, PARAMS)
+    # sgdm side: -lr * mu = -0.1 exactly on first step; adam side differs
+    np.testing.assert_allclose(np.asarray(u["blocks"]["wq"]), -0.1, rtol=1e-6)
+    assert not np.allclose(np.asarray(u["embed"]), -0.1)
+
+
+def test_layerwise_unbias_q1_skips_low_branch():
+    """gamma >= L (q = 1, e.g. an unstacked 2-D matrix under the default
+    gamma=2): every block is sampled full-rank, so the low branch carries no
+    state and does no work — and the trajectory still matches legacy gum."""
+    params = {"w": jax.random.normal(KEY, (10, 14)) * 0.3}  # L = 1
+    new = core.gum_matrices(1e-2, rank=4, gamma=2, period=3, seed=5)
+    old = legacy.gum_matrices(1e-2, rank=4, gamma=2, period=3, seed=5)
+    st = new.init(params)
+    assert core.find_lowrank_states(st)[0].inner.low["w"] is None
+    assert core.find_lowrank_states(st)[0].inner.full["w"].shape == (1, 10, 14)
+    p_new, l_new, _ = run_traj(new, params)
+    p_old, l_old, _ = run_traj(old, params)
+    np.testing.assert_allclose(l_new, l_old, rtol=1e-6)
+
+
+def test_chain_inside_lowrank_forwards_protocol():
+    """A chain whose head speaks the lowrank protocol composes inside
+    lowrank(): chain() forwards wants_sample_key/refresh_state and
+    scale_by_factor scales through ProjGrad/FullUpdate leaves."""
+    def mk(factor):
+        stages = [layerwise_unbias(scale_by_muon(beta=0.9), gamma=1)]
+        if factor is not None:
+            stages.append(combinators.scale_by_factor(factor))
+        inner = chain(*stages) if factor is not None else stages[0]
+        return chain(
+            lowrank(inner, rank=4, period=3, seed=5, reset_on_refresh=True),
+            scale_by_lr(1e-2),
+        )
+
+    params = {"w": jax.random.normal(KEY, (3, 10, 12)) * 0.3}
+    plain, halved = mk(None), mk(0.5)
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    u1, _ = plain.update(g, plain.init(params), params)
+    u2, _ = halved.update(g, halved.init(params), params)
+    np.testing.assert_allclose(np.asarray(u2["w"]), 0.5 * np.asarray(u1["w"]),
+                               atol=1e-6, rtol=1e-5)
+    # and the composed chain still trains across refreshes (RNG key plumbing
+    # survived the chain wrapper)
+    _, losses, _ = run_traj(halved, params, steps=10)
+    assert losses[-1] < losses[0]
+
+
+def test_layerwise_unbias_requires_lowrank():
+    t = chain(layerwise_unbias(scale_by_adam()), scale_by_lr(1e-2))
+    params = {"w": jnp.zeros((2, 8, 8))}
+    with pytest.raises(TypeError, match="inside lowrank"):
+        t.init(params)
+
+
+def test_fira_residual_honors_reset_on_refresh_consistently():
+    """reset_on_refresh=True through with_fira_residual: the in-update path
+    (ProjGrad.reset) and the external-refresh path (generic float zeroing)
+    must produce identical trajectories — the base consumes plain arrays, so
+    the wrapper has to apply the reset itself."""
+    from repro.core.combinators import with_fira_residual
+
+    def mk(ext):
+        return chain(
+            lowrank(with_fira_residual(scale_by_adam(), eps=1e-8),
+                    rank=3, period=2, seed=4, reset_on_refresh=True,
+                    external_refresh=ext),
+            scale_by_lr(1e-2),
+        )
+
+    internal, external = mk(False), mk(True)
+    params = {"w": jax.random.normal(KEY, (2, 8, 12)) * 0.3}
+    st_i, st_e = internal.init(params), external.init(params)
+    # the refresh hook is config-determined, so an identically-configured
+    # fresh lowrank stage drives the external chain's state
+    lr_t = lowrank(with_fira_residual(scale_by_adam(), eps=1e-8),
+                   rank=3, period=2, seed=4, reset_on_refresh=True,
+                   external_refresh=True)
+    p_i, p_e = params, params
+    for _ in range(5):
+        g_i = jax.grad(quad_loss)(p_i)
+        u_i, st_i = internal.update(g_i, st_i, p_i)
+        p_i = apply_updates(p_i, u_i)
+        g_e = jax.grad(quad_loss)(p_e)
+        new_lr = lr_t.update.refresh(g_e, st_e[0], p_e)
+        st_e = (new_lr,) + tuple(st_e[1:])
+        u_e, st_e = external.update(g_e, st_e, p_e)
+        p_e = apply_updates(p_e, u_e)
+    for a, b in zip(jax.tree_util.tree_leaves(p_i), jax.tree_util.tree_leaves(p_e)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_external_refresh_matches_in_update_refresh():
+    """lowrank's external-refresh hook (the accumulation path) reproduces the
+    in-update refresh exactly: same projector RNG, same slot resampling."""
+    mk = lambda ext: core.gum_matrices(1e-2, rank=4, gamma=1, period=2, seed=9,
+                                       external_refresh=ext)
+    internal, external = mk(False), mk(True)
+    ext_refresh = external.update.lowrank_transform.update.refresh
+    params = {"w": jax.random.normal(KEY, (3, 10, 12)) * 0.3}
+    st_i, st_e = internal.init(params), external.init(params)
+    p_i, p_e = params, params
+    for _ in range(5):
+        g_i = jax.grad(quad_loss)(p_i)
+        u_i, st_i = internal.update(g_i, st_i, p_i)
+        p_i = apply_updates(p_i, u_i)
+        g_e = jax.grad(quad_loss)(p_e)
+        st_e = st_e[:1] + st_e[1:]  # no-op: states are plain tuples
+        new_lr = ext_refresh(g_e, st_e[0], p_e)
+        st_e = (new_lr,) + tuple(st_e[1:])
+        u_e, st_e = external.update(g_e, st_e, p_e)
+        p_e = apply_updates(p_e, u_e)
+    for a, b in zip(jax.tree_util.tree_leaves(p_i), jax.tree_util.tree_leaves(p_e)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

@@ -37,9 +37,11 @@ def test_resolve_impl():
 
 
 def test_registry():
-    assert set(KERNEL_REGISTRY) >= {"lowrank_update", "newton_schulz"}
+    assert set(KERNEL_REGISTRY) >= {"lowrank_update", "newton_schulz",
+                                    "back_project"}
     entry = get_kernel("lowrank_update")
     assert entry.fn is dispatch.lowrank_update
+    assert get_kernel("back_project").fn is dispatch.back_project
     with pytest.raises(KeyError):
         get_kernel("nope")
 
@@ -106,6 +108,83 @@ def test_project_dispatch_matches_einsum():
     g = jax.random.normal(jax.random.fold_in(KEY, 1), (m, n))
     out = dispatch.project(p, g, side="left", impl="interpret")
     np.testing.assert_allclose(out, p.T @ g, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,r", [
+    (1000, 768, 96),   # the production operating point, ragged
+    (100, 76, 12),
+    (24, 128, 8),
+])
+def test_back_project_ragged_left(m, n, r):
+    """The fused back-projection GEMM P @ S through the padding wrappers."""
+    p = jax.random.normal(KEY, (m, r))
+    s = jax.random.normal(jax.random.fold_in(KEY, 1), (r, n))
+    out = dispatch.back_project(p, s, side="left", impl="interpret")
+    np.testing.assert_allclose(out, ref.back_project_ref(p, s),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_back_project_right_batched():
+    """Right side S @ Pᵀ over a stacked family, plus shape-legality fallback."""
+    L, m, n, r = 3, 76, 40, 12
+    p = jax.random.normal(KEY, (L, n, r))
+    s = jax.random.normal(jax.random.fold_in(KEY, 1), (L, m, r))
+    out = dispatch.back_project(p, s, side="right", impl="interpret")
+    want = jnp.einsum("lmr,lnr->lmn", s, p)
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+    # rank beyond the VMEM bound falls back to jnp instead of failing
+    r_big = dispatch.MAX_LOWRANK_RANK + 1
+    pb = jnp.zeros((8, r_big))
+    sb = jnp.zeros((r_big, 16))
+    assert not dispatch.back_project_supported(pb, sb, "left")
+    assert dispatch.back_project(pb, sb, impl="interpret").shape == (8, 16)
+
+
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_pad_rank_to_parity_ragged_rank(side):
+    """Opt-in lane-aligned rank padding (r=96 -> 128) is exact across all
+    three dispatched ops."""
+    m, n, r = 200, 160, 96
+    ks = jax.random.split(KEY, 3)
+    if side == "left":
+        p = jax.random.normal(ks[0], (m, r))
+        rst = jax.random.normal(ks[2], (r, n))
+        s = rst
+    else:
+        p = jax.random.normal(ks[0], (n, r))
+        rst = jax.random.normal(ks[2], (m, r))
+        s = rst
+    g = jax.random.normal(ks[1], (m, n))
+    for pad in (0, 128):
+        out = dispatch.lowrank_update(p, g, rst, 0.9, 1.5, side=side,
+                                      impl="interpret", pad_rank_to=pad)
+        want = dispatch.lowrank_update(p, g, rst, 0.9, 1.5, side=side, impl="jnp")
+        np.testing.assert_allclose(out, want, atol=2e-4, rtol=2e-4)
+        outp = dispatch.project(p, g, side=side, impl="interpret", pad_rank_to=pad)
+        np.testing.assert_allclose(
+            outp, dispatch.project(p, g, side=side, impl="jnp"),
+            atol=2e-4, rtol=2e-4)
+        outb = dispatch.back_project(p, s, side=side, impl="interpret",
+                                     pad_rank_to=pad)
+        np.testing.assert_allclose(
+            outb, dispatch.back_project(p, s, side=side, impl="jnp"),
+            atol=2e-4, rtol=2e-4)
+
+
+def test_pad_rank_to_optimizer_parity():
+    """An optimizer built with pad_rank_to=128 at a ragged rank matches the
+    unpadded kernel path (and the jnp path) trajectory."""
+    from repro.core.galore import galore_matrices
+
+    params = {"w": jax.random.normal(KEY, (2, 24, 40)) * 0.1}
+    mk = lambda **kw: galore_matrices(1e-2, rank=6, period=3, base="muon",
+                                      seed=2, **kw)
+    p_ref = _run_traj(mk(kernel_impl="jnp"), params)
+    p_pad = _run_traj(mk(kernel_impl="pallas", pad_rank_to=128), params)
+    for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                    jax.tree_util.tree_leaves(p_pad)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
 
 
 @pytest.mark.parametrize("shape", [

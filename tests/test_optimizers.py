@@ -76,26 +76,28 @@ def test_gum_gamma0_equals_galore_muon():
 
 def test_gum_memory_matches_table1():
     """Table 1: paper GUM state = (2-q)·L·m·r + q·L·m·n floats.  Our
-    static-shape formulation (jit-compatible) keeps r_low for all L blocks,
-    adding exactly q·L·r·n on top (≈2% at the paper's gamma=2, L=32+):
-    total = 2·L·m·r + q·L·m·n."""
+    static-shape formulation (jit-compatible) keeps the low-rank momentum for
+    all L blocks, adding exactly q·L·r·n on top (≈2% at the paper's gamma=2,
+    L=32+): total = 2·L·m·r + q·L·m·n.  State navigation: gum_matrices is
+    chain(lowrank(layerwise_unbias(...)), ...) — the lowrank state sits at
+    chain position 0 with the unbias state (low/full/idx) inside."""
     L, m, r, gamma = 8, 32, 4, 2
     q = gamma / L
     params = {"w": jnp.zeros((L, m, m))}
     opt = gum_matrices(1e-2, rank=r, gamma=gamma, period=10)
     st = opt.init(params)
-    fam = st.families["w"]
-    floats = fam.p.size + fam.r_low.size + fam.r_full.size
+    lrs = st[0]  # LowRankState
+    floats = (lrs.projs["w"].size + lrs.inner.low["w"].size
+              + lrs.inner.full["w"].size)
     paper = (2 - q) * L * m * r + q * L * m * m
     static_overhead = q * L * r * m
     assert floats == paper + static_overhead, (floats, paper, static_overhead)
     # the overhead is bounded by q·(r/m) relative to the paper's m² term
     assert static_overhead / paper < 0.10
-    # GaLore for comparison: 2·L·m·r
+    # GaLore for comparison: 2·L·m·r (projector + one projected moment)
     gal = galore_matrices(1e-2, rank=r, period=10, base="muon")
     sg = gal.init(params)
-    gfam = sg.families["w"]
-    assert gfam.p.size + gfam.m1.size == 2 * L * m * r
+    assert sg[0].projs["w"].size + sg[0].inner["w"].size == 2 * L * m * r
 
 
 def test_gum_equal_memory_tradeoff():
@@ -116,7 +118,7 @@ def test_gum_full_slots_follow_sampled_layers():
     st = opt.init(params)
     g = {"w": jax.random.normal(KEY, (L, m, n))}
     upd, st2 = opt.update(g, st, params)
-    idx = np.asarray(st2.families["w"].idx)
+    idx = np.asarray(st2[0].inner.idx["w"])
     for l in range(L):
         u = np.asarray(upd["w"][l])
         rank_u = np.linalg.matrix_rank(u, tol=1e-5)
@@ -137,5 +139,5 @@ def test_schedules():
 def test_state_bytes_counts_arrays():
     opt = build_optimizer(OptimizerConfig(name="adamw", lr=1e-3))
     st = opt.init({"w": jnp.zeros((8, 8))})
-    # mu + nu (f32) + count
-    assert state_bytes(st) == 8 * 8 * 4 * 2 + 4
+    # mu + nu (f32) + the adam count + the lr-schedule count
+    assert state_bytes(st) == 8 * 8 * 4 * 2 + 4 + 4
