@@ -1,0 +1,20 @@
+"""Shared --smoke plumbing for the benchmark suites.
+
+``benchmarks/run.py --smoke`` exports ``BENCH_SMOKE=1``; each suite clamps
+its step counts through :func:`steps` and skips result-JSON writes through
+:func:`smoke` (a 1–2-step smoke run makes no timing claims, and must not
+clobber real ``results/BENCH_*.json`` trajectories).  A tier-1 test invokes
+the smoke mode end-to-end so benchmark suites cannot silently bit-rot.
+"""
+from __future__ import annotations
+
+import os
+
+
+def smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE") == "1"
+
+
+def steps(default: int, smoke_steps: int = 2) -> int:
+    """Clamp a suite's step count in smoke mode."""
+    return min(default, smoke_steps) if smoke() else default

@@ -50,9 +50,11 @@ def main() -> None:
         den = jnp.linalg.norm(g, axis=(-2, -1)) + 1e-12
         return jnp.mean(num / den)
 
+    from _smoke import steps as smoke_steps
+
     print("name,us_per_call,derived")
     at_refresh, mid_period = [], []
-    for t in range(3 * period):
+    for t in range(smoke_steps(3 * period)):
         tokens = jnp.asarray(stream.batch_at(t))
         g = grad_fn(params, tokens)
         gb = {"blocks": g["blocks"]}

@@ -73,16 +73,19 @@ def _time_step(opt, steps: int) -> float:
 
 
 def main() -> None:
+    from _smoke import smoke, steps as smoke_steps
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--out", default="results")
     args, _ = ap.parse_known_args()
+    n_steps = smoke_steps(args.steps, 1)
 
     print("name,us_per_call,derived")
     rows = []
     for name, new_b, old_b in _builders():
-        us_new = _time_step(new_b(), args.steps)
-        us_old = _time_step(old_b(), args.steps)
+        us_new = _time_step(new_b(), n_steps)
+        us_old = _time_step(old_b(), n_steps)
         overhead = (us_new - us_old) / us_old * 100.0
         print(f"optapi_{name}_chained,{us_new:.0f},overhead_pct={overhead:+.1f}")
         print(f"optapi_{name}_legacy,{us_old:.0f},baseline")
@@ -90,11 +93,14 @@ def main() -> None:
                      "us_legacy": round(us_old, 1),
                      "overhead_pct": round(overhead, 2)})
 
+    if smoke():
+        print("# smoke mode: skipping BENCH_optimizer_api.json write", flush=True)
+        return
     os.makedirs(args.out, exist_ok=True)
     entry = {
         "suite": "optimizer_api",
         "backend": jax.default_backend(),
-        "steps": args.steps,
+        "steps": n_steps,
         "kernel_impl": OPT_KW["kernel_impl"],
         "rows": rows,
     }

@@ -1,7 +1,11 @@
 """Benchmark harness — one entry per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Heavy suites can be selected
-with BENCH_ONLY=<name>; default runs everything.
+with BENCH_ONLY=<name>; default runs everything.  ``--smoke`` runs every
+suite at 1–2 steps with result-JSON writes disabled — no timing claims, just
+an end-to-end execution check (a tier-1 test invokes it, so suites cannot
+silently bit-rot; this harness itself had un-importable suites before that
+test existed).
 
   synthetic_counterexample  — Fig. 1 (GaLore fails, GUM converges)
   memory_table              — Tables 1 & 3 (optimizer-state memory)
@@ -11,14 +15,26 @@ with BENCH_ONLY=<name>; default runs everything.
   roofline_report           — §Roofline aggregation from the dry-run JSONs
   optimizer_api             — combinator-chain vs legacy-monolith per-step
                               overhead (PR 2; writes BENCH_optimizer_api.json)
+  fused_step                — family-stacked fused engine vs per-leaf chained
+                              vs legacy: step time + kernel-launch counts
+                              (PR 3; writes BENCH_fused_step.json)
   kernel_micro              — per-kernel wall-time microbenchmarks (CPU
                               interpret/xla; indicative only, not TPU)
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
+
+# Make `benchmarks.<suite>` (and the suites' `_smoke` import) resolvable no
+# matter where the harness is launched from: repo root for the package form,
+# this directory for the script form.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+for _p in (os.path.dirname(_HERE), _HERE):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def kernel_micro() -> None:
@@ -68,10 +84,18 @@ SUITES = [
     "stable_rank",
     "roofline_report",
     "optimizer_api",
+    "fused_step",
 ]
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1-2 steps per suite, no timing claims, no "
+                         "result-JSON writes (CI execution check)")
+    args, _ = ap.parse_known_args()
+    if args.smoke:
+        os.environ["BENCH_SMOKE"] = "1"
     only = os.environ.get("BENCH_ONLY")
     ran_header = False
     for name in SUITES:
@@ -86,6 +110,8 @@ def main() -> None:
         if not ran_header:
             print("name,us_per_call,derived")
         kernel_micro()
+    if args.smoke:
+        print("# smoke run complete", flush=True)
 
 
 if __name__ == "__main__":

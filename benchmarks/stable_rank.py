@@ -72,10 +72,12 @@ def mean_block_stable_rank(params) -> tuple[float, float]:
 
 
 def main() -> None:
+    from _smoke import steps as smoke_steps
+
     print("name,us_per_call,derived")
     out = {}
     for method in ("galore_muon", "gum"):
-        params, loss = train(method)
+        params, loss = train(method, steps=smoke_steps(120))
         sr, flat = mean_block_stable_rank(params)
         out[method] = (sr, flat, loss)
         print(f"stable_rank_fig2_{method},0,stable_rank={sr:.3f};"

@@ -106,11 +106,13 @@ def run(
 
 def main() -> None:
     """CSV: method, final adjusted loss (paper Fig. 1)."""
+    from _smoke import steps as smoke_steps
+
     prob = make_problem()
     print("name,us_per_call,derived")
     for method in ("muon", "galore_muon", "gum"):
         rank = 12 if method == "galore_muon" else 2
-        losses = run(prob, method, steps=2000, rank=rank)
+        losses = run(prob, method, steps=smoke_steps(2000), rank=rank)
         print(f"synthetic_fig1_{method},0,final_adjusted_loss={losses[-1]:.4f}")
 
 

@@ -31,6 +31,19 @@ params = model.init(jax.random.PRNGKey(0))
 # Under the hood this IS a combinator chain:
 #   chain(lowrank(layerwise_unbias(scale_by_muon())), add_decayed_weights(),
 #         scale_by_lr()) routed against an AdamW fallback.
+#
+# Family-stacked fused execution (PR 3): add fuse_families=True to run the
+# whole low-rank pipeline as ONE batched launch per shape family instead of
+# one per parameter leaf — trajectory-identical (bit-exact on the jnp path
+# at deterministic shapes; large threaded-GEMM shapes can round <=1 fp32 ulp
+# apart), just faster:
+#   OptimizerConfig(name="gum", ..., fuse_families=True)
+# fused_epilogue=True additionally folds the -lr/weight-decay chain tail
+# into the back-projection GEMM kernel for optimizers whose update lowrank()
+# back-projects (galore / galore_muon / golore); gum and fira emit
+# full-shape updates themselves, so for them the knob is inert.  Same knobs
+# on lowrank() for hand-composed chains, and as --fuse-families /
+# --fused-epilogue on repro.launch.train / dryrun.
 opt = build_optimizer(OptimizerConfig(name="gum", lr=5e-3, rank=8, gamma=1, period=10))
 opt_state = opt.init(params)
 

@@ -55,12 +55,14 @@ from .combinators import (
     FullUpdate,
     LayerwiseUnbiasState,
     LowRankState,
+    PendingBack,
     ProjGrad,
     add_decayed_weights,
     chain,
     find_lowrank_states,
     layerwise_unbias,
     lowrank,
+    materialize_pending,
     scale_by_adam,
     scale_by_factor,
     scale_by_lr,
@@ -70,6 +72,7 @@ from .combinators import (
     with_matrix_routing,
 )
 from .factory import build_optimizer
+from .family_plan import FamilyPlan, StackSeg, build_family_plan
 from .fira import fira, fira_matrices
 from .galore import galore, galore_matrices, golore
 from .gum import gum, gum_accum_tools, gum_matrices, unbiased_galore_adam
@@ -81,6 +84,7 @@ from .projectors import (
     grass_projector,
     make_projector,
     random_projector,
+    rsvd_projector,
     subspace_projector,
     svd_projector,
 )
@@ -88,15 +92,17 @@ from .schedules import constant, linear_warmup, warmup_cosine
 from .unbiased import unbiased_lowrank
 
 __all__ = [
-    "FullUpdate", "LayerwiseUnbiasState", "LowRankState", "OptimizerConfig",
-    "ProjGrad", "Transform", "adamw", "add_decayed_weights", "apply_updates",
+    "FamilyPlan", "FullUpdate", "LayerwiseUnbiasState", "LowRankState",
+    "OptimizerConfig", "PendingBack", "ProjGrad", "StackSeg", "Transform",
+    "adamw", "add_decayed_weights", "apply_updates", "build_family_plan",
     "build_optimizer", "chain", "clip_by_global_norm", "constant",
     "default_lowrank_filter", "find_lowrank_states", "fira", "fira_matrices",
     "galore", "galore_matrices", "global_norm", "golore", "grass_projector",
     "gum", "gum_accum_tools", "gum_matrices", "layerwise_unbias",
-    "linear_warmup", "lisa", "lowrank", "make_projector", "msign_exact",
-    "multi_transform", "muon", "muon_matrices", "muon_scale", "newton_schulz",
-    "random_projector", "scale_by_adam", "scale_by_factor", "scale_by_lr",
+    "linear_warmup", "lisa", "lowrank", "make_projector",
+    "materialize_pending", "msign_exact", "multi_transform", "muon",
+    "muon_matrices", "muon_scale", "newton_schulz", "random_projector",
+    "rsvd_projector", "scale_by_adam", "scale_by_factor", "scale_by_lr",
     "scale_by_momentum", "scale_by_muon", "sgdm", "state_bytes",
     "subspace_projector", "svd_projector", "tree_paths",
     "unbiased_galore_adam", "unbiased_lowrank", "warmup_cosine",

@@ -34,11 +34,18 @@ def schedule_value(lr: Schedule, count: jax.Array) -> jax.Array:
 
 
 def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    def one(p, u):
+        if u is None:
+            return p
+        if hasattr(u, "materialize_update"):
+            # A deferred-epilogue leaf (combinators.PendingBack) from a chain
+            # that ended without scale_by_lr: materialize it leaf-by-leaf
+            # (correct, just not family-grouped).
+            u = u.materialize_update()
+        return p + u.astype(p.dtype)
+
     return jax.tree_util.tree_map(
-        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
-        params,
-        updates,
-        is_leaf=lambda x: x is None,
+        one, params, updates, is_leaf=lambda x: x is None
     )
 
 
@@ -166,6 +173,18 @@ class OptimizerConfig:
     # 128 rounds ragged ranks (e.g. r=96) up to a full MXU lane multiple for
     # peak systolic-array utilization; 0 keeps the minimal sublane granule.
     pad_rank_to: int = 0
+    # Family-stacked fused execution: group same-shape leaves into stacked
+    # (L, m, n) super-leaves so the lowrank() pipeline launches once per
+    # shape family instead of once per leaf.  Trajectory-identical to the
+    # per-leaf path (per-member PRNG preserved) but the optimizer-state
+    # layout changes — off by default so existing trajectories/checkpoints
+    # are bit-for-bit unchanged.
+    fuse_families: bool = False
+    # Fold chain-tail elementwise epilogues (scale_by_lr /
+    # add_decayed_weights / scale_by_factor) into the back-projection GEMM
+    # via the fused back_project_epilogue kernel.  Not bit-exact (the
+    # epilogue redistributes multiplications), hence a separate opt-in.
+    fused_epilogue: bool = False
     # Muon's sqrt(max(1, m/n)) RMS-matching factor.  None = each optimizer's
     # default (muon: on, matching Jordan et al.; gum: off, matching Alg. 2).
     use_muon_scale: bool | None = None

@@ -59,6 +59,36 @@ At init time the same positions hold :class:`ProjInit` leaves carrying the
 projected-space state template plus the :class:`~repro.core.lowrank_common.
 FamilyShape`, so wrappers like ``layerwise_unbias`` can size their full-rank
 slots without ever seeing real parameters.
+
+Family-stacked fused execution (``fuse_families=True``)
+-------------------------------------------------------
+By default ``lowrank`` iterates the parameter leaves in Python, issuing one
+project / momentum / back-project dispatch per leaf.  With
+``fuse_families=True`` it instead computes a static :class:`~repro.core.
+family_plan.FamilyPlan` grouping same-signature leaves into stacked
+``(L, m, n)`` super-leaves and runs the WHOLE pipeline — projector refresh,
+fused project+momentum, inner scale, back-projection — as one batched launch
+per shape family.  The inner transform sees one :class:`ProjGrad` per family
+whose ``seg`` field carries the member geometry; per-leaf PRNG keys are
+stacked (never merged) and ``layerwise_unbias`` samples per *member*, so the
+stacked trajectory is bit-identical to the per-leaf one on the jnp path
+(tests/test_fused_step.py; at large threaded-GEMM shapes batched-vs-unbatched
+reduction order can still round a value differently — observed ≤1 fp32 ulp
+over 6 trainer steps on llama-60m, with sampling and projectors exactly
+equal).  Optimizer-state layout changes (family lists instead of per-leaf
+trees), so the knob is opt-in.
+
+``fused_epilogue=True`` additionally defers the final back-projection into a
+:class:`PendingBack` leaf so chain-tail elementwise epilogues (``scale_by_lr``,
+``add_decayed_weights``, ``scale_by_factor``) fold into the back-projection
+GEMM — one ``back_project_epilogue`` launch per family instead of a GEMM plus
+per-leaf elementwise passes.  Not bit-exact (the epilogue redistributes the
+multiplications), hence a separate knob.  Scope: it applies to inner
+transforms whose output ``lowrank`` back-projects (galore / galore_muon /
+golore); inners that emit full-shape :class:`FullUpdate` leaves
+(``layerwise_unbias`` — gum/unbiased_galore_adam — and
+``with_fira_residual``) already own their back-projection and pass through
+unchanged, so the knob is inert there (they still get the stacking win).
 """
 from __future__ import annotations
 
@@ -76,6 +106,12 @@ from .api import (
     tree_paths,
 )
 from .api import clip_by_global_norm as _clip_tree
+from .family_plan import (
+    build_family_plan,
+    member_keys,
+    stack_family,
+    unstack_family,
+)
 from .lowrank_common import (
     FamilyShape,
     compute_projectors,
@@ -109,23 +145,25 @@ class ProjInit:
 
     ``low`` is a ShapeDtypeStruct of the projected-space state — transforms
     allocate momenta with ``jnp.zeros_like(leaf.low)`` via
-    :func:`_zeros_momentum`; ``fs`` carries the full family geometry."""
+    :func:`_zeros_momentum`; ``fs`` carries the full family geometry.  Under
+    family stacking ``seg`` carries the member geometry (None per-leaf)."""
 
-    __slots__ = ("fs", "low")
+    __slots__ = ("fs", "low", "seg")
 
-    def __init__(self, fs: FamilyShape, low):
+    def __init__(self, fs: FamilyShape, low, seg=None):
         self.fs = fs
         self.low = low
+        self.seg = seg
 
 
 class ProjGrad:
     """Lazy projected gradient leaf handed to transforms inside ``lowrank``."""
 
     __slots__ = ("p", "g", "fs", "kernel_impl", "pad_rank_to", "coeff",
-                 "reset", "refresh", "key")
+                 "reset", "refresh", "key", "seg")
 
     def __init__(self, p, g, fs, kernel_impl, pad_rank_to=0, coeff=1.0,
-                 reset=None, refresh=False, key=None):
+                 reset=None, refresh=False, key=None, seg=None):
         self.p = p                      # (*lead, s, r) refreshed projector
         self.g = g                      # (*lead, m, n) raw fp32 gradient
         self.fs = fs                    # FamilyShape (static)
@@ -134,12 +172,13 @@ class ProjGrad:
         self.coeff = coeff              # static float on the projected grad
         self.reset = reset              # traced bool: zero momenta first (or None)
         self.refresh = refresh          # traced bool period boundary (False = external)
-        self.key = key                  # sampling PRNG key (or None)
+        self.key = key                  # sampling key; (members, 2) when stacked
+        self.seg = seg                  # StackSeg under family stacking (or None)
 
     def with_coeff(self, coeff: float) -> "ProjGrad":
         return ProjGrad(self.p, self.g, self.fs, self.kernel_impl,
                         self.pad_rank_to, coeff, self.reset, self.refresh,
-                        self.key)
+                        self.key, self.seg)
 
     def apply_reset(self, x):
         """Zero a momentum buffer at the period boundary (no-op if the
@@ -184,13 +223,170 @@ class FullUpdate:
 
 
 class RefreshMsg:
-    """Per-leaf message for the external-refresh hook (see ``lowrank``)."""
+    """Per-leaf message for the external-refresh hook (see ``lowrank``).
+    Under family stacking, one message per family: ``key`` is the stacked
+    ``(members, 2)`` per-member sampling keys and ``seg`` the geometry."""
 
-    __slots__ = ("fs", "key")
+    __slots__ = ("fs", "key", "seg")
 
-    def __init__(self, fs: FamilyShape, key):
+    def __init__(self, fs: FamilyShape, key, seg=None):
         self.fs = fs
         self.key = key
+        self.seg = seg
+
+
+class PendingBack:
+    """Lazy scale-and-back-project epilogue leaf (``fused_epilogue=True``).
+
+    Represents ``scale * back_project(p, s) + decay * W`` without
+    materializing the full-shape update.  Protocol-aware tail transforms fold
+    their elementwise epilogues into the two scalars (``scale_by_lr`` and
+    ``scale_by_factor`` via :meth:`scaled`, ``add_decayed_weights`` via
+    :meth:`decayed`); ``scale_by_lr`` — the terminal stage of every chain —
+    then materializes the whole tree through
+    :func:`repro.kernels.dispatch.back_project_epilogue`, ONE fused launch per
+    family stack (the GEMM result never round-trips HBM before the epilogue).
+
+    Under family stacking all member leaves share one ``(p, s, w)`` payload;
+    ``member`` selects this leaf's slice after the grouped materialization.
+    Grouped materialization reads the fold scalars from the first member, so
+    chain tails must apply leaf-uniform scalars — which every built-in tail
+    transform does.  A chain that ends without ``scale_by_lr`` still works
+    when ``update`` and ``apply_updates`` are traced together (the usual
+    train-step shape): :func:`repro.core.api.apply_updates` materializes
+    stray PendingBack leaves one by one (correct, just unfused).  A
+    PendingBack leaf is NOT a JAX type, so it cannot cross a jit boundary on
+    its own — jitting ``opt.update`` alone with such a chain raises
+    TypeError at the output; end the chain with ``scale_by_lr`` (or call
+    :func:`materialize_pending`) before returning updates across a
+    boundary."""
+
+    __slots__ = ("p", "s", "w", "fs", "kernel_impl", "pad_rank_to",
+                 "scale", "decay", "member", "members", "member_lead")
+
+    def __init__(self, p, s, w, fs, kernel_impl, pad_rank_to, scale=1.0,
+                 decay=0.0, member=None, members=1, member_lead=()):
+        self.p = p                      # projector, possibly family-stacked
+        self.s = s                      # projected-space update (payload key)
+        self.w = w                      # params (for the decay term), stacked
+        self.fs = fs
+        self.kernel_impl = kernel_impl
+        self.pad_rank_to = pad_rank_to
+        self.scale = scale              # float | traced scalar
+        self.decay = decay              # float | traced scalar
+        self.member = member            # None = unstacked leaf
+        self.members = members
+        self.member_lead = member_lead
+
+    def _replace(self, scale, decay) -> "PendingBack":
+        return PendingBack(self.p, self.s, self.w, self.fs, self.kernel_impl,
+                           self.pad_rank_to, scale, decay, self.member,
+                           self.members, self.member_lead)
+
+    def scaled(self, f) -> "PendingBack":
+        # keep a never-decayed leaf's 0.0 static so materialization can skip
+        # the W operand entirely
+        zero = isinstance(self.decay, float) and self.decay == 0.0
+        return self._replace(f * self.scale, 0.0 if zero else f * self.decay)
+
+    def decayed(self, wd: float) -> "PendingBack":
+        return self._replace(self.scale, self.decay + wd)
+
+    def _use_w(self) -> bool:
+        return not (isinstance(self.decay, float) and self.decay == 0.0)
+
+    def _w_stack(self):
+        """Resolve the (possibly thunked) stacked-params operand."""
+        return self.w() if callable(self.w) else self.w
+
+    def _resolved_impl(self) -> str:
+        return _dispatch().resolve_impl(self.kernel_impl)
+
+    def _materialize_stack(self):
+        """The full (possibly stacked) ``(*lead, m, n)`` update through the
+        fused ``back_project_epilogue`` kernel (Pallas/interpret path)."""
+        use_w = self._use_w()
+        return _dispatch().back_project_epilogue(
+            self.p, self.s, w=(self._w_stack() if use_w else None),
+            scale=self.scale, decay=self.decay, side=self.fs.side,
+            impl=self.kernel_impl, pad_rank_to=self.pad_rank_to,
+        )
+
+    def _jnp_epilogue_slice(self, full, w):
+        """Slice-then-scale epilogue for the jnp path: ``full`` is the
+        UNSCALED back-projection of the whole stack; the scale/decay apply
+        AFTER the member slice (see :func:`materialize_pending` for why that
+        ordering wins on CPU)."""
+        u = self.scale * _member_slice(full, self)
+        if self._use_w():
+            u = u + self.decay * _member_slice(w, self).astype(jnp.float32)
+        return u
+
+    def _jnp_full(self):
+        """Unit-scale epilogue call (XLA folds the 1.0): the unscaled
+        back-projection of the whole stack, recorded as the epilogue op."""
+        return _dispatch().back_project_epilogue(
+            self.p, self.s, side=self.fs.side, impl="jnp",
+            pad_rank_to=self.pad_rank_to,
+        )
+
+    def materialize_update(self):
+        """Materialize THIS leaf only (the ungrouped fallback used by
+        ``apply_updates``; grouped chains go through
+        :func:`materialize_pending` instead)."""
+        if self._resolved_impl() == "jnp":
+            return self._jnp_epilogue_slice(
+                self._jnp_full(), self._w_stack() if self._use_w() else None
+            )
+        return _member_slice(self._materialize_stack(), self)
+
+
+def _member_slice(stacked, leaf: PendingBack):
+    """This leaf's ``(*member_lead, m, n)`` slice of a family-stacked array
+    (identity for unstacked leaves)."""
+    if leaf.member is None:
+        return stacked
+    parts = stacked.reshape((leaf.members,) + leaf.member_lead
+                            + stacked.shape[-2:])
+    return parts[leaf.member]
+
+
+_is_pending = lambda x: x is None or isinstance(x, PendingBack)
+
+
+def materialize_pending(updates: PyTree) -> PyTree:
+    """Materialize every :class:`PendingBack` leaf, grouping the members of
+    each family stack into a single ``back_project_epilogue`` launch.  No-op
+    on trees without pending leaves.
+
+    On the Pallas path the scale/decay epilogue rides inside the kernel (the
+    GEMM tile never leaves VMEM).  On the jnp reference path the epilogue is
+    deliberately applied AFTER the per-member slicing instead: pre-scaling
+    the stack materializes an extra full-size intermediate that XLA CPU
+    cannot fuse away, whereas a scalar multiply on each slice fuses into the
+    slice's consumer — measured ~30% faster on the write-back."""
+    leaves, treedef = jax.tree_util.tree_flatten(updates, is_leaf=_is_pending)
+    if not any(isinstance(x, PendingBack) for x in leaves):
+        return updates
+    groups: dict[int, list[int]] = {}
+    for pos, leaf in enumerate(leaves):
+        if isinstance(leaf, PendingBack):
+            groups.setdefault(id(leaf.s), []).append(pos)
+    out = list(leaves)
+    for positions in groups.values():
+        head = leaves[positions[0]]
+        if head._resolved_impl() == "jnp":
+            full = head._jnp_full()
+            w = head._w_stack() if any(
+                leaves[p]._use_w() for p in positions
+            ) else None
+            for pos in positions:
+                out[pos] = leaves[pos]._jnp_epilogue_slice(full, w)
+            continue
+        full = head._materialize_stack()
+        for pos in positions:
+            out[pos] = _member_slice(full, leaves[pos])
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def _zeros_momentum(leaf):
@@ -250,6 +446,8 @@ def chain(*transforms: Transform) -> Transform:
 
     if transforms and getattr(transforms[0].update, "wants_sample_key", False):
         update.wants_sample_key = True
+    if transforms and getattr(transforms[0].update, "wants_params", False):
+        update.wants_params = True
     head_refresh = transforms and getattr(transforms[0].update, "refresh_state", None)
     if head_refresh:
         def refresh_state(state, msgs, refresh_now):
@@ -417,10 +615,15 @@ def add_decayed_weights(weight_decay: float = 0.0) -> Transform:
     def update(updates: PyTree, state, params: PyTree):
         if weight_decay == 0.0:
             return updates, ()
-        out = jax.tree_util.tree_map(
-            lambda u, p: None if u is None else u + weight_decay * p.astype(jnp.float32),
-            updates, params, is_leaf=_IS_NONE,
-        )
+
+        def one(u, p):
+            if u is None:
+                return None
+            if isinstance(u, PendingBack):
+                return u.decayed(weight_decay)
+            return u + weight_decay * p.astype(jnp.float32)
+
+        out = jax.tree_util.tree_map(one, updates, params, is_leaf=_IS_NONE)
         return out, ()
 
     return Transform(init, update)
@@ -440,10 +643,18 @@ def scale_by_lr(lr: Schedule) -> Transform:
     def update(updates: PyTree, state: ScaleByLrState, params: PyTree):
         count = state.count + 1
         step = schedule_value(lr, count)
-        out = jax.tree_util.tree_map(
-            lambda u: None if u is None else (-step) * u,
-            updates, is_leaf=_IS_NONE,
-        )
+
+        def one(u):
+            if u is None:
+                return None
+            if isinstance(u, PendingBack):
+                return u.scaled(-step)
+            return (-step) * u
+
+        out = jax.tree_util.tree_map(one, updates, is_leaf=_IS_NONE)
+        # Terminal stage of every chain: materialize deferred epilogues here,
+        # one fused launch per family stack.
+        out = materialize_pending(out)
         return out, ScaleByLrState(count=count)
 
     return Transform(init, update)
@@ -465,6 +676,8 @@ def scale_by_factor(factor: float) -> Transform:
                 return u.with_coeff(factor * u.coeff)
             if isinstance(u, FullUpdate):
                 return FullUpdate(factor * u.u)
+            if isinstance(u, PendingBack):
+                return u.scaled(factor)
             return factor * u
 
         out = jax.tree_util.tree_map(one, updates, is_leaf=_IS_NONE)
@@ -481,7 +694,7 @@ def clip_by_global_norm(max_norm: float) -> Transform:
         return ()
 
     def update(updates: PyTree, state, params: PyTree):
-        return _clip_tree(updates, max_norm), ()
+        return _clip_tree(materialize_pending(updates), max_norm), ()
 
     return Transform(init, update)
 
@@ -536,11 +749,13 @@ def lowrank(
     external_refresh: bool = False,
     kernel_impl: str = "auto",
     pad_rank_to: int = 0,
+    fuse_families: bool = False,
+    fused_epilogue: bool = False,
 ) -> Transform:
     """Run ``inner`` inside a periodically-refreshed low-rank subspace.
 
     Owns everything projection-related: per-family GaLore-side choice,
-    projector computation (``svd | subspace | random | grass``) every
+    projector computation (``svd | subspace | random | grass | rsvd``) every
     ``period`` steps, project / back-project through the Pallas dispatch
     layer (``kernel_impl``, opt-in ``pad_rank_to`` lane alignment), and the
     ProjGrad/FullUpdate leaf protocol described in the module docstring.
@@ -551,7 +766,14 @@ def lowrank(
     ``external_refresh=True`` skips the in-update refresh entirely; callers
     drive it through the attached ``update.refresh(grads, state, params)``
     hook instead (the projected-space gradient-accumulation path, which must
-    refresh against a raw microbatch gradient *before* projecting)."""
+    refresh against a raw microbatch gradient *before* projecting).
+
+    ``fuse_families=True`` executes the whole pipeline family-stacked — one
+    batched launch per shape family instead of one per leaf (see the module
+    docstring); trajectory-identical to the per-leaf path but with a
+    different (family-list) state layout.  ``fused_epilogue=True``
+    additionally defers the back-projection into :class:`PendingBack` leaves
+    so chain tails fold into the GEMM."""
     wants_key = bool(getattr(inner.update, "wants_sample_key", False))
     inner_refresh_state = getattr(inner.update, "refresh_state", None)
 
@@ -561,6 +783,164 @@ def lowrank(
             k_proj, k_samp = jax.random.split(k)
             return k_proj, k_samp
         return k, None
+
+    def _family_keys(fam, base_key):
+        """Stacked per-member (key_proj, key_samp) — bit-identical to
+        ``_leaf_key`` per member."""
+        keys = member_keys(fam, base_key)              # (M, 2)
+        if wants_key:
+            ks = jax.vmap(jax.random.split)(keys)      # (M, 2, 2)
+            return ks[:, 0], ks[:, 1]
+        return keys, None
+
+    def _stacked_projectors(fam, g_stack, keys_proj):
+        """Refresh a whole family: vmap ``compute_projectors`` over members
+        (vmap is semantics-preserving per element, so each member's projector
+        — including its RNG draws — matches the per-leaf path bit-for-bit),
+        batching the SVD/QR linear algebra across the stack."""
+        mfs = fam.member_fs
+        g_mem = g_stack.reshape((fam.seg.members,) + mfs.lead + (mfs.m, mfs.n))
+        p_mem = jax.vmap(
+            lambda g, k: compute_projectors(
+                projector, g, mfs.rank, k, mfs.side, subspace_iters
+            )
+        )(g_mem, keys_proj)
+        return p_mem.reshape((fam.fs.L,) + p_mem.shape[1 + len(mfs.lead):])
+
+    def _plan_leaves(params, grads=None):
+        """Flatten params (and optionally grads up to them) and build the
+        family plan.  Grad/param trees must mask together in fused mode."""
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=_IS_NONE)
+        plan = build_family_plan(leaves, rank)
+        g_leaves = None
+        if grads is not None:
+            g_leaves = treedef.flatten_up_to(grads)
+            for fam in plan.families:
+                for i in fam.members:
+                    if g_leaves[i] is None:
+                        raise ValueError(
+                            "fuse_families=True requires gradient leaves to "
+                            "mask together with param leaves (param at flat "
+                            f"index {i} has no gradient)"
+                        )
+        return leaves, treedef, plan, g_leaves
+
+    def init_fused(params: PyTree) -> LowRankState:
+        leaves, _, plan, _ = _plan_leaves(params)
+        projs = [jnp.zeros(proj_shape(fam.fs), jnp.float32)
+                 for fam in plan.families]
+        tmpls = [
+            ProjInit(
+                fam.fs,
+                jax.ShapeDtypeStruct(lowrank_state_shape(fam.fs), jnp.float32),
+                seg=fam.seg,
+            )
+            for fam in plan.families
+        ]
+        return LowRankState(
+            count=jnp.zeros((), jnp.int32), projs=projs, inner=inner.init(tmpls)
+        )
+
+    def update_fused(updates: PyTree, state: LowRankState, params: PyTree):
+        count = state.count + 1
+        refresh = (count - 1) % period == 0
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+
+        leaves, treedef, plan, g_leaves = _plan_leaves(params, updates)
+
+        # Stacking the params costs a concat per family per step; only pay it
+        # when the inner transform actually reads them (layerwise_unbias
+        # gathers full-rank param blocks; the scale_by_* bases only use
+        # shapes, which ProjGrad.fs already carries).
+        inner_wants_params = bool(getattr(inner.update, "wants_params", False))
+        fam_msgs, fam_projs, fam_params = [], [], []
+        for fi, fam in enumerate(plan.families):
+            g32 = stack_family(
+                fam, [g if g is None else g.astype(jnp.float32)
+                      for g in g_leaves]
+            )
+            keys_proj, keys_samp = _family_keys(fam, base_key)
+            if external_refresh:
+                p_proj = state.projs[fi]
+            else:
+                p_proj = jax.lax.cond(
+                    refresh,
+                    lambda _, fam=fam, g32=g32, kp=keys_proj:
+                        _stacked_projectors(fam, g32, kp),
+                    lambda _, fi=fi: state.projs[fi],
+                    None,
+                )
+            fam_msgs.append(ProjGrad(
+                p=p_proj, g=g32, fs=fam.fs, kernel_impl=kernel_impl,
+                pad_rank_to=pad_rank_to, coeff=1.0,
+                reset=(refresh if (reset_on_refresh and not external_refresh) else None),
+                refresh=(False if external_refresh else refresh),
+                key=keys_samp, seg=fam.seg,
+            ))
+            fam_projs.append(p_proj)
+            fam_params.append(
+                stack_family(fam, leaves) if inner_wants_params else None
+            )
+
+        inner_out, new_inner = inner.update(fam_msgs, state.inner, fam_params)
+
+        out_leaves = [None] * plan.n_leaves
+        for fam, msg, o, w in zip(plan.families, fam_msgs, inner_out, fam_params):
+            if isinstance(o, FullUpdate):
+                for i, part in zip(fam.members, unstack_family(fam, o.u)):
+                    out_leaves[i] = part
+            elif fused_epilogue:
+                if w is None:
+                    w = lambda fam=fam: stack_family(fam, leaves)
+                for j, i in enumerate(fam.members):
+                    out_leaves[i] = PendingBack(
+                        p=msg.p, s=o, w=w, fs=fam.fs,
+                        kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
+                        member=j, members=fam.seg.members,
+                        member_lead=fam.member_fs.lead,
+                    )
+            else:
+                for i, part in zip(fam.members, unstack_family(fam, msg.back(o))):
+                    out_leaves[i] = part
+
+        return (
+            jax.tree_util.tree_unflatten(treedef, out_leaves),
+            LowRankState(count=count, projs=fam_projs, inner=new_inner),
+        )
+
+    def refresh_fused(grads: PyTree, state: LowRankState, params: PyTree) -> LowRankState:
+        count = state.count + 1
+        refresh_now = (count - 1) % period == 0
+        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+
+        _, _, plan, g_leaves = _plan_leaves(params, grads)
+
+        new_projs, msgs = [], []
+        for fi, fam in enumerate(plan.families):
+            g32 = stack_family(
+                fam, [g if g is None else g.astype(jnp.float32)
+                      for g in g_leaves]
+            )
+            keys_proj, keys_samp = _family_keys(fam, base_key)
+            p_new = jax.lax.cond(
+                refresh_now,
+                lambda _, fam=fam, g32=g32, kp=keys_proj:
+                    _stacked_projectors(fam, g32, kp),
+                lambda _, fi=fi: state.projs[fi],
+                None,
+            )
+            new_projs.append(p_new)
+            msgs.append(RefreshMsg(fs=fam.fs, key=keys_samp, seg=fam.seg))
+
+        if inner_refresh_state is not None:
+            new_inner = inner_refresh_state(state.inner, msgs, refresh_now)
+        elif reset_on_refresh:
+            new_inner = _reset_floats(state.inner, refresh_now)
+        else:
+            new_inner = state.inner
+        return LowRankState(
+            count=state.count, projs=new_projs, inner=new_inner
+        )
 
     def init(params: PyTree) -> LowRankState:
         def init_leaf(p):
@@ -621,11 +1001,16 @@ def lowrank(
         inner_out, new_inner = inner.update(inner_updates, state.inner, params)
 
         out_leaves = []
-        for msg, o in zip(msg_leaves, treedef.flatten_up_to(inner_out)):
+        for msg, o, p in zip(msg_leaves, treedef.flatten_up_to(inner_out), leaves):
             if msg is None or o is None:
                 out_leaves.append(None)
             elif isinstance(o, FullUpdate):
                 out_leaves.append(o.u)
+            elif fused_epilogue:
+                out_leaves.append(PendingBack(
+                    p=msg.p, s=o, w=p, fs=msg.fs, kernel_impl=kernel_impl,
+                    pad_rank_to=pad_rank_to,
+                ))
             else:
                 out_leaves.append(msg.back(o))
 
@@ -686,6 +1071,9 @@ def lowrank(
             inner=new_inner,
         )
 
+    if fuse_families:
+        update_fused.refresh = refresh_fused
+        return Transform(init_fused, update_fused)
     update.refresh = refresh
     return Transform(init, update)
 
@@ -725,9 +1113,13 @@ def layerwise_unbias(
     if compensation not in ("paper", "finetune"):
         raise ValueError(f"unknown compensation: {compensation}")
 
-    def _coeffs(fs: FamilyShape):
-        g_f = min(gamma, fs.L)
-        q = g_f / fs.L
+    def _coeffs(fs: FamilyShape, seg=None):
+        # Under family stacking the sampling unit is the MEMBER leaf (q =
+        # gamma / member_L, uniform across the stack by plan construction),
+        # exactly as in the per-leaf path.
+        L_eff = seg.member_L if seg is not None else fs.L
+        g_f = min(gamma, L_eff)
+        q = g_f / L_eff
         if q >= 1.0:
             c_low = 0.0  # low branch fully overwritten by the scatter
         elif compensation == "finetune":
@@ -737,6 +1129,16 @@ def layerwise_unbias(
         c_comp = (1.0 - q) if compensation == "finetune" else 1.0
         c_full = (1.0 / q) if g_f > 0 else 0.0
         return g_f, q, c_low, c_comp, c_full
+
+    def _member_sample(keys, members: int, member_L: int, g_f: int):
+        """Stacked resampling: each member draws ``g_f`` of its own
+        ``member_L`` blocks with its own key (bit-identical to the per-leaf
+        ``jax.random.choice`` under vmap), offset to global stack indices."""
+        fresh = jax.vmap(
+            lambda k: jax.random.choice(k, member_L, (g_f,), replace=False)
+        )(keys).astype(jnp.int32)
+        offs = (jnp.arange(members, dtype=jnp.int32) * member_L)[:, None]
+        return (fresh + offs).reshape(-1)
 
     _is_tmpl = lambda x: x is None or isinstance(x, ProjInit)
 
@@ -749,24 +1151,33 @@ def layerwise_unbias(
                     "layerwise_unbias must be composed inside lowrank() "
                     f"(init saw a {type(t).__name__} leaf, expected ProjInit)"
                 )
-            g_f = min(gamma, t.fs.L)
+            g_f, *_ = _coeffs(t.fs, t.seg)
             if g_f == 0:
                 return None
-            return jax.ShapeDtypeStruct((g_f, t.fs.m, t.fs.n), jnp.float32)
+            slots = (t.seg.members if t.seg is not None else 1) * g_f
+            return jax.ShapeDtypeStruct((slots, t.fs.m, t.fs.n), jnp.float32)
 
         def idx0(t):
             if t is None:
                 return None
-            g_f = min(gamma, t.fs.L)
+            g_f, *_ = _coeffs(t.fs, t.seg)
             if g_f == 0:
                 return None
+            if t.seg is not None:
+                offs = (jnp.arange(t.seg.members, dtype=jnp.int32)
+                        * t.seg.member_L)[:, None]
+                return (jnp.arange(g_f, dtype=jnp.int32)[None, :]
+                        + offs).reshape(-1)
             return jnp.arange(g_f, dtype=jnp.int32)
 
         def low_tmpl(t):
             # q >= 1 (gamma covers every block): the scatter overwrites the
             # whole family, so the low branch carries no state and does no
             # work for this leaf (mirrors the monoliths' `if q < 1` guard).
-            if t is None or min(gamma, t.fs.L) >= t.fs.L:
+            if t is None:
+                return None
+            g_f, q, *_ = _coeffs(t.fs, t.seg)
+            if q >= 1.0:
                 return None
             return t
 
@@ -800,7 +1211,7 @@ def layerwise_unbias(
                     f"(got a {type(g).__name__} leaf)"
                 )
             fs = g.fs
-            g_f, q, c_low, c_comp, c_full = _coeffs(fs)
+            g_f, q, c_low, c_comp, c_full = _coeffs(fs, g.seg)
             # q >= 1: no low branch at all (state is None too — see init)
             low_upds.append(g.with_coeff(c_low) if q < 1.0 else None)
             if g_f == 0:
@@ -812,9 +1223,14 @@ def layerwise_unbias(
                 idx2 = idx
             else:
                 refresh_any = g.refresh
-                fresh = jax.random.choice(
-                    g.key, fs.L, (g_f,), replace=False
-                ).astype(jnp.int32)
+                if g.seg is not None:
+                    fresh = _member_sample(
+                        g.key, g.seg.members, g.seg.member_L, g_f
+                    )
+                else:
+                    fresh = jax.random.choice(
+                        g.key, fs.L, (g_f,), replace=False
+                    ).astype(jnp.int32)
                 idx2 = jnp.where(g.refresh, fresh, idx)
             new_idx.append(idx2)
             g_s = gather_blocks(g.g, idx2, fs)        # (gamma, m, n)
@@ -852,7 +1268,7 @@ def layerwise_unbias(
                 outs.append(None)
                 continue
             fs = g.fs
-            g_f, q, *_ = _coeffs(fs)
+            g_f, q, *_ = _coeffs(fs, g.seg)
             if q < 1.0:
                 u = g.back(lo)
             else:
@@ -882,10 +1298,16 @@ def layerwise_unbias(
             if msg is None or idx is None:
                 new_idx.append(idx)
                 continue
-            g_f = int(idx.shape[0])
-            fresh = jax.random.choice(
-                msg.key, msg.fs.L, (g_f,), replace=False
-            ).astype(jnp.int32)
+            if msg.seg is not None:
+                g_f = int(idx.shape[0]) // msg.seg.members
+                fresh = _member_sample(
+                    msg.key, msg.seg.members, msg.seg.member_L, g_f
+                )
+            else:
+                g_f = int(idx.shape[0])
+                fresh = jax.random.choice(
+                    msg.key, msg.fs.L, (g_f,), replace=False
+                ).astype(jnp.int32)
             new_idx.append(jnp.where(refresh_now, fresh, idx))
         return LayerwiseUnbiasState(
             low=_reset_floats(state.low, refresh_now),
@@ -894,6 +1316,7 @@ def layerwise_unbias(
         )
 
     update.wants_sample_key = True
+    update.wants_params = True
     update.refresh_state = refresh_state
     return Transform(init, update)
 
@@ -987,6 +1410,8 @@ def with_fira_residual(
             ),
         )
 
+    if getattr(base.update, "wants_params", False):
+        update.wants_params = True
     return Transform(init, update)
 
 

@@ -8,8 +8,10 @@ signatures are unchanged from the monolith era, and the equivalence suite
 
 ``cfg.kernel_impl`` is forwarded to every optimizer with a low-rank /
 Newton–Schulz hot loop (gum, galore, galore_muon, golore, fira, muon,
-unbiased_galore_adam); ``cfg.pad_rank_to`` to every low-rank optimizer;
-``cfg.use_muon_scale`` (None = per-optimizer default) to muon and gum.
+unbiased_galore_adam); ``cfg.pad_rank_to`` and the family-fusion knobs
+(``cfg.fuse_families`` / ``cfg.fused_epilogue``) to every low-rank
+optimizer; ``cfg.use_muon_scale`` (None = per-optimizer default) to muon
+and gum.
 """
 from __future__ import annotations
 
@@ -20,6 +22,11 @@ from .galore import galore, golore
 from .gum import gum, unbiased_galore_adam
 from .lisa import lisa
 from .muon import muon
+
+
+def _fusion_kw(cfg: OptimizerConfig) -> dict:
+    return {"fuse_families": cfg.fuse_families,
+            "fused_epilogue": cfg.fused_epilogue}
 
 
 def build_optimizer(cfg: OptimizerConfig) -> Transform:
@@ -37,6 +44,7 @@ def build_optimizer(cfg: OptimizerConfig) -> Transform:
             cfg.lr, rank=cfg.rank, period=cfg.period, projector=cfg.projector,
             base="adam", weight_decay=cfg.weight_decay, seed=cfg.seed,
             kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
+            **_fusion_kw(cfg),
         )
     if name == "galore_muon":
         return galore(
@@ -44,11 +52,12 @@ def build_optimizer(cfg: OptimizerConfig) -> Transform:
             base="muon", beta=cfg.beta, ns_steps=cfg.ns_steps,
             weight_decay=cfg.weight_decay, seed=cfg.seed,
             kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
+            **_fusion_kw(cfg),
         )
     if name == "golore":
         return golore(cfg.lr, rank=cfg.rank, period=cfg.period, base=cfg.base,
                       seed=cfg.seed, kernel_impl=cfg.kernel_impl,
-                      pad_rank_to=cfg.pad_rank_to)
+                      pad_rank_to=cfg.pad_rank_to, **_fusion_kw(cfg))
     if name == "gum":
         kw = {} if cfg.use_muon_scale is None else {"use_muon_scale": cfg.use_muon_scale}
         return gum(
@@ -56,7 +65,8 @@ def build_optimizer(cfg: OptimizerConfig) -> Transform:
             projector=cfg.projector, base=cfg.base, beta=cfg.beta,
             ns_steps=cfg.ns_steps, weight_decay=cfg.weight_decay,
             compensation=cfg.compensation, seed=cfg.seed,
-            kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to, **kw,
+            kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
+            **_fusion_kw(cfg), **kw,
         )
     if name == "unbiased_galore_adam":
         return unbiased_galore_adam(
@@ -64,11 +74,12 @@ def build_optimizer(cfg: OptimizerConfig) -> Transform:
             projector=cfg.projector, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
             weight_decay=cfg.weight_decay, compensation=cfg.compensation,
             seed=cfg.seed, kernel_impl=cfg.kernel_impl,
-            pad_rank_to=cfg.pad_rank_to,
+            pad_rank_to=cfg.pad_rank_to, **_fusion_kw(cfg),
         )
     if name == "fira":
         return fira(cfg.lr, rank=cfg.rank, period=cfg.period, seed=cfg.seed,
-                    kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to)
+                    kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
+                    **_fusion_kw(cfg))
     if name == "lisa":
         return lisa(cfg.lr, gamma=cfg.gamma, period=cfg.period, seed=cfg.seed)
     raise ValueError(f"unknown optimizer: {cfg.name!r}")

@@ -48,6 +48,8 @@ def fira_matrices(
     seed: int = 0,
     kernel_impl: str = "auto",
     pad_rank_to: int = 0,
+    fuse_families: bool = False,
+    fused_epilogue: bool = False,
 ) -> Transform:
     return chain(
         lowrank(
@@ -56,6 +58,7 @@ def fira_matrices(
             ),
             rank=rank, period=period, projector=projector, seed=seed,
             kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
+            fuse_families=fuse_families, fused_epilogue=fused_epilogue,
         ),
         scale_by_factor(scale),
         scale_by_lr(lr),

@@ -62,6 +62,8 @@ def galore_matrices(
     subspace_iters: int = 2,
     kernel_impl: str = "auto",
     pad_rank_to: int = 0,
+    fuse_families: bool = False,
+    fused_epilogue: bool = False,
 ) -> Transform:
     """GaLore over matrix leaves only (route others via :func:`galore`)."""
     if base == "adam":
@@ -78,6 +80,7 @@ def galore_matrices(
             inner, rank=rank, period=period, projector=projector, seed=seed,
             subspace_iters=subspace_iters, reset_on_refresh=reset_on_update,
             kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
+            fuse_families=fuse_families, fused_epilogue=fused_epilogue,
         ),
         add_decayed_weights(weight_decay),
         scale_by_lr(lr),

@@ -103,6 +103,8 @@ def gum_matrices(
     kernel_impl: str = "auto",
     use_muon_scale: bool = False,
     pad_rank_to: int = 0,
+    fuse_families: bool = False,
+    fused_epilogue: bool = False,
 ) -> Transform:
     """GUM over matrix leaves (route 1-D/embedding leaves via :func:`gum`).
 
@@ -111,7 +113,11 @@ def gum_matrices(
     refreshes against a raw microbatch gradient before projection.
 
     ``kernel_impl`` selects the hot-loop implementation (see module
-    docstring); ``use_muon_scale`` applies Muon's RMS-matching shape factor."""
+    docstring); ``use_muon_scale`` applies Muon's RMS-matching shape factor.
+    ``fuse_families`` runs the whole pipeline family-stacked (one batched
+    launch per shape family instead of per leaf, trajectory-identical);
+    ``fused_epilogue`` folds chain-tail epilogues into the back-projection
+    GEMM (see repro.core.combinators)."""
     if base == "muon":
         inner = scale_by_muon(beta=beta, ns_steps=ns_steps, nesterov=False,
                               use_muon_scale=use_muon_scale,
@@ -125,7 +131,8 @@ def gum_matrices(
         rank=rank, period=period, projector=projector, seed=seed,
         subspace_iters=subspace_iters, reset_on_refresh=True,
         external_refresh=external_refresh, kernel_impl=kernel_impl,
-        pad_rank_to=pad_rank_to,
+        pad_rank_to=pad_rank_to, fuse_families=fuse_families,
+        fused_epilogue=fused_epilogue,
     )
     t = chain(lowrank_t, add_decayed_weights(weight_decay), scale_by_lr(lr))
     # Hook for gum_accum_tools: the external-refresh entry point + the fact
@@ -174,6 +181,8 @@ def unbiased_galore_adam(
     subspace_iters: int = 2,
     kernel_impl: str = "auto",
     pad_rank_to: int = 0,
+    fuse_families: bool = False,
+    fused_epilogue: bool = False,
     lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
 ) -> Transform:
     """Unbiased GaLore-Adam — a NEW method that is a pure composition:
@@ -194,6 +203,7 @@ def unbiased_galore_adam(
             rank=rank, period=period, projector=projector, seed=seed,
             subspace_iters=subspace_iters, reset_on_refresh=True,
             kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
+            fuse_families=fuse_families, fused_epilogue=fused_epilogue,
         ),
         add_decayed_weights(weight_decay),
         scale_by_lr(lr),
@@ -259,6 +269,13 @@ def gum_accum_tools(
     pad_rank_to: int = 0,
     **kw,
 ) -> GUMAccumTools:
+    if kw.get("fuse_families") or kw.get("fused_epilogue"):
+        # The compact-accumulation hooks address per-leaf projector/idx state
+        # through the params treedef; the family-stacked state is a family
+        # list.  Teach project/reconstruct the plan layout before enabling.
+        raise NotImplementedError(
+            "gum_accum_tools does not support fuse_families/fused_epilogue yet"
+        )
     transform = gum(
         lr, rank=rank, gamma=gamma, period=period, projector=projector,
         lowrank_filter=lowrank_filter, seed=seed, subspace_iters=subspace_iters,

@@ -154,10 +154,15 @@ def compute_projectors(
     if kind == "svd":
         u, _, _ = jnp.linalg.svd(g32, full_matrices=False)
         return u[..., :, :rank]
-    if kind == "subspace":
+    if kind in ("subspace", "rsvd"):
+        # "rsvd" is the randomized range finder (Halko et al.): the
+        # zero-power-iteration member of the subspace family, so refresh
+        # costs one sketch GEMM + one thin QR instead of a full per-block
+        # float32 SVD (see projectors.rsvd_projector).
+        iters = 0 if kind == "rsvd" else subspace_iters
         omega = jax.random.normal(key, lead + (n, rank), jnp.float32)
         y = g32 @ omega
-        for _ in range(subspace_iters):
+        for _ in range(iters):
             y, _ = jnp.linalg.qr(y)
             y = g32 @ (jnp.swapaxes(g32, -1, -2) @ y)
         q, _ = jnp.linalg.qr(y)

@@ -44,6 +44,12 @@ def newton_schulz(
         if resolved != "jnp":
             return dispatch.newton_schulz(x, steps=steps, eps=eps, impl=resolved)
 
+    # Lazy import: at module-load time repro.kernels.newton_schulz imports
+    # NS_COEFFS from here, so a top-level kernels import would be circular.
+    # (This does pull in the kernels package on first call.)
+    from repro.kernels import launch_count
+
+    launch_count.record("newton_schulz")
     a, b, c = NS_COEFFS
     orig_dtype = x.dtype
     x = x.astype(jnp.float32)

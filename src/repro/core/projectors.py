@@ -9,6 +9,11 @@ Projectors:
   * ``svd``       — GaLore's top-r left singular vectors, ``U[:, :r]``.
   * ``subspace``  — randomized subspace (power) iteration; matmul + thin-QR
                     only.  TPU-native replacement for LAPACK SVD (DESIGN.md §3).
+  * ``rsvd``      — randomized range finder (Halko et al.; the AdaRankGrad
+                    refresh): ONE Gaussian sketch + one thin QR, no power
+                    iterations — the cheapest gradient-aware refresh, so the
+                    periodic projector recomputation stops paying a full
+                    per-leaf float32 SVD.
   * ``random``    — GoLore's projector: orthonormalized Gaussian, independent
                     of the gradient.
   * ``grass``     — GRASS-style: rows sampled proportional to row norms;
@@ -25,7 +30,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-ProjectorKind = Literal["svd", "subspace", "random", "grass"]
+ProjectorKind = Literal["svd", "subspace", "rsvd", "random", "grass"]
 
 
 def projection_side(shape: tuple[int, int]) -> str:
@@ -65,6 +70,21 @@ def subspace_projector(
     return q
 
 
+def rsvd_projector(g: jax.Array, rank: int, key: jax.Array) -> jax.Array:
+    """Randomized range finder: ``orth(G Ω)``, Ω Gaussian ``(n, r)``.
+
+    The zero-power-iteration member of the randomized-SVD family: one sketch
+    GEMM plus one thin QR on an ``(m, r)`` matrix captures the dominant left
+    range of ``G`` up to the tail-energy bound of Halko et al. (2011, Thm
+    10.5) — no spectral-gap-dependent convergence loop, no LAPACK SVD.
+    Property I (orthonormal columns) holds exactly via the QR, so
+    unbiasedness of the sampling paradigm is untouched; only the captured
+    gradient energy differs from ``svd``/``subspace``.  Mathematically this
+    IS the subspace projector with zero power iterations — delegated so the
+    sketch/QR math lives in exactly one place."""
+    return subspace_projector(g, rank, key, iters=0)
+
+
 def random_projector(shape: tuple[int, int], rank: int, key: jax.Array) -> jax.Array:
     """GoLore's gradient-independent random orthonormal projector."""
     m, _ = shape
@@ -102,6 +122,8 @@ def make_projector(
         return svd_projector(g, rank)
     if kind == "subspace":
         return subspace_projector(g, rank, key, iters=subspace_iters)
+    if kind == "rsvd":
+        return rsvd_projector(g, rank, key)
     if kind == "random":
         return random_projector(g.shape, rank, key)
     if kind == "grass":

@@ -1,10 +1,12 @@
 """Pallas TPU kernels (hot spots) + jnp oracles + dispatch.
 
-Layout per task spec: <name>.py holds the pl.pallas_call + BlockSpec kernel,
-ops.py the jit'd wrappers (legacy impl dispatch), ref.py the pure-jnp
-oracles, dispatch.py the backend-aware dispatch subsystem the optimizers
-use (auto backend detection, shape-legality fallback, ragged-shape padding,
-family batching).
+Layout per task spec: <name>.py holds the pl.pallas_call + BlockSpec kernel
+(fused_step.py: the scale-and-back-project epilogue GEMM), ops.py the jit'd
+wrappers (legacy impl dispatch), ref.py the pure-jnp oracles, dispatch.py
+the backend-aware dispatch subsystem the optimizers use (auto backend
+detection, shape-legality fallback, ragged-shape padding, family batching),
+launch_count.py the trace-time launch counter benchmarks/tests use to prove
+launch-count-optimality of the family-stacked engine.
 
 ``KERNEL_REGISTRY`` maps op name -> :class:`repro.kernels.dispatch.KernelEntry`
 (dispatch entry point, jnp oracle, legality predicate); ``get_kernel`` looks

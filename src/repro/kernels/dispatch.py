@@ -42,7 +42,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import launch_count, ref
+from .fused_step import back_project_epilogue_batched
 from .lowrank_update import (
     back_project_batched,
     lowrank_update_batched,
@@ -207,6 +208,7 @@ def lowrank_update(
     impl = resolve_impl(impl)
     if impl != "jnp" and not lowrank_update_supported(p, g, side):
         impl = "jnp"
+    launch_count.record("lowrank_update")
     if impl == "jnp":
         return beta * r_state.astype(jnp.float32) + coeff * _project_jnp(p, g, side)
 
@@ -228,6 +230,7 @@ def project(p: jax.Array, g: jax.Array, *, side: str = "left",
     impl = resolve_impl(impl)
     if impl != "jnp" and not lowrank_update_supported(p, g, side):
         impl = "jnp"
+    launch_count.record("project")
     if impl == "jnp":
         return _project_jnp(p, g, side)
 
@@ -258,6 +261,35 @@ def _back_project_jnp(p: jax.Array, s: jax.Array, side: str) -> jax.Array:
     return bp(p.astype(jnp.float32), s.astype(jnp.float32), side)
 
 
+def _back_project_kernel_form(p, s, w, side, pad_rank_to: int):
+    """Shared Pallas prologue for both back-projection entry points:
+    left-side normalization ((S @ Pᵀ)ᵀ = P @ Sᵀ; W rides along), lead
+    flattening, tile padding.  Returns the prepared operands plus everything
+    needed to undo the normalization."""
+    lead = s.shape[:-2]
+    if side == "right":
+        s = jnp.swapaxes(s, -1, -2)
+        if w is not None:
+            w = jnp.swapaxes(w, -1, -2)
+    pk, sk = _flatten_lead(p), _flatten_lead(s)
+    m, r = int(pk.shape[-2]), int(pk.shape[-1])
+    n = int(sk.shape[-1])
+    m_pad, bm = _pad_and_block(m, 256, _SUBLANE)
+    n_pad, bn = _pad_and_block(n, 512, _LANE)
+    r_pad = _round_up(r, _rank_granule(pad_rank_to))
+    pk = _pad_axis(_pad_axis(pk, -2, m_pad), -1, r_pad)
+    sk = _pad_axis(_pad_axis(sk, -2, r_pad), -1, n_pad)
+    wk = None
+    if w is not None:
+        wk = _pad_axis(_pad_axis(_flatten_lead(w), -2, m_pad), -1, n_pad)
+    return pk, sk, wk, (lead, m, n, bm, bn)
+
+
+def _back_project_unkernel_form(out, lead, m, n, side):
+    out = out[..., :m, :n].reshape(lead + (m, n))
+    return jnp.swapaxes(out, -1, -2) if side == "right" else out
+
+
 def back_project(p: jax.Array, s: jax.Array, *, side: str = "left",
                  impl: str = "auto", pad_rank_to: int = 0) -> jax.Array:
     """Dispatched back-projection of a projected-space array ``s`` to full
@@ -271,25 +303,61 @@ def back_project(p: jax.Array, s: jax.Array, *, side: str = "left",
     impl = resolve_impl(impl)
     if impl != "jnp" and not back_project_supported(p, s, side):
         impl = "jnp"
+    launch_count.record("back_project")
     if impl == "jnp":
         return _back_project_jnp(p, s, side)
 
-    lead = s.shape[:-2]
-    if side == "right":
-        # (S @ Pᵀ)ᵀ = P @ Sᵀ: run the left-form kernel on Sᵀ, transpose back.
-        s = jnp.swapaxes(s, -1, -2)
-    pk, sk = _flatten_lead(p), _flatten_lead(s)
-    m, r = int(pk.shape[-2]), int(pk.shape[-1])
-    n = int(sk.shape[-1])
-    m_pad, bm = _pad_and_block(m, 256, _SUBLANE)
-    n_pad, bn = _pad_and_block(n, 512, _LANE)
-    r_pad = _round_up(r, _rank_granule(pad_rank_to))
-    pk = _pad_axis(_pad_axis(pk, -2, m_pad), -1, r_pad)
-    sk = _pad_axis(_pad_axis(sk, -2, r_pad), -1, n_pad)
+    pk, sk, _, (lead, m, n, bm, bn) = _back_project_kernel_form(
+        p, s, None, side, pad_rank_to
+    )
     out = back_project_batched(
         pk, sk, block_m=bm, block_n=bn, interpret=(impl == "interpret")
-    )[..., :m, :n].reshape(lead + (m, n))
-    return jnp.swapaxes(out, -1, -2) if side == "right" else out
+    )
+    return _back_project_unkernel_form(out, lead, m, n, side)
+
+
+def back_project_epilogue(
+    p: jax.Array,
+    s: jax.Array,
+    *,
+    w: jax.Array | None = None,
+    scale=1.0,
+    decay=0.0,
+    side: str = "left",
+    impl: str = "auto",
+    pad_rank_to: int = 0,
+) -> jax.Array:
+    """Fused write-back of a projected-space update: ``scale·back_project(p,
+    s) + decay·W`` in one launch, with the GEMM tile staying in VMEM through
+    the affine epilogue (see :mod:`repro.kernels.fused_step`).  This is the
+    materialization path of the chained API's deferred epilogue
+    (``combinators.PendingBack``): scale carries -lr (and GaLore's alpha),
+    decay carries -lr·wd, ``w`` the (possibly family-stacked) params.
+
+    ``scale`` / ``decay`` may be traced scalars (schedule-driven lr).
+    left  side: p (*lead, m, r), s (*lead, r, n), w (*lead, m, n)
+    right side: p (*lead, n, r), s (*lead, m, r), w (*lead, m, n)
+    """
+    impl = resolve_impl(impl)
+    if impl != "jnp" and not back_project_supported(p, s, side):
+        impl = "jnp"
+    launch_count.record("back_project_epilogue")
+    if impl == "jnp":
+        out = scale * _back_project_jnp(p, s, side)
+        if w is not None:
+            out = out + decay * w.astype(jnp.float32)
+        return out
+
+    pk, sk, wk, (lead, m, n, bm, bn) = _back_project_kernel_form(
+        p, s, w, side, pad_rank_to
+    )
+    sd = jnp.stack([jnp.asarray(scale, jnp.float32),
+                    jnp.asarray(decay, jnp.float32)]).reshape(1, 2)
+    out = back_project_epilogue_batched(
+        pk, sk, wk, sd, block_m=bm, block_n=bn,
+        interpret=(impl == "interpret"),
+    )
+    return _back_project_unkernel_form(out, lead, m, n, side)
 
 
 # --------------------------------------------------------------------------
@@ -314,7 +382,9 @@ def newton_schulz(
     if impl != "jnp" and not newton_schulz_supported(x):
         impl = "jnp"
     if impl == "jnp":
+        # ns_jnp records the launch itself (jnp body), so don't double count.
         return ns_jnp(x, steps=steps, eps=eps)
+    launch_count.record("newton_schulz")
 
     interpret = impl == "interpret"
     orig_dtype = x.dtype
@@ -382,6 +452,12 @@ register(KernelEntry(
     name="back_project",
     fn=back_project,
     reference=ref.back_project_ref,
+    supported=back_project_supported,
+))
+register(KernelEntry(
+    name="back_project_epilogue",
+    fn=back_project_epilogue,
+    reference=ref.back_project_epilogue_ref,
     supported=back_project_supported,
 ))
 def _newton_schulz_ref(x, *, steps=5, eps=1e-7):

@@ -1,0 +1,119 @@
+"""Fused back-projection epilogue kernel:  out = scale·(P @ S) + decay·W.
+
+The last stage of every low-rank optimizer step back-projects the
+projected-space update and then runs elementwise chain-tail epilogues over
+the full ``(m, n)`` result — ``-lr·u`` (scale_by_lr), ``+ wd·W``
+(add_decayed_weights), GaLore's alpha (scale_by_factor).  As separate
+launches each of those is an extra full-shape HBM round-trip after the GEMM.
+This kernel keeps the ``(bm, bn)`` GEMM tile in VMEM and applies the whole
+affine epilogue before the single store, so the chained path's write-back is
+one launch per family stack:
+
+    update = scale · (P @ S) + decay · W
+
+``scale`` / ``decay`` are *traced* scalars (the learning rate comes from a
+schedule), so they ride in SMEM as a ``(1, 2)`` operand rather than being
+baked into the kernel as static constants.
+
+Like the other low-rank kernels, the batch axis is a native grid dimension
+(one ``pallas_call`` per stacked family, never ``jax.vmap``), and this file
+keeps the bare tile-divisibility contract — ragged shapes are padded by the
+wrapper in :mod:`repro.kernels.dispatch` (zero-padding is exact: padded P
+rows / S columns contribute zeros, and padded W entries are zero, so the
+sliced-back result is untouched).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _epilogue_kernel(sd_ref, p_ref, s_ref, out_ref):
+    scale = sd_ref[0, 0]
+    p = p_ref[0].astype(jnp.float32)  # (bm, r)
+    s = s_ref[0].astype(jnp.float32)  # (r, bn)
+    out_ref[0] = (scale * (p @ s)).astype(out_ref.dtype)
+
+
+def _epilogue_w_kernel(sd_ref, p_ref, s_ref, w_ref, out_ref):
+    scale, decay = sd_ref[0, 0], sd_ref[0, 1]
+    p = p_ref[0].astype(jnp.float32)  # (bm, r)
+    s = s_ref[0].astype(jnp.float32)  # (r, bn)
+    w = w_ref[0].astype(jnp.float32)  # (bm, bn)
+    out_ref[0] = (scale * (p @ s) + decay * w).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def back_project_epilogue_batched(
+    p: jax.Array,
+    s: jax.Array,
+    w: jax.Array | None,
+    scale_decay: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched fused write-back: p (L, m, r), s (L, r, n), w (L, m, n) or
+    None, scale_decay (1, 2) fp32 -> scale·(P@S) + decay·W, (L, m, n).
+
+    The whole contraction dim r (<= 512) is resident per tile, so each
+    (bm, bn) output tile is one MXU matmul plus a VPU affine — no reduction
+    loop, no scratch, one HBM store."""
+    L, m, r = p.shape
+    _, _, n = s.shape
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0
+    grid = (L, m // block_m, n // block_n)
+    sd_spec = pl.BlockSpec((1, 2), lambda l, mi, ni: (0, 0),
+                           memory_space=pltpu.SMEM)
+    p_spec = pl.BlockSpec((1, block_m, r), lambda l, mi, ni: (l, mi, 0))
+    s_spec = pl.BlockSpec((1, r, block_n), lambda l, mi, ni: (l, 0, ni))
+    o_spec = pl.BlockSpec((1, block_m, block_n), lambda l, mi, ni: (l, mi, ni))
+    out_shape = jax.ShapeDtypeStruct((L, m, n), jnp.float32)
+    if w is None:
+        return pl.pallas_call(
+            _epilogue_kernel,
+            grid=grid,
+            in_specs=[sd_spec, p_spec, s_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(scale_decay, p, s)
+    w_spec = pl.BlockSpec((1, block_m, block_n), lambda l, mi, ni: (l, mi, ni))
+    return pl.pallas_call(
+        _epilogue_w_kernel,
+        grid=grid,
+        in_specs=[sd_spec, p_spec, s_spec, w_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scale_decay, p, s, w)
+
+
+def back_project_epilogue(
+    p: jax.Array,
+    s: jax.Array,
+    w: jax.Array | None,
+    scale,
+    decay,
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-matrix form: p (m, r), s (r, n), w (m, n) or None."""
+    sd = jnp.stack([jnp.asarray(scale, jnp.float32),
+                    jnp.asarray(decay, jnp.float32)]).reshape(1, 2)
+    out = back_project_epilogue_batched(
+        p[None], s[None], None if w is None else w[None], sd,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    return out[0]

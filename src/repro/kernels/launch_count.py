@@ -1,0 +1,44 @@
+"""Trace-time kernel-launch counting for the dispatch layer.
+
+Every dispatched optimizer op (``lowrank_update``, ``project``,
+``back_project``, ``back_project_epilogue``, ``newton_schulz``) records one
+count per *call* while a :func:`count_launches` context is active.  Because
+the dispatchers run at trace time under ``jit``, counting the Python-level
+calls counts exactly the kernel launches (``pallas_call``s, or their jnp
+fallback ops) the compiled step will contain — which is how
+``benchmarks/fused_step.py`` proves the family-stacked engine launches per
+shape family, not per leaf.
+
+Usage::
+
+    with count_launches() as counts:
+        jax.eval_shape(lambda: opt.update(grads, state, params))
+    # counts == {"lowrank_update": 3, "newton_schulz": 3, ...}
+
+Deliberately dependency-free itself (no jax import); :mod:`repro.core`
+callers lazy-import it inside function bodies because the kernels package's
+module-load imports run the other way (kernels.newton_schulz pulls
+NS_COEFFS from core.newton_schulz).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+_ACTIVE: list[dict[str, int]] = []
+
+
+def record(op: str) -> None:
+    """Count one launch of ``op`` in every active counter (no-op otherwise)."""
+    for counts in _ACTIVE:
+        counts[op] = counts.get(op, 0) + 1
+
+
+@contextlib.contextmanager
+def count_launches() -> Iterator[dict[str, int]]:
+    counts: dict[str, int] = {}
+    _ACTIVE.append(counts)
+    try:
+        yield counts
+    finally:
+        _ACTIVE.remove(counts)

@@ -160,6 +160,16 @@ def back_project_ref(p: jax.Array, s: jax.Array) -> jax.Array:
     return p.astype(jnp.float32) @ s.astype(jnp.float32)
 
 
+def back_project_epilogue_ref(
+    p: jax.Array, s: jax.Array, w: jax.Array | None, scale, decay
+) -> jax.Array:
+    """Fused write-back: scale·(P @ S) + decay·W (W optional)."""
+    out = scale * (p.astype(jnp.float32) @ s.astype(jnp.float32))
+    if w is not None:
+        out = out + decay * w.astype(jnp.float32)
+    return out
+
+
 # ------------------------------------------------------------ Mamba-2 SSD
 
 

@@ -63,22 +63,26 @@ TRAIN_MICROBATCHES = {
 
 
 def default_optimizer(arch: str, kernel_impl: str = "auto",
-                      pad_rank_to: int = 0) -> OptimizerConfig:
+                      pad_rank_to: int = 0, fuse_families: bool = False,
+                      fused_epilogue: bool = False) -> OptimizerConfig:
     # GUM (the paper's method) with the TPU-native subspace projector.
     # kernel_impl is threaded into the compiled cell so dry runs lower the
     # SAME hot path as training ("pallas" forces the fused kernels into the
-    # HLO even on the host-CPU placeholder devices).
+    # HLO even on the host-CPU placeholder devices); the fusion knobs do the
+    # same for the family-stacked engine.
     return OptimizerConfig(
         name="gum", lr=1e-3, rank=128, gamma=2, period=200,
         projector="subspace", base="muon", kernel_impl=kernel_impl,
-        pad_rank_to=pad_rank_to,
+        pad_rank_to=pad_rank_to, fuse_families=fuse_families,
+        fused_epilogue=fused_epilogue,
     )
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
              overrides: dict | None = None, microbatches: int | None = None,
              lowrank_accum: bool = False, kernel_impl: str = "auto",
-             pad_rank_to: int = 0):
+             pad_rank_to: int = 0, fuse_families: bool = False,
+             fused_epilogue: bool = False):
     cfg = get_config(arch)
     if overrides:
         cfg = cfg.replace(**overrides)
@@ -101,12 +105,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
 
     with use_mesh(mesh):
         if shape.kind == "train":
-            ocfg = default_optimizer(arch, kernel_impl, pad_rank_to)
+            ocfg = default_optimizer(arch, kernel_impl, pad_rank_to,
+                                     fuse_families, fused_epilogue)
             if opt_name != "gum":
                 ocfg = OptimizerConfig(name=opt_name, rank=128, gamma=2,
                                        period=200, projector="subspace",
                                        kernel_impl=kernel_impl,
-                                       pad_rank_to=pad_rank_to)
+                                       pad_rank_to=pad_rank_to,
+                                       fuse_families=fuse_families,
+                                       fused_epilogue=fused_epilogue)
             tools = None
             if lowrank_accum:
                 from repro.core.gum import gum_accum_tools
@@ -210,6 +217,12 @@ def main():
     ap.add_argument("--pad-rank-to", type=int, default=0,
                     help="opt-in lane-aligned rank padding for the low-rank "
                          "Pallas kernels (e.g. 128)")
+    ap.add_argument("--fuse-families", action="store_true",
+                    help="family-stacked fused optimizer execution (one "
+                         "batched launch per shape family)")
+    ap.add_argument("--fused-epilogue", action="store_true",
+                    help="fold chain-tail epilogues into the back-projection "
+                         "GEMM (back_project_epilogue kernel)")
     ap.add_argument(
         "--set", action="append", default=[],
         help="ModelConfig overrides, e.g. --set attn_impl=xla_chunked "
@@ -258,7 +271,9 @@ def main():
                                microbatches=args.microbatches or None,
                                lowrank_accum=args.lowrank_accum,
                                kernel_impl=args.kernel_impl,
-                               pad_rank_to=args.pad_rank_to)
+                               pad_rank_to=args.pad_rank_to,
+                               fuse_families=args.fuse_families,
+                               fused_epilogue=args.fused_epilogue)
                 res["overrides"] = overrides
                 res["tag"] = args.tag
             except Exception as e:  # record failures — they are bugs to fix

@@ -32,13 +32,33 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "jnp", "pallas", "interpret"],
+                    help="optimizer hot-loop implementation "
+                         "(OptimizerConfig.kernel_impl): auto = fused Pallas "
+                         "kernels on TPU, jnp reference elsewhere")
+    ap.add_argument("--pad-rank-to", type=int, default=0,
+                    help="opt-in lane-aligned rank padding for the low-rank "
+                         "Pallas kernels (e.g. 128)")
+    ap.add_argument("--fuse-families", action="store_true",
+                    help="family-stacked fused optimizer execution: one "
+                         "batched launch per shape family instead of one "
+                         "per parameter leaf (trajectory-identical)")
+    ap.add_argument("--fused-epilogue", action="store_true",
+                    help="fold chain-tail epilogues (-lr, weight decay) into "
+                         "the back-projection GEMM (back_project_epilogue "
+                         "kernel; not bit-exact vs the unfused tail; applies "
+                         "to galore-family optimizers — inert for gum/fira, "
+                         "whose inners emit full-shape updates)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     opt_cfg = OptimizerConfig(
         name=args.opt, lr=args.lr, rank=args.rank, gamma=args.gamma,
-        period=args.period,
+        period=args.period, kernel_impl=args.kernel_impl,
+        pad_rank_to=args.pad_rank_to, fuse_families=args.fuse_families,
+        fused_epilogue=args.fused_epilogue,
     )
     run_cfg = RunConfig(
         steps=args.steps, ckpt_dir=args.ckpt_dir, resume=not args.no_resume,

@@ -1,0 +1,36 @@
+"""CI guard for the benchmark harness: ``benchmarks/run.py --smoke`` must
+execute EVERY suite end-to-end (1-2 steps, no timing claims, no result-JSON
+writes).  Before this test existed the harness itself had bit-rotted — the
+suite imports were broken under the documented invocation and nothing
+noticed.  Runs the harness once as a subprocess, exactly as a user would."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_run_py_smoke_executes_all_suites(tmp_path):
+    # (subprocess timeout=520 is the watchdog; pytest-timeout isn't vendored)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    res = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"), "--smoke"],
+        cwd=tmp_path,  # NOT the repo root: smoke must not depend on cwd
+        env=env, capture_output=True, text=True, timeout=520,
+    )
+    assert res.returncode == 0, res.stderr[-4000:]
+    out = res.stdout
+    assert "# smoke run complete" in out
+    # every registered suite announced itself (run.py prints to stderr)
+    for suite in ("synthetic_counterexample", "memory_table", "pretrain_proxy",
+                  "bias_residual", "stable_rank", "roofline_report",
+                  "optimizer_api", "fused_step"):
+        assert f"# --- {suite} ---" in res.stderr, suite
+    # the new suite produced its rows, including launch counts
+    assert "fusedstep_gum_stacked" in out
+    assert "launches=" in out
+    # no result JSONs written in smoke mode (cwd is a scratch dir anyway)
+    assert "# wrote" not in out

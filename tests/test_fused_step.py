@@ -1,0 +1,344 @@
+"""Family-stacked fused step engine (PR 3): fused-vs-per-leaf equivalence.
+
+The contract: ``fuse_families=True`` executes the lowrank() pipeline as one
+batched launch per shape family but is TRAJECTORY-IDENTICAL to the per-leaf
+path — bit-exact on the jnp backend (per-member PRNG keys and
+layerwise_unbias gamma-slot sampling are preserved exactly), within fp32
+tolerance on the interpret-mode Pallas kernels.  Covers ragged shapes,
+``pad_rank_to=128``, mixed families, ``external_refresh``, the rsvd
+projector, the fused epilogue, and launch-count scaling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import (
+    OptimizerConfig,
+    apply_updates,
+    build_family_plan,
+    build_optimizer,
+    combinators,
+)
+from repro.core.lowrank_common import compute_projectors
+from repro.kernels import dispatch, launch_count
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(i, shape, scale=0.1):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape) * scale
+
+
+# Mixed-family routing tree: a stacked 3-block family, two single leaves of
+# the SAME shape (they stack with each other, not with the 3-block leaves —
+# different lead), a right-side family, a ragged family, and fallback leaves.
+PARAMS = {
+    "blocks": {
+        "wq": _rand(0, (3, 16, 24)),
+        "wk": _rand(1, (3, 16, 24)),
+        "w_out": _rand(2, (3, 24, 16)),
+    },
+    "single_a": _rand(3, (16, 24)),
+    "single_b": _rand(4, (16, 24)),
+    "ragged": _rand(5, (20, 9)),
+    "embed": _rand(6, (64, 16)),
+    "norm_scale": jnp.ones((16,)),
+}
+
+
+def quad_loss(p):
+    return 0.5 * sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(p))
+
+
+def run_traj(opt, params=PARAMS, steps=8):
+    st = opt.init(params)
+    p = params
+    losses = []
+    for _ in range(steps):
+        g = jax.grad(quad_loss)(p)
+        u, st = opt.update(g, st, p)
+        p = apply_updates(p, u)
+        losses.append(float(quad_loss(p)))
+    return p, losses
+
+
+def _builders(**kw):
+    return [
+        ("gum", lambda: core.gum(1e-2, rank=4, gamma=1, period=3, seed=5,
+                                 weight_decay=0.01, **kw)),
+        ("gum_gamma2", lambda: core.gum(1e-2, rank=4, gamma=2, period=3,
+                                        seed=7, **kw)),
+        ("galore_adam", lambda: core.galore(1e-2, rank=4, period=3, **kw)),
+        ("galore_muon", lambda: core.galore(1e-2, rank=4, period=3,
+                                            base="muon", weight_decay=0.01, **kw)),
+        ("fira", lambda: core.fira(1e-2, rank=4, period=3, **kw)),
+        ("unbiased_galore_adam",
+         lambda: core.unbiased_galore_adam(1e-2, rank=4, gamma=1, period=3,
+                                           seed=3, **kw)),
+    ]
+
+
+def _assert_trees(p_a, p_b, bitexact, name, atol=1e-6):
+    for a, b in zip(jax.tree_util.tree_leaves(p_a),
+                    jax.tree_util.tree_leaves(p_b)):
+        if bitexact:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=atol, rtol=1e-5, err_msg=name)
+
+
+# --------------------------------------------------------------- equivalence
+
+
+@pytest.mark.parametrize("idx", range(6))
+def test_fuse_families_bitexact_jnp(idx):
+    """Acceptance: the stacked engine reproduces the per-leaf trajectories
+    BIT-FOR-BIT on the jnp path (8 steps = two refresh periods, so projector
+    refresh and gamma-slot resampling both happen under stacking)."""
+    name, mk = _builders(kernel_impl="jnp")[idx]
+    p_leaf, l_leaf = run_traj(mk())
+    name_f, mk_f = _builders(kernel_impl="jnp", fuse_families=True)[idx]
+    p_fuse, l_fuse = run_traj(mk_f())
+    np.testing.assert_array_equal(l_leaf, l_fuse, err_msg=name)
+    _assert_trees(p_leaf, p_fuse, bitexact=True, name=name)
+
+
+@pytest.mark.parametrize("idx", [0, 3])
+def test_fuse_families_interpret(idx):
+    """Stacked vs per-leaf through the interpret-mode Pallas kernels
+    (tolerance: the padded batch grids change reduction tiling)."""
+    name, mk = _builders(kernel_impl="interpret")[idx]
+    p_leaf, _ = run_traj(mk(), steps=4)
+    _, mk_f = _builders(kernel_impl="interpret", fuse_families=True)[idx]
+    p_fuse, _ = run_traj(mk_f(), steps=4)
+    _assert_trees(p_leaf, p_fuse, bitexact=False, name=name)
+
+
+@pytest.mark.parametrize("idx", [0, 3, 4])
+def test_fused_epilogue_matches(idx):
+    """fused_epilogue folds -lr/wd into the GEMM — same trajectory within
+    fp32 tolerance (the epilogue redistributes the multiplications)."""
+    name, mk = _builders(kernel_impl="jnp")[idx]
+    p_leaf, _ = run_traj(mk())
+    _, mk_f = _builders(kernel_impl="jnp", fuse_families=True,
+                        fused_epilogue=True)[idx]
+    p_fuse, _ = run_traj(mk_f())
+    _assert_trees(p_leaf, p_fuse, bitexact=False, name=name)
+
+
+def test_fused_epilogue_interpret_pad_rank():
+    """Epilogue kernel through interpret mode with lane-aligned rank padding
+    on ragged shapes — the dispatch padding contract covers the W operand."""
+    mk = lambda **kw: core.galore(1e-2, rank=4, period=3, base="muon",
+                                  weight_decay=0.01, kernel_impl="interpret",
+                                  pad_rank_to=128, **kw)
+    p_leaf, _ = run_traj(mk(), steps=4)
+    p_fuse, _ = run_traj(mk(fuse_families=True, fused_epilogue=True), steps=4)
+    _assert_trees(p_leaf, p_fuse, bitexact=False, name="epilogue_pad128",
+                  atol=5e-6)
+
+
+def test_fuse_families_jit_bitexact():
+    """Same contract under jit (the production path)."""
+    mk = lambda **kw: core.gum(1e-2, rank=4, gamma=1, period=3, seed=5, **kw)
+
+    def run(opt, steps=7):
+        st = opt.init(PARAMS)
+
+        @jax.jit
+        def step(p, s):
+            g = jax.grad(quad_loss)(p)
+            u, s = opt.update(g, s, p)
+            return apply_updates(p, u), s
+
+        p = PARAMS
+        for _ in range(steps):
+            p, st = step(p, st)
+        return p
+
+    _assert_trees(run(mk()), run(mk(fuse_families=True)), bitexact=True,
+                  name="gum_jit")
+
+
+def test_external_refresh_matches_under_stacking():
+    """lowrank's external-refresh hook drives the stacked engine to the same
+    trajectory as the in-update refresh — in all four mode combinations."""
+    matrices = {k: PARAMS[k] for k in ("blocks", "single_a", "single_b", "ragged")}
+
+    def run_mode(fused, external, steps=7):
+        lt = combinators.lowrank(
+            combinators.layerwise_unbias(combinators.scale_by_muon(beta=0.9),
+                                         gamma=1),
+            rank=4, period=3, seed=5, reset_on_refresh=True,
+            external_refresh=external, fuse_families=fused,
+        )
+        t = combinators.chain(lt, combinators.scale_by_lr(1e-2))
+        st = t.init(matrices)
+        p = matrices
+        for _ in range(steps):
+            g = jax.grad(quad_loss)(p)
+            if external:
+                st = (lt.update.refresh(g, st[0], p),) + tuple(st[1:])
+            u, st = t.update(g, st, p)
+            p = apply_updates(p, u)
+        return p
+
+    base = run_mode(False, False)
+    for fused, external in [(True, False), (True, True), (False, True)]:
+        _assert_trees(base, run_mode(fused, external), bitexact=True,
+                      name=f"fused={fused} external={external}")
+
+
+def test_factory_threads_fusion_knobs():
+    for name in ("gum", "galore", "galore_muon", "fira", "unbiased_galore_adam"):
+        cfg = OptimizerConfig(name=name, rank=4, period=3,
+                              fuse_families=True, fused_epilogue=True)
+        opt = build_optimizer(cfg)
+        p, losses = run_traj(opt, steps=4)
+        assert losses[-1] < losses[0], name
+
+
+# ------------------------------------------------------------- family plan
+
+
+def test_family_plan_groups_by_signature():
+    leaves = [PARAMS["blocks"]["wq"], PARAMS["blocks"]["wk"],
+              PARAMS["blocks"]["w_out"], None, PARAMS["single_a"],
+              PARAMS["single_b"], PARAMS["ragged"]]
+    plan = build_family_plan(leaves, rank=4)
+    sizes = sorted((fam.seg.members, fam.seg.member_L, fam.fs.L)
+                   for fam in plan.families)
+    # (3,16,24)x2 -> M=2,L_mem=3 ; (3,24,16) -> M=1,L_mem=3 ;
+    # (16,24)x2 -> M=2,L_mem=1 ; (20,9) -> M=1,L_mem=1
+    assert sizes == [(1, 1, 1), (1, 3, 3), (2, 1, 2), (2, 3, 6)]
+    # member indices partition the non-None leaves
+    members = sorted(i for fam in plan.families for i in fam.members)
+    assert members == [0, 1, 2, 4, 5, 6]
+
+
+def test_launch_count_scales_with_families_not_leaves():
+    """The dispatch-launch count of a fused step depends on the number of
+    shape families; adding more leaves to an existing family must not add
+    launches (the per-leaf path adds ~3 per leaf)."""
+
+    def launches(params, fused):
+        opt = core.galore(1e-2, rank=4, period=3, base="muon",
+                          fuse_families=fused)
+        st = opt.init(params)
+        g = jax.tree_util.tree_map(lambda p: 0.01 * jnp.ones_like(p), params)
+        with launch_count.count_launches() as counts:
+            opt.update(g, st, params)
+        return sum(counts.values())
+
+    two_leaves = {"a": _rand(0, (16, 24)), "b": _rand(1, (16, 24))}
+    six_leaves = {f"l{i}": _rand(i, (16, 24)) for i in range(6)}
+    assert launches(six_leaves, True) == launches(two_leaves, True)
+    assert launches(six_leaves, False) > launches(six_leaves, True)
+
+
+# ------------------------------------------------------------------- rsvd
+
+
+def test_rsvd_projector_property_one():
+    """rsvd returns orthonormal columns (Property I) at every shape."""
+    for i, shape in enumerate([(16, 24), (64, 16), (20, 9)]):
+        g = _rand(40 + i, shape, scale=1.0)
+        p = core.rsvd_projector(g, 4, jax.random.fold_in(KEY, 50 + i))
+        assert p.shape == (shape[0], 4)
+        np.testing.assert_allclose(np.asarray(p.T @ p), np.eye(4),
+                                   atol=1e-5)
+
+
+def test_rsvd_batched_matches_single():
+    """compute_projectors('rsvd') over a stacked family == per-block calls
+    modulo the batched draw layout (same key => same sketch)."""
+    g = _rand(60, (3, 16, 24), scale=1.0)
+    key = jax.random.fold_in(KEY, 61)
+    p = compute_projectors("rsvd", g, 4, key, "left")
+    assert p.shape == (3, 16, 4)
+    for l in range(3):
+        blk = np.asarray(p[l])
+        np.testing.assert_allclose(blk.T @ blk, np.eye(4), atol=1e-5)
+
+
+def test_rsvd_captures_dominant_range():
+    """On a low-rank-plus-noise gradient, rsvd's subspace captures (nearly)
+    the same energy as the exact SVD projector."""
+    u = jnp.linalg.qr(_rand(70, (32, 4), scale=1.0))[0]
+    v = jnp.linalg.qr(_rand(71, (24, 4), scale=1.0))[0]
+    g = u @ jnp.diag(jnp.array([10.0, 8.0, 6.0, 4.0])) @ v.T \
+        + 0.01 * _rand(72, (32, 24), scale=1.0)
+    p_svd = core.svd_projector(g, 4)
+    p_rsvd = core.rsvd_projector(g, 4, jax.random.fold_in(KEY, 73))
+    energy = lambda p: float(jnp.linalg.norm(p.T @ g))
+    assert energy(p_rsvd) > 0.95 * energy(p_svd)
+
+
+def test_rsvd_in_lowrank_fused_bitexact():
+    """projector='rsvd' end-to-end, fused vs per-leaf, bit-exact."""
+    mk = lambda **kw: core.gum(1e-2, rank=4, gamma=1, period=3, seed=5,
+                               projector="rsvd", **kw)
+    p_leaf, _ = run_traj(mk(), steps=6)
+    p_fuse, _ = run_traj(mk(fuse_families=True), steps=6)
+    _assert_trees(p_leaf, p_fuse, bitexact=True, name="rsvd")
+    cfg = OptimizerConfig(name="gum", rank=4, period=3, projector="rsvd")
+    _, losses = run_traj(build_optimizer(cfg), steps=4)
+    assert losses[-1] < losses[0]
+
+
+# -------------------------------------------------------- epilogue dispatch
+
+
+def test_back_project_epilogue_registry_and_parity():
+    entry = dispatch.get_kernel("back_project_epilogue")
+    p = _rand(80, (20, 5), scale=1.0)     # ragged on purpose
+    s = _rand(81, (5, 9), scale=1.0)
+    w = _rand(82, (20, 9), scale=1.0)
+    want = np.asarray(entry.reference(p, s, w, -0.5, 0.25))
+    for impl in ("jnp", "interpret"):
+        got = dispatch.back_project_epilogue(
+            p, s, w=w, scale=jnp.float32(-0.5), decay=jnp.float32(0.25),
+            side="left", impl=impl)
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-5,
+                                   err_msg=impl)
+    # right side + no-W form + batched lead
+    p2 = _rand(83, (2, 9, 5), scale=1.0)
+    s2 = _rand(84, (2, 20, 5), scale=1.0)
+    want2 = np.asarray(2.0 * jnp.einsum("lmr,lnr->lmn", s2, p2))
+    for impl in ("jnp", "interpret"):
+        got2 = dispatch.back_project_epilogue(
+            p2, s2, scale=2.0, side="right", impl=impl)
+        np.testing.assert_allclose(np.asarray(got2), want2, atol=1e-5,
+                                   err_msg=impl)
+
+
+def test_pending_back_survives_chain_without_lr():
+    """A chain that ends before scale_by_lr leaves PendingBack leaves;
+    apply_updates materializes them (ungrouped fallback)."""
+    matrices = {"a": PARAMS["single_a"], "b": PARAMS["single_b"]}
+    t = combinators.chain(
+        combinators.lowrank(combinators.scale_by_momentum(beta=0.9),
+                            rank=4, period=3, fuse_families=True,
+                            fused_epilogue=True),
+        combinators.add_decayed_weights(0.01),
+    )
+    st = t.init(matrices)
+    g = jax.tree_util.tree_map(lambda p: 0.01 * jnp.ones_like(p), matrices)
+    u, st = t.update(g, st, matrices)
+    assert any(isinstance(x, core.PendingBack)
+               for x in jax.tree_util.tree_leaves(
+                   u, is_leaf=lambda x: isinstance(x, core.PendingBack)))
+    p2 = apply_updates(matrices, u)
+    for a, b in zip(jax.tree_util.tree_leaves(matrices),
+                    jax.tree_util.tree_leaves(p2)):
+        assert a.shape == b.shape
+        assert not bool(jnp.array_equal(a, b))
+
+
+def test_gum_accum_tools_rejects_fusion():
+    with pytest.raises(NotImplementedError):
+        core.gum_accum_tools(1e-2, rank=4, fuse_families=True)
