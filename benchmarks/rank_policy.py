@@ -1,0 +1,163 @@
+"""Rank-policy engine: memory footprint + step time across the ladder.
+
+Runs the pretrain-proxy setup (the paper's LLaMA-60M over the synthetic C4
+stream, GUM optimizer) under three rank regimes:
+
+  fixed      — the legacy static rank (the ladder top)
+  stepwise   — a declarative halving schedule
+  spectral   — the adaptive policy: captured-energy probes shrink/grow rank
+               along the ladder at refresh boundaries
+
+and reports final-loss proxy, projected-state bytes (the LowRankState:
+projectors + projected momenta + gamma slots — the Table-1 quantity the
+policies are shaping) and median step time.  Writes BENCH_rank_policy.json
+unless BENCH_SMOKE=1.
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core import (
+    OptimizerConfig,
+    apply_updates,
+    build_optimizer,
+    clip_by_global_norm,
+    find_lowrank_states,
+    resolve_rank_policy,
+    state_bytes,
+)
+from repro.core.rank_policy import RankPolicyController
+from repro.data import DataConfig, build_stream
+from repro.models import build_model
+
+RANK, PERIOD, LADDER = 16, 10, (4, 8, 16)
+
+
+def proj_bytes(st) -> int:
+    return sum(state_bytes(lr) for lr in find_lowrank_states(st))
+
+
+def run_policy(policy_spec, steps: int, batch: int = 8, seq: int = 128):
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = OptimizerConfig(
+        name="gum", lr=1e-2, rank=RANK, gamma=1, period=PERIOD, base="muon",
+        rank_policy=policy_spec, rank_ladder=LADDER,
+    )
+    ctrl = None
+    policy = resolve_rank_policy(opt_cfg)
+    if policy is not None:
+        ctrl = RankPolicyController(
+            policy, lambda m: build_optimizer(opt_cfg, rank_map=m),
+            period=PERIOD, default_rank=RANK,
+        )
+        opt = ctrl.transform()
+    else:
+        opt = build_optimizer(opt_cfg)
+    st = opt.init(params)
+    stream = build_stream(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                     global_batch=batch, seed=0))
+
+    def make_step(opt):
+        @jax.jit
+        def step(p, s, tokens):
+            def loss_fn(p):
+                lg, aux, _ = model.forward(p, tokens)
+                return model.loss(lg, tokens, aux)
+
+            loss, g = jax.value_and_grad(loss_fn)(p)
+            g = clip_by_global_norm(g, 1.0)
+            u, s = opt.update(g, s, p)
+            return apply_updates(p, u), s, loss
+
+        return step
+
+    step_fns = {}
+    losses, times, bytes_hist = [], [], []
+    for i in range(steps):
+        migrated = False
+        if ctrl is not None:
+            st, migrated = ctrl.maybe_update(st, params)
+            if migrated:
+                opt = ctrl.transform()
+        key = ctrl.current_map if ctrl is not None else None
+        if key not in step_fns:
+            step_fns[key] = make_step(opt)
+        tokens = jnp.asarray(stream.batch_at(i))
+        t0 = time.time()
+        params, st, loss = jax.block_until_ready(
+            step_fns[key](params, st, tokens))
+        if i > 0 and not migrated:  # skip compile steps in the timing
+            times.append(time.time() - t0)
+        losses.append(float(loss))
+        bytes_hist.append(proj_bytes(st))
+    tail = losses[-10:]
+    return {
+        "first": losses[0],
+        "final10": sum(tail) / len(tail),
+        "proj_bytes_final": bytes_hist[-1],
+        "proj_bytes_mean": int(sum(bytes_hist) / len(bytes_hist)),
+        "us_per_step_median": (statistics.median(times) * 1e6
+                               if times else 0.0),
+        "rank_history": ([[s, repr(m)] for s, m in ctrl.history]
+                         if ctrl is not None else []),
+    }
+
+
+# 200 steps: long enough for the proxy loss to plateau — at that horizon the
+# spectral policy's shrink to the energy-supported rank costs nothing (the
+# 60-step mid-descent prefix still shows a ~0.05% gap, which is exactly the
+# "fixed r wastes memory early or starves the subspace late" trade the
+# policy navigates).
+STEPS = 200
+
+POLICIES = {
+    "fixed16": None,                       # static cfg.rank (the ladder top)
+    "stepwise_halving": f"stepwise:0={RANK},{6 * PERIOD}=8,{10 * PERIOD}=4",
+    "spectral": "spectral:0.95",
+}
+
+
+def main() -> None:
+    from _smoke import smoke, steps as smoke_steps
+
+    steps = smoke_steps(STEPS)
+    print("name,us_per_call,derived")
+    results = {}
+    for name, spec in POLICIES.items():
+        r = run_policy(spec, steps)
+        results[name] = r
+        print(
+            f"rank_policy_{name},{r['us_per_step_median']:.0f},"
+            f"final10={r['final10']:.4f};proj_bytes={r['proj_bytes_final']};"
+            f"proj_bytes_mean={r['proj_bytes_mean']}"
+        )
+    base = results["fixed16"]
+    for name in ("stepwise_halving", "spectral"):
+        r = results[name]
+        print(
+            f"rank_policy_{name}_vs_fixed,0,"
+            f"bytes_ratio={r['proj_bytes_final'] / base['proj_bytes_final']:.3f};"
+            f"loss_delta={r['final10'] - base['final10']:+.4f}"
+        )
+    if not smoke():
+        payload = {
+            "config": {"arch": "llama-60m-smoke", "opt": "gum", "rank": RANK,
+                       "period": PERIOD, "ladder": list(LADDER),
+                       "steps": steps, "policies": POLICIES},
+            "results": results,
+        }
+        with open("results/BENCH_rank_policy.json", "w") as f:
+            json.dump(payload, f, indent=2)
+        print("# wrote results/BENCH_rank_policy.json")
+
+
+if __name__ == "__main__":
+    main()

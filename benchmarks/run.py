@@ -18,6 +18,9 @@ test existed).
   fused_step                — family-stacked fused engine vs per-leaf chained
                               vs legacy: step time + kernel-launch counts
                               (PR 3; writes BENCH_fused_step.json)
+  rank_policy               — rank-policy engine: projected-state bytes +
+                              step time, fixed vs stepwise vs spectral
+                              (writes BENCH_rank_policy.json)
   kernel_micro              — per-kernel wall-time microbenchmarks (CPU
                               interpret/xla; indicative only, not TPU)
 """
@@ -85,6 +88,7 @@ SUITES = [
     "roofline_report",
     "optimizer_api",
     "fused_step",
+    "rank_policy",
 ]
 
 

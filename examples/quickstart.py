@@ -99,3 +99,62 @@ def uga_step(params, opt_state, tokens):
 for step, tokens in zip(range(10), stream):
     params, uga_state, loss = uga_step(params, uga_state, jnp.asarray(tokens))
 print(f"unbiased GaLore-Adam composition OK  loss {float(loss):.4f}")
+
+# ---------------------------------------------------------------------------
+# Adaptive rank (the rank-policy engine, repro.core.rank_policy): gradient
+# rank decays during training, so a fixed r wastes optimizer memory early or
+# starves the subspace late.  A RankPolicy makes rank a per-family,
+# time-varying quantity: `spectral` estimates the captured gradient energy
+# from the probes lowrank() stores at each projector refresh and walks rank
+# down (or up) a declared ladder.  Rank is a *shape* in JAX, so changes
+# happen host-side at refresh boundaries: the controller migrates the
+# optimizer state (truncate / zero-pad the rank axes, everything else
+# carried bit-for-bit) and you re-fetch the transform + re-jit — bounded by
+# the ladder, so at most len(ladder) compilations per run.  The Trainer does
+# all of this automatically from OptimizerConfig(rank_policy="spectral:0.9",
+# rank_ladder=(4, 8, 16)) (CLI: --rank-policy / --rank-ladder), and persists
+# the controller state in checkpoint extras so resume is exact even across a
+# rank change.  Hand-driven it is a ~10-line loop:
+# ---------------------------------------------------------------------------
+from repro.core import rank_policy as rp
+
+policy = rp.spectral(target_energy=0.9, r_min=4, r_max=16, ladder=(4, 8, 16))
+build = lambda m: with_matrix_routing(
+    chain(
+        lowrank(layerwise_unbias(scale_by_adam(scale=0.25), gamma=1),
+                rank=m, period=10, reset_on_refresh=True, rank_policy=policy),
+        add_decayed_weights(0.01),
+        scale_by_lr(5e-3),
+    ),
+    adamw(5e-3, weight_decay=0.01),
+)
+ctrl = rp.RankPolicyController(policy, build, period=10, default_rank=16)
+ada = ctrl.transform()
+ada_state = ada.init(params)
+
+
+def make_ada_step(ada):
+    @jax.jit
+    def ada_step(params, opt_state, tokens):
+        def loss_fn(p):
+            logits, aux, _ = model.forward(p, tokens)
+            return model.loss(logits, tokens, aux)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = ada.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    return ada_step
+
+
+ada_steps = {ctrl.current_map: make_ada_step(ada)}
+for step, tokens in zip(range(25), stream):
+    ada_state, changed = ctrl.maybe_update(ada_state, params)
+    if changed:  # rank migrated at a refresh boundary: re-fetch + re-jit
+        ada = ctrl.transform()
+        ada_steps.setdefault(ctrl.current_map, make_ada_step(ada))
+        print(f"step {step:3d}  rank -> {ctrl.current_map}")
+    params, ada_state, loss = ada_steps[ctrl.current_map](
+        params, ada_state, jnp.asarray(tokens))
+print(f"adaptive-rank composition OK  loss {float(loss):.4f}")
+print(f"rank history: {ctrl.history}")

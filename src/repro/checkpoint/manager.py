@@ -119,6 +119,35 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- load
 
+    def read_extra(self, step: int) -> dict:
+        """The ``extra`` dict of a committed checkpoint WITHOUT restoring any
+        arrays — resume flows that must rebuild the restore template from
+        saved metadata first (e.g. the rank-policy controller state, which
+        determines the optimizer-state shapes) read this before ``restore``."""
+        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+            return json.load(f)["extra"]
+
+    @staticmethod
+    def _layout_mismatch_check(saved_paths, target_paths):
+        """Raise a named error for the one structural mismatch users actually
+        hit: an optimizer state saved with the other ``fuse_families``
+        setting.  Per-leaf lowrank states keep projectors under params-shaped
+        paths (``.../projs/<param path>``); the family-stacked engine keeps a
+        flat family list (``.../projs/<family index>``) — so the projs
+        subtrees differ textually whenever the layouts differ."""
+        sp = [p for p in saved_paths if "/projs/" in p]
+        tp = [p for p in target_paths if "/projs/" in p]
+        if (sp or tp) and sp != tp:
+            raise ValueError(
+                "optimizer-state layout mismatch: the checkpoint stores "
+                f"{len(sp)} projector leaves ({sp[:2]}...), the restore "
+                f"target expects {len(tp)} ({tp[:2]}...).  This is what a "
+                "fused-vs-per-leaf state difference looks like — the "
+                "`fuse_families` flag (OptimizerConfig.fuse_families / "
+                "--fuse-families) of the restoring run must match the run "
+                "that wrote the checkpoint."
+            )
+
     def restore(
         self,
         step: int,
@@ -135,6 +164,13 @@ class CheckpointManager:
             manifest = json.load(f)
 
         leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        # Layout check runs even at equal leaf counts: a fused-vs-per-leaf
+        # flip can coincidentally preserve both counts AND shapes (e.g. every
+        # family has one member), which would otherwise restore projectors
+        # into the wrong slots silently.
+        self._layout_mismatch_check(
+            [m["path"] for m in manifest["leaves"]], _leaf_paths(like)
+        )
         if len(manifest["leaves"]) != len(leaves_like):
             raise ValueError(
                 f"checkpoint has {len(manifest['leaves'])} leaves, "
@@ -152,8 +188,18 @@ class CheckpointManager:
             ]
             arr = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
             if list(arr.shape) != list(ref.shape):
+                hint = ""
+                if "/projs/" in meta["path"] or "/inner/" in meta["path"]:
+                    hint = (
+                        "  (a rank-axis mismatch on low-rank optimizer state "
+                        "usually means the checkpoint was written at a "
+                        "different rank / rank-policy state — restore with "
+                        "the saved RankMap, e.g. via the rank_policy extras "
+                        "the Trainer stores, or migrate_opt_state)"
+                    )
                 raise ValueError(
-                    f"{meta['path']}: saved shape {arr.shape} != target {ref.shape}"
+                    f"{meta['path']}: saved shape {arr.shape} != target "
+                    f"{ref.shape}{hint}"
                 )
             if sh is not None:
                 out.append(jax.device_put(arr, sh))

@@ -71,7 +71,7 @@ from .combinators import (
     with_fira_residual,
     with_matrix_routing,
 )
-from .factory import build_optimizer
+from .factory import build_optimizer, resolve_rank_policy
 from .family_plan import FamilyPlan, StackSeg, build_family_plan
 from .fira import fira, fira_matrices
 from .galore import galore, galore_matrices, golore
@@ -88,20 +88,33 @@ from .projectors import (
     subspace_projector,
     svd_projector,
 )
+from .rank_policy import (
+    RankMap,
+    RankPolicy,
+    RankPolicyController,
+    gather_probes,
+    migrate_opt_state,
+    parse_rank_policy,
+)
+from . import rank_policy
 from .schedules import constant, linear_warmup, warmup_cosine
 from .unbiased import unbiased_lowrank
 
 __all__ = [
     "FamilyPlan", "FullUpdate", "LayerwiseUnbiasState", "LowRankState",
-    "OptimizerConfig", "PendingBack", "ProjGrad", "StackSeg", "Transform",
+    "OptimizerConfig", "PendingBack", "ProjGrad", "RankMap", "RankPolicy",
+    "RankPolicyController", "StackSeg", "Transform",
     "adamw", "add_decayed_weights", "apply_updates", "build_family_plan",
     "build_optimizer", "chain", "clip_by_global_norm", "constant",
     "default_lowrank_filter", "find_lowrank_states", "fira", "fira_matrices",
-    "galore", "galore_matrices", "global_norm", "golore", "grass_projector",
+    "galore", "galore_matrices", "gather_probes", "global_norm", "golore",
+    "grass_projector",
     "gum", "gum_accum_tools", "gum_matrices", "layerwise_unbias",
     "linear_warmup", "lisa", "lowrank", "make_projector",
-    "materialize_pending", "msign_exact", "multi_transform", "muon",
-    "muon_matrices", "muon_scale", "newton_schulz", "random_projector",
+    "materialize_pending", "migrate_opt_state", "msign_exact",
+    "multi_transform", "muon",
+    "muon_matrices", "muon_scale", "newton_schulz", "parse_rank_policy",
+    "random_projector", "rank_policy", "resolve_rank_policy",
     "rsvd_projector", "scale_by_adam", "scale_by_factor", "scale_by_lr",
     "scale_by_momentum", "scale_by_muon", "sgdm", "state_bytes",
     "subspace_projector", "svd_projector", "tree_paths",

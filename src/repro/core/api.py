@@ -188,3 +188,14 @@ class OptimizerConfig:
     # Muon's sqrt(max(1, m/n)) RMS-matching factor.  None = each optimizer's
     # default (muon: on, matching Jordan et al.; gum: off, matching Alg. 2).
     use_muon_scale: bool | None = None
+    # Rank policy (repro.core.rank_policy): when and what rank each shape
+    # family runs at.  None = static cfg.rank (unchanged behavior).  Accepts
+    # a RankPolicy object or a CLI spec string — "fixed:64",
+    # "stepwise:0=128,500=64", "family:512x512=32,...", "spectral:0.99".
+    # Policies decide at projector-refresh boundaries; the Trainer migrates
+    # optimizer state and re-jits (bounded by the policy's rank ladder).
+    rank_policy: Any = None
+    # Declared rank ladder for adaptive policies (bounds recompilation; with
+    # pad_rank_to=128, ladder steps inside one 128-lane bucket share kernel
+    # shapes).  Empty = the policy's default (powers of two).
+    rank_ladder: tuple[int, ...] = ()

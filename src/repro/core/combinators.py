@@ -19,7 +19,11 @@ wrapper transforms
                                   periodic refresh, svd|subspace|random|grass
                                   choice, project / back-project through the
                                   Pallas dispatch layer (repro.kernels) —
-                                  runs ``inner`` in the projected space
+                                  runs ``inner`` in the projected space.
+                                  ``rank`` may be a per-family RankMap, and
+                                  ``rank_policy`` / ``probe_spectrum`` hook
+                                  in the adaptive-rank engine
+                                  (repro.core.rank_policy)
     layerwise_unbias(base, ...)   the paper's sampling debiasing (gamma
                                   full-rank slots, paper/finetune
                                   compensation) as an independent combinator
@@ -735,12 +739,42 @@ class LowRankState(NamedTuple):
     count: jax.Array
     projs: PyTree   # per-leaf projector (*lead, s, r) arrays (None elsewhere)
     inner: PyTree   # the wrapped transform's state (projected space)
+    # Spectrum probes (``probe_spectrum=True``, None otherwise): per leaf /
+    # family a dict {"sv2": (r,) squared singular values of PᵀG summed over
+    # blocks, "g2": () total ||G||_F², "mn": (2,) family shape} captured at
+    # each refresh — the raw material of the spectral() rank policy
+    # (repro.core.rank_policy reads them host-side via gather_probes).
+    probes: PyTree = None
+
+
+def _spectrum_probe(p, g32, fs: FamilyShape):
+    """Squared singular values of the projected gradient sketch ``PᵀG``
+    (via the r x r Gram eigenvalues — no extra SVD), summed over stacked
+    blocks and sorted descending, plus the total gradient energy.  Reuses
+    the projector the refresh just computed, so the probe costs one thin
+    GEMM + an r x r eigh per refresh."""
+    s = _dispatch().project(p, g32, side=fs.side, impl="jnp")
+    if fs.side == "left":
+        gram = jnp.einsum("...ab,...cb->...ac", s, s)
+    else:
+        gram = jnp.einsum("...ba,...bc->...ac", s, s)
+    ev = jnp.maximum(jnp.linalg.eigvalsh(gram), 0.0)     # (*lead, r)
+    sv2 = jnp.sum(ev.reshape((-1, ev.shape[-1])), axis=0)
+    sv2 = jnp.flip(jnp.sort(sv2))
+    return {"sv2": sv2, "g2": jnp.sum(jnp.square(g32)),
+            "mn": jnp.asarray((fs.m, fs.n), jnp.int32)}
+
+
+def _probe_zeros(fs: FamilyShape):
+    return {"sv2": jnp.zeros((fs.rank,), jnp.float32),
+            "g2": jnp.zeros((), jnp.float32),
+            "mn": jnp.asarray((fs.m, fs.n), jnp.int32)}
 
 
 def lowrank(
     inner: Transform,
     *,
-    rank: int = 128,
+    rank=128,
     period: int = 200,
     projector: str = "svd",
     seed: int = 0,
@@ -751,6 +785,8 @@ def lowrank(
     pad_rank_to: int = 0,
     fuse_families: bool = False,
     fused_epilogue: bool = False,
+    rank_policy=None,
+    probe_spectrum: bool = False,
 ) -> Transform:
     """Run ``inner`` inside a periodically-refreshed low-rank subspace.
 
@@ -773,7 +809,21 @@ def lowrank(
     docstring); trajectory-identical to the per-leaf path but with a
     different (family-list) state layout.  ``fused_epilogue=True``
     additionally defers the back-projection into :class:`PendingBack` leaves
-    so chain tails fold into the GEMM."""
+    so chain tails fold into the GEMM.
+
+    ``rank`` accepts an int or a per-shape :class:`~repro.core.rank_policy.
+    RankMap`; ``rank_policy`` (a :class:`~repro.core.rank_policy.RankPolicy`)
+    supplies the initial map and, for policies that need them, turns on
+    ``probe_spectrum`` — storing per-family spectrum probes in
+    ``LowRankState.probes`` at each refresh so a host-side
+    :class:`~repro.core.rank_policy.RankPolicyController` can adapt the rank
+    over training (rank is a *shape* in JAX, so the change itself happens
+    outside jit via ``migrate_opt_state`` + a rebuild at the new map)."""
+    if rank_policy is not None:
+        probe_spectrum = probe_spectrum or bool(
+            getattr(rank_policy, "wants_probes", False))
+        if isinstance(rank, int):
+            rank = rank_policy.initial_map(rank)
     wants_key = bool(getattr(inner.update, "wants_sample_key", False))
     inner_refresh_state = getattr(inner.update, "refresh_state", None)
 
@@ -837,8 +887,11 @@ def lowrank(
             )
             for fam in plan.families
         ]
+        probes = ([_probe_zeros(fam.fs) for fam in plan.families]
+                  if probe_spectrum else None)
         return LowRankState(
-            count=jnp.zeros((), jnp.int32), projs=projs, inner=inner.init(tmpls)
+            count=jnp.zeros((), jnp.int32), projs=projs,
+            inner=inner.init(tmpls), probes=probes,
         )
 
     def update_fused(updates: PyTree, state: LowRankState, params: PyTree):
@@ -853,7 +906,7 @@ def lowrank(
         # gathers full-rank param blocks; the scale_by_* bases only use
         # shapes, which ProjGrad.fs already carries).
         inner_wants_params = bool(getattr(inner.update, "wants_params", False))
-        fam_msgs, fam_projs, fam_params = [], [], []
+        fam_msgs, fam_projs, fam_params, fam_probes = [], [], [], []
         for fi, fam in enumerate(plan.families):
             g32 = stack_family(
                 fam, [g if g is None else g.astype(jnp.float32)
@@ -870,6 +923,14 @@ def lowrank(
                     lambda _, fi=fi: state.projs[fi],
                     None,
                 )
+            if probe_spectrum and not external_refresh:
+                fam_probes.append(jax.lax.cond(
+                    refresh,
+                    lambda _, p=p_proj, g=g32, fam=fam:
+                        _spectrum_probe(p, g, fam.fs),
+                    lambda _, fi=fi: state.probes[fi],
+                    None,
+                ))
             fam_msgs.append(ProjGrad(
                 p=p_proj, g=g32, fs=fam.fs, kernel_impl=kernel_impl,
                 pad_rank_to=pad_rank_to, coeff=1.0,
@@ -905,7 +966,11 @@ def lowrank(
 
         return (
             jax.tree_util.tree_unflatten(treedef, out_leaves),
-            LowRankState(count=count, projs=fam_projs, inner=new_inner),
+            LowRankState(
+                count=count, projs=fam_projs, inner=new_inner,
+                probes=(fam_probes if (probe_spectrum and not external_refresh)
+                        else state.probes),
+            ),
         )
 
     def refresh_fused(grads: PyTree, state: LowRankState, params: PyTree) -> LowRankState:
@@ -915,7 +980,7 @@ def lowrank(
 
         _, _, plan, g_leaves = _plan_leaves(params, grads)
 
-        new_projs, msgs = [], []
+        new_projs, msgs, new_probes = [], [], []
         for fi, fam in enumerate(plan.families):
             g32 = stack_family(
                 fam, [g if g is None else g.astype(jnp.float32)
@@ -930,6 +995,14 @@ def lowrank(
                 None,
             )
             new_projs.append(p_new)
+            if probe_spectrum:
+                new_probes.append(jax.lax.cond(
+                    refresh_now,
+                    lambda _, p=p_new, g=g32, fam=fam:
+                        _spectrum_probe(p, g, fam.fs),
+                    lambda _, fi=fi: state.probes[fi],
+                    None,
+                ))
             msgs.append(RefreshMsg(fs=fam.fs, key=keys_samp, seg=fam.seg))
 
         if inner_refresh_state is not None:
@@ -939,7 +1012,8 @@ def lowrank(
         else:
             new_inner = state.inner
         return LowRankState(
-            count=state.count, projs=new_projs, inner=new_inner
+            count=state.count, projs=new_projs, inner=new_inner,
+            probes=(new_probes if probe_spectrum else state.probes),
         )
 
     def init(params: PyTree) -> LowRankState:
@@ -955,8 +1029,16 @@ def lowrank(
 
         flat = jax.tree_util.tree_map(init_leaf, params, is_leaf=_IS_NONE)
         projs, tmpls = _transpose(flat, 2)
+        probes = None
+        if probe_spectrum:
+            probes = jax.tree_util.tree_map(
+                lambda p: None if p is None
+                else _probe_zeros(family_shape(p, rank)),
+                params, is_leaf=_IS_NONE,
+            )
         return LowRankState(
-            count=jnp.zeros((), jnp.int32), projs=projs, inner=inner.init(tmpls)
+            count=jnp.zeros((), jnp.int32), projs=projs,
+            inner=inner.init(tmpls), probes=probes,
         )
 
     def update(updates: PyTree, state: LowRankState, params: PyTree):
@@ -967,12 +1049,16 @@ def lowrank(
         leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=_IS_NONE)
         g_leaves = treedef.flatten_up_to(updates)
         p_leaves = treedef.flatten_up_to(state.projs)
+        pr_leaves = (treedef.flatten_up_to(state.probes)
+                     if probe_spectrum else None)
 
-        msg_leaves, proj_leaves = [], []
+        msg_leaves, proj_leaves, probe_leaves = [], [], []
         for i, (g, proj, p) in enumerate(zip(g_leaves, p_leaves, leaves)):
             if g is None or p is None:
                 msg_leaves.append(None)
                 proj_leaves.append(proj)
+                if probe_spectrum:
+                    probe_leaves.append(pr_leaves[i])
                 continue
             fs = family_shape(p, rank)
             key_proj, key_samp = _leaf_key(base_key, i)
@@ -988,6 +1074,16 @@ def lowrank(
                     lambda _: proj,
                     None,
                 )
+            if probe_spectrum:
+                if external_refresh:
+                    probe_leaves.append(pr_leaves[i])
+                else:
+                    probe_leaves.append(jax.lax.cond(
+                        refresh,
+                        lambda _: _spectrum_probe(p_proj, g32, fs),
+                        lambda _: pr_leaves[i],
+                        None,
+                    ))
             msg_leaves.append(ProjGrad(
                 p=p_proj, g=g32, fs=fs, kernel_impl=kernel_impl,
                 pad_rank_to=pad_rank_to, coeff=1.0,
@@ -1020,6 +1116,8 @@ def lowrank(
                 count=count,
                 projs=jax.tree_util.tree_unflatten(treedef, proj_leaves),
                 inner=new_inner,
+                probes=(jax.tree_util.tree_unflatten(treedef, probe_leaves)
+                        if probe_spectrum else None),
             ),
         )
 
@@ -1037,12 +1135,16 @@ def lowrank(
         leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=_IS_NONE)
         g_leaves = treedef.flatten_up_to(grads)
         p_leaves = treedef.flatten_up_to(state.projs)
+        pr_leaves = (treedef.flatten_up_to(state.probes)
+                     if probe_spectrum else None)
 
-        new_projs, msgs = [], []
+        new_projs, msgs, new_probes = [], [], []
         for i, (g, proj, p) in enumerate(zip(g_leaves, p_leaves, leaves)):
             if g is None or p is None or proj is None:
                 new_projs.append(proj)
                 msgs.append(None)
+                if probe_spectrum:
+                    new_probes.append(pr_leaves[i])
                 continue
             fs = family_shape(p, rank)
             key_proj, key_samp = _leaf_key(base_key, i)
@@ -1056,6 +1158,13 @@ def lowrank(
                 None,
             )
             new_projs.append(p_new)
+            if probe_spectrum:
+                new_probes.append(jax.lax.cond(
+                    refresh_now,
+                    lambda _: _spectrum_probe(p_new, g32, fs),
+                    lambda _: pr_leaves[i],
+                    None,
+                ))
             msgs.append(RefreshMsg(fs=fs, key=key_samp))
 
         msgs_tree = jax.tree_util.tree_unflatten(treedef, msgs)
@@ -1069,6 +1178,8 @@ def lowrank(
             count=state.count,
             projs=jax.tree_util.tree_unflatten(treedef, new_projs),
             inner=new_inner,
+            probes=(jax.tree_util.tree_unflatten(treedef, new_probes)
+                    if probe_spectrum else None),
         )
 
     if fuse_families:

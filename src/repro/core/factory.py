@@ -12,8 +12,16 @@ unbiased_galore_adam); ``cfg.pad_rank_to`` and the family-fusion knobs
 (``cfg.fuse_families`` / ``cfg.fused_epilogue``) to every low-rank
 optimizer; ``cfg.use_muon_scale`` (None = per-optimizer default) to muon
 and gum.
+
+``cfg.rank_policy`` / ``cfg.rank_ladder`` (see :mod:`repro.core.rank_policy`)
+make rank a per-family, time-varying quantity: the policy supplies the
+initial RankMap (and spectrum probing for adaptive policies); a live run's
+:class:`~repro.core.rank_policy.RankPolicyController` rebuilds the chain at
+each new assignment through :func:`build_optimizer`'s ``rank_map`` override.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 from .adamw import adamw, sgdm
 from .api import OptimizerConfig, Transform
@@ -22,6 +30,19 @@ from .galore import galore, golore
 from .gum import gum, unbiased_galore_adam
 from .lisa import lisa
 from .muon import muon
+from .rank_policy import RankMap, RankPolicy, as_policy
+
+
+def resolve_rank_policy(cfg: OptimizerConfig) -> Optional[RankPolicy]:
+    """``cfg.rank_policy`` (None | spec string | RankPolicy) resolved to a
+    policy object, with ``cfg.rank_ladder`` / ``cfg.rank`` as the ladder
+    bounds for adaptive specs."""
+    ladder = tuple(cfg.rank_ladder or ())
+    return as_policy(
+        cfg.rank_policy, ladder=ladder,
+        r_min=min(ladder) if ladder else 8,
+        r_max=max(ladder) if ladder else max(int(cfg.rank), 8),
+    )
 
 
 def _fusion_kw(cfg: OptimizerConfig) -> dict:
@@ -29,8 +50,17 @@ def _fusion_kw(cfg: OptimizerConfig) -> dict:
             "fused_epilogue": cfg.fused_epilogue}
 
 
-def build_optimizer(cfg: OptimizerConfig) -> Transform:
+def build_optimizer(
+    cfg: OptimizerConfig, rank_map: Optional[RankMap] = None
+) -> Transform:
+    """``rank_map`` overrides the rank assignment for this build — the
+    :class:`~repro.core.rank_policy.RankPolicyController` re-entry point
+    (``lambda m: build_optimizer(cfg, rank_map=m)``).  Without it the rank
+    is ``cfg.rank`` (or the policy's initial map when one is configured)."""
     name = cfg.name.lower()
+    policy = resolve_rank_policy(cfg)
+    rank = rank_map if rank_map is not None else cfg.rank
+    rank_kw = {"rank": rank, "rank_policy": policy}
     if name == "adamw":
         return adamw(cfg.lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, weight_decay=cfg.weight_decay)
     if name == "sgdm":
@@ -41,45 +71,46 @@ def build_optimizer(cfg: OptimizerConfig) -> Transform:
                     ns_steps=cfg.ns_steps, kernel_impl=cfg.kernel_impl, **kw)
     if name == "galore":
         return galore(
-            cfg.lr, rank=cfg.rank, period=cfg.period, projector=cfg.projector,
+            cfg.lr, period=cfg.period, projector=cfg.projector,
             base="adam", weight_decay=cfg.weight_decay, seed=cfg.seed,
             kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
-            **_fusion_kw(cfg),
+            **_fusion_kw(cfg), **rank_kw,
         )
     if name == "galore_muon":
         return galore(
-            cfg.lr, rank=cfg.rank, period=cfg.period, projector=cfg.projector,
+            cfg.lr, period=cfg.period, projector=cfg.projector,
             base="muon", beta=cfg.beta, ns_steps=cfg.ns_steps,
             weight_decay=cfg.weight_decay, seed=cfg.seed,
             kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
-            **_fusion_kw(cfg),
+            **_fusion_kw(cfg), **rank_kw,
         )
     if name == "golore":
-        return golore(cfg.lr, rank=cfg.rank, period=cfg.period, base=cfg.base,
+        return golore(cfg.lr, period=cfg.period, base=cfg.base,
                       seed=cfg.seed, kernel_impl=cfg.kernel_impl,
-                      pad_rank_to=cfg.pad_rank_to, **_fusion_kw(cfg))
+                      pad_rank_to=cfg.pad_rank_to, **_fusion_kw(cfg),
+                      **rank_kw)
     if name == "gum":
         kw = {} if cfg.use_muon_scale is None else {"use_muon_scale": cfg.use_muon_scale}
         return gum(
-            cfg.lr, rank=cfg.rank, gamma=cfg.gamma, period=cfg.period,
+            cfg.lr, gamma=cfg.gamma, period=cfg.period,
             projector=cfg.projector, base=cfg.base, beta=cfg.beta,
             ns_steps=cfg.ns_steps, weight_decay=cfg.weight_decay,
             compensation=cfg.compensation, seed=cfg.seed,
             kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
-            **_fusion_kw(cfg), **kw,
+            **_fusion_kw(cfg), **rank_kw, **kw,
         )
     if name == "unbiased_galore_adam":
         return unbiased_galore_adam(
-            cfg.lr, rank=cfg.rank, gamma=cfg.gamma, period=cfg.period,
+            cfg.lr, gamma=cfg.gamma, period=cfg.period,
             projector=cfg.projector, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
             weight_decay=cfg.weight_decay, compensation=cfg.compensation,
             seed=cfg.seed, kernel_impl=cfg.kernel_impl,
-            pad_rank_to=cfg.pad_rank_to, **_fusion_kw(cfg),
+            pad_rank_to=cfg.pad_rank_to, **_fusion_kw(cfg), **rank_kw,
         )
     if name == "fira":
-        return fira(cfg.lr, rank=cfg.rank, period=cfg.period, seed=cfg.seed,
+        return fira(cfg.lr, period=cfg.period, seed=cfg.seed,
                     kernel_impl=cfg.kernel_impl, pad_rank_to=cfg.pad_rank_to,
-                    **_fusion_kw(cfg))
+                    **_fusion_kw(cfg), **rank_kw)
     if name == "lisa":
         return lisa(cfg.lr, gamma=cfg.gamma, period=cfg.period, seed=cfg.seed)
     raise ValueError(f"unknown optimizer: {cfg.name!r}")

@@ -61,13 +61,17 @@ class FamilyPlan(NamedTuple):
     n_leaves: int
 
 
-def family_signature(p, rank: int) -> tuple:
-    """The static grouping key: leaves stack iff their signatures are equal."""
+def family_signature(p, rank) -> tuple:
+    """The static grouping key: leaves stack iff their signatures are equal.
+    ``rank`` may be an int or a per-shape ``RankMap`` (resolved per leaf by
+    ``family_shape``); the resolved rank is part of the signature, so a rank
+    change re-plans the families — same-(m, n) leaves always share one rank,
+    which keeps the grouping itself stable across rank migrations."""
     fs = family_shape(p, rank)
     return (fs.lead, fs.m, fs.n, fs.side, fs.rank, jnp.result_type(p).name)
 
 
-def build_family_plan(leaves, rank: int) -> FamilyPlan:
+def build_family_plan(leaves, rank) -> FamilyPlan:
     """Group the non-``None`` leaves of a flattened params list into families
     (first-occurrence order — deterministic across init/update/refresh, which
     all flatten the same params tree)."""

@@ -37,7 +37,7 @@ from .lowrank_common import default_lowrank_filter
 
 def fira_matrices(
     lr: Schedule,
-    rank: int = 128,
+    rank=128,
     period: int = 200,
     projector: str = "svd",
     b1: float = 0.9,
@@ -50,6 +50,7 @@ def fira_matrices(
     pad_rank_to: int = 0,
     fuse_families: bool = False,
     fused_epilogue: bool = False,
+    rank_policy=None,
 ) -> Transform:
     return chain(
         lowrank(
@@ -59,6 +60,7 @@ def fira_matrices(
             rank=rank, period=period, projector=projector, seed=seed,
             kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
             fuse_families=fuse_families, fused_epilogue=fused_epilogue,
+            rank_policy=rank_policy,
         ),
         scale_by_factor(scale),
         scale_by_lr(lr),
@@ -67,7 +69,7 @@ def fira_matrices(
 
 def fira(
     lr: Schedule,
-    rank: int = 128,
+    rank=128,
     period: int = 200,
     lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
     **kw,

@@ -46,7 +46,7 @@ from .lowrank_common import default_lowrank_filter
 
 def galore_matrices(
     lr: Schedule,
-    rank: int = 128,
+    rank=128,
     period: int = 200,
     projector: str = "svd",
     base: str = "adam",
@@ -64,8 +64,12 @@ def galore_matrices(
     pad_rank_to: int = 0,
     fuse_families: bool = False,
     fused_epilogue: bool = False,
+    rank_policy=None,
 ) -> Transform:
-    """GaLore over matrix leaves only (route others via :func:`galore`)."""
+    """GaLore over matrix leaves only (route others via :func:`galore`).
+    ``rank`` accepts an int or a per-shape RankMap; ``rank_policy`` (see
+    :mod:`repro.core.rank_policy`) supplies the initial map and turns on
+    spectrum probing for adaptive policies."""
     if base == "adam":
         inner = scale_by_adam(b1=b1, b2=b2, eps=eps, scale=scale)
     elif base == "muon":
@@ -81,6 +85,7 @@ def galore_matrices(
             subspace_iters=subspace_iters, reset_on_refresh=reset_on_update,
             kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
             fuse_families=fuse_families, fused_epilogue=fused_epilogue,
+            rank_policy=rank_policy,
         ),
         add_decayed_weights(weight_decay),
         scale_by_lr(lr),
@@ -89,7 +94,7 @@ def galore_matrices(
 
 def galore(
     lr: Schedule,
-    rank: int = 128,
+    rank=128,
     period: int = 200,
     projector: str = "svd",
     base: str = "adam",

@@ -88,7 +88,7 @@ from .lowrank_common import (
 
 def gum_matrices(
     lr: Schedule,
-    rank: int = 128,
+    rank=128,
     gamma: int = 2,
     period: int = 200,
     projector: str = "svd",
@@ -105,6 +105,7 @@ def gum_matrices(
     pad_rank_to: int = 0,
     fuse_families: bool = False,
     fused_epilogue: bool = False,
+    rank_policy=None,
 ) -> Transform:
     """GUM over matrix leaves (route 1-D/embedding leaves via :func:`gum`).
 
@@ -132,7 +133,7 @@ def gum_matrices(
         subspace_iters=subspace_iters, reset_on_refresh=True,
         external_refresh=external_refresh, kernel_impl=kernel_impl,
         pad_rank_to=pad_rank_to, fuse_families=fuse_families,
-        fused_epilogue=fused_epilogue,
+        fused_epilogue=fused_epilogue, rank_policy=rank_policy,
     )
     t = chain(lowrank_t, add_decayed_weights(weight_decay), scale_by_lr(lr))
     # Hook for gum_accum_tools: the external-refresh entry point + the fact
@@ -143,7 +144,7 @@ def gum_matrices(
 
 def gum(
     lr: Schedule,
-    rank: int = 128,
+    rank=128,
     gamma: int = 2,
     period: int = 200,
     projector: str = "svd",
@@ -167,7 +168,7 @@ def gum(
 
 def unbiased_galore_adam(
     lr: Schedule,
-    rank: int = 128,
+    rank=128,
     gamma: int = 2,
     period: int = 200,
     projector: str = "svd",
@@ -183,6 +184,7 @@ def unbiased_galore_adam(
     pad_rank_to: int = 0,
     fuse_families: bool = False,
     fused_epilogue: bool = False,
+    rank_policy=None,
     lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
 ) -> Transform:
     """Unbiased GaLore-Adam — a NEW method that is a pure composition:
@@ -204,6 +206,7 @@ def unbiased_galore_adam(
             subspace_iters=subspace_iters, reset_on_refresh=True,
             kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
             fuse_families=fuse_families, fused_epilogue=fused_epilogue,
+            rank_policy=rank_policy,
         ),
         add_decayed_weights(weight_decay),
         scale_by_lr(lr),
@@ -258,7 +261,7 @@ class GUMAccumTools(NamedTuple):
 
 def gum_accum_tools(
     lr: Schedule,
-    rank: int = 128,
+    rank=128,
     gamma: int = 2,
     period: int = 200,
     projector: str = "svd",
@@ -269,13 +272,7 @@ def gum_accum_tools(
     pad_rank_to: int = 0,
     **kw,
 ) -> GUMAccumTools:
-    if kw.get("fuse_families") or kw.get("fused_epilogue"):
-        # The compact-accumulation hooks address per-leaf projector/idx state
-        # through the params treedef; the family-stacked state is a family
-        # list.  Teach project/reconstruct the plan layout before enabling.
-        raise NotImplementedError(
-            "gum_accum_tools does not support fuse_families/fused_epilogue yet"
-        )
+    fused = bool(kw.get("fuse_families"))
     transform = gum(
         lr, rank=rank, gamma=gamma, period=period, projector=projector,
         lowrank_filter=lowrank_filter, seed=seed, subspace_iters=subspace_iters,
@@ -305,6 +302,34 @@ def gum_accum_tools(
 
         return dispatch
 
+    def _per_leaf_state(lr_state, treedef, leaves, lab):
+        """Per-leaf (projector, slot->block idx) views of the lowrank state,
+        for BOTH layouts.  Per-leaf states flatten along the params treedef;
+        the family-stacked state (``fuse_families=True``) holds one stacked
+        projector and one global idx vector per family, so each member's
+        slice is unstacked and its idx entries shifted back to member-local
+        block ids (the inverse of layerwise_unbias's per-member offset)."""
+        if not fused:
+            return (treedef.flatten_up_to(lr_state.projs),
+                    treedef.flatten_up_to(lr_state.inner.idx))
+        from .family_plan import build_family_plan, unstack_family
+
+        masked = [p if l else None for p, l in zip(leaves, lab)]
+        plan = build_family_plan(masked, rank)
+        proj_l = [None] * plan.n_leaves
+        idx_l = [None] * plan.n_leaves
+        for fi, fam in enumerate(plan.families):
+            members_p = unstack_family(fam, lr_state.projs[fi])
+            idx = lr_state.inner.idx[fi]
+            g_f = (int(idx.shape[0]) // fam.seg.members
+                   if idx is not None else 0)
+            for j, i in enumerate(fam.members):
+                proj_l[i] = members_p[j]
+                if idx is not None:
+                    idx_l[i] = (idx[j * g_f:(j + 1) * g_f]
+                                - j * fam.seg.member_L)
+        return proj_l, idx_l
+
     def refresh(grads, state, params):
         """Run the period-boundary projector/sampling refresh against raw
         (microbatch-0) gradients via the lowrank combinator's external-refresh
@@ -327,9 +352,8 @@ def gum_accum_tools(
 
         leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
         g_l = treedef.flatten_up_to(grads)
-        proj_l = treedef.flatten_up_to(lr_state.projs)
-        idx_l = treedef.flatten_up_to(lr_state.inner.idx)
         lab = treedef.flatten_up_to(is_low)
+        proj_l, idx_l = _per_leaf_state(lr_state, treedef, leaves, lab)
 
         def one(g, proj, idx, p, is_l):
             if g is None:
@@ -357,9 +381,8 @@ def gum_accum_tools(
 
         leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
         c_l = treedef.flatten_up_to(compact)
-        proj_l = treedef.flatten_up_to(lr_state.projs)
-        idx_l = treedef.flatten_up_to(lr_state.inner.idx)
         lab = treedef.flatten_up_to(is_low)
+        proj_l, idx_l = _per_leaf_state(lr_state, treedef, leaves, lab)
 
         def one(c, proj, idx, p, is_l):
             if c is None:

@@ -24,6 +24,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .rank_policy import resolve_rank
+
 
 class FamilyShape(NamedTuple):
     lead: tuple[int, ...]  # leading block dims
@@ -34,7 +36,10 @@ class FamilyShape(NamedTuple):
     rank: int
 
 
-def family_shape(p: jax.Array, rank: int) -> FamilyShape:
+def family_shape(p: jax.Array, rank) -> FamilyShape:
+    """``rank`` is an int or a per-shape assignment (``rank_policy.RankMap``,
+    duck-typed via ``rank_for(m, n)``) — the rank-policy engine threads one
+    map through every call site that used to take a single static int."""
     if p.ndim < 2:
         raise ValueError(f"low-rank families need >=2 dims, got {p.shape}")
     m, n = int(p.shape[-2]), int(p.shape[-1])
@@ -43,7 +48,7 @@ def family_shape(p: jax.Array, rank: int) -> FamilyShape:
     for d in lead:
         L *= d
     side = "left" if m <= n else "right"
-    rank = min(rank, m, n)
+    rank = min(resolve_rank(rank, m, n), m, n)
     return FamilyShape(lead=lead, L=L, m=m, n=n, side=side, rank=rank)
 
 

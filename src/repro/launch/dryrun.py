@@ -64,17 +64,21 @@ TRAIN_MICROBATCHES = {
 
 def default_optimizer(arch: str, kernel_impl: str = "auto",
                       pad_rank_to: int = 0, fuse_families: bool = False,
-                      fused_epilogue: bool = False) -> OptimizerConfig:
+                      fused_epilogue: bool = False,
+                      rank_policy: str | None = None,
+                      rank_ladder: tuple[int, ...] = ()) -> OptimizerConfig:
     # GUM (the paper's method) with the TPU-native subspace projector.
     # kernel_impl is threaded into the compiled cell so dry runs lower the
     # SAME hot path as training ("pallas" forces the fused kernels into the
     # HLO even on the host-CPU placeholder devices); the fusion knobs do the
-    # same for the family-stacked engine.
+    # same for the family-stacked engine; a rank policy lowers the cell at
+    # the policy's INITIAL RankMap (rank changes re-lower per ladder rank).
     return OptimizerConfig(
         name="gum", lr=1e-3, rank=128, gamma=2, period=200,
         projector="subspace", base="muon", kernel_impl=kernel_impl,
         pad_rank_to=pad_rank_to, fuse_families=fuse_families,
-        fused_epilogue=fused_epilogue,
+        fused_epilogue=fused_epilogue, rank_policy=rank_policy,
+        rank_ladder=rank_ladder,
     )
 
 
@@ -82,7 +86,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
              overrides: dict | None = None, microbatches: int | None = None,
              lowrank_accum: bool = False, kernel_impl: str = "auto",
              pad_rank_to: int = 0, fuse_families: bool = False,
-             fused_epilogue: bool = False):
+             fused_epilogue: bool = False, rank_policy: str | None = None,
+             rank_ladder: tuple[int, ...] = ()):
     cfg = get_config(arch)
     if overrides:
         cfg = cfg.replace(**overrides)
@@ -106,14 +111,17 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
     with use_mesh(mesh):
         if shape.kind == "train":
             ocfg = default_optimizer(arch, kernel_impl, pad_rank_to,
-                                     fuse_families, fused_epilogue)
+                                     fuse_families, fused_epilogue,
+                                     rank_policy, rank_ladder)
             if opt_name != "gum":
                 ocfg = OptimizerConfig(name=opt_name, rank=128, gamma=2,
                                        period=200, projector="subspace",
                                        kernel_impl=kernel_impl,
                                        pad_rank_to=pad_rank_to,
                                        fuse_families=fuse_families,
-                                       fused_epilogue=fused_epilogue)
+                                       fused_epilogue=fused_epilogue,
+                                       rank_policy=rank_policy,
+                                       rank_ladder=rank_ladder)
             tools = None
             if lowrank_accum:
                 from repro.core.gum import gum_accum_tools
@@ -123,6 +131,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
                     period=ocfg.period, projector=ocfg.projector,
                     kernel_impl=ocfg.kernel_impl,
                     pad_rank_to=ocfg.pad_rank_to,
+                    fuse_families=ocfg.fuse_families,
+                    fused_epilogue=ocfg.fused_epilogue,
                 )
                 opt = tools.transform
             else:
@@ -223,6 +233,13 @@ def main():
     ap.add_argument("--fused-epilogue", action="store_true",
                     help="fold chain-tail epilogues into the back-projection "
                          "GEMM (back_project_epilogue kernel)")
+    ap.add_argument("--rank-policy", default=None,
+                    help="rank-policy spec (repro.core.rank_policy) — the "
+                         "cell lowers at the policy's initial RankMap, e.g. "
+                         "'spectral:0.99' or 'family:1024x4096=64'")
+    ap.add_argument("--rank-ladder", default="",
+                    help="comma-separated ladder for adaptive policies, "
+                         "e.g. 32,64,128")
     ap.add_argument(
         "--set", action="append", default=[],
         help="ModelConfig overrides, e.g. --set attn_impl=xla_chunked "
@@ -273,7 +290,11 @@ def main():
                                kernel_impl=args.kernel_impl,
                                pad_rank_to=args.pad_rank_to,
                                fuse_families=args.fuse_families,
-                               fused_epilogue=args.fused_epilogue)
+                               fused_epilogue=args.fused_epilogue,
+                               rank_policy=args.rank_policy,
+                               rank_ladder=tuple(
+                                   int(r) for r in args.rank_ladder.split(",")
+                                   if r))
                 res["overrides"] = overrides
                 res["tag"] = args.tag
             except Exception as e:  # record failures — they are bugs to fix

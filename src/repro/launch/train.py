@@ -50,6 +50,19 @@ def main():
                          "kernel; not bit-exact vs the unfused tail; applies "
                          "to galore-family optimizers — inert for gum/fira, "
                          "whose inners emit full-shape updates)")
+    ap.add_argument("--rank-policy", default=None,
+                    help="time-varying / per-family rank "
+                         "(repro.core.rank_policy): 'fixed:64', "
+                         "'stepwise:0=128,500=64', 'family:512x512=32,...', "
+                         "'spectral[:target_energy]' — decisions land on "
+                         "projector-refresh boundaries; the trainer migrates "
+                         "optimizer state and re-jits (bounded by the ladder); "
+                         "policy state rides in checkpoint extras so resume "
+                         "is exact across rank changes")
+    ap.add_argument("--rank-ladder", default="",
+                    help="comma-separated ranks an adaptive policy may emit, "
+                         "e.g. 32,64,128 (bounds recompilation; empty = "
+                         "powers of two up to --rank)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -59,6 +72,8 @@ def main():
         period=args.period, kernel_impl=args.kernel_impl,
         pad_rank_to=args.pad_rank_to, fuse_families=args.fuse_families,
         fused_epilogue=args.fused_epilogue,
+        rank_policy=args.rank_policy,
+        rank_ladder=tuple(int(r) for r in args.rank_ladder.split(",") if r),
     )
     run_cfg = RunConfig(
         steps=args.steps, ckpt_dir=args.ckpt_dir, resume=not args.no_resume,

@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import RunConfig
-from repro.core import OptimizerConfig, build_optimizer
+from repro.core import OptimizerConfig, build_optimizer, resolve_rank_policy
+from repro.core.rank_policy import RankPolicyController
 from repro.data import DataConfig, build_stream
 from repro.launch.steps import make_train_step
 from repro.models.transformer import Model
@@ -83,15 +84,37 @@ class Trainer:
         self.run = run_cfg
         self.data_cfg = data_cfg
         self.mesh = mesh
-        self.optimizer = optimizer if optimizer is not None else build_optimizer(opt_cfg)
+        self.microbatches = microbatches
         self.ckpt = CheckpointManager(run_cfg.ckpt_dir, keep=run_cfg.keep_ckpts)
         self.monitor = StepTimeMonitor()
-        self._step_fn = make_train_step(
-            model, self.optimizer, grad_clip=run_cfg.grad_clip,
-            microbatches=microbatches,
+        # Rank policy (repro.core.rank_policy): rank is a shape in JAX, so a
+        # policy-driven rank change is a host-side event between steps — the
+        # controller migrates the optimizer state and we re-jit (bounded by
+        # the policy ladder via the per-map jit cache below).  Only active on
+        # the factory path; a hand-passed `optimizer` owns its own rank.
+        self.rank_ctrl: Optional[RankPolicyController] = None
+        if optimizer is None:
+            policy = resolve_rank_policy(opt_cfg)
+            if policy is not None:
+                self.rank_ctrl = RankPolicyController(
+                    policy,
+                    lambda m: build_optimizer(opt_cfg, rank_map=m),
+                    period=opt_cfg.period, default_rank=opt_cfg.rank,
+                )
+                optimizer = self.rank_ctrl.transform()
+        self._jit_cache: dict = {}
+        self._set_optimizer(
+            optimizer if optimizer is not None else build_optimizer(opt_cfg)
         )
 
     # ------------------------------------------------------------- setup
+
+    def _set_optimizer(self, optimizer):
+        self.optimizer = optimizer
+        self._step_fn = make_train_step(
+            self.model, optimizer, grad_clip=self.run.grad_clip,
+            microbatches=self.microbatches,
+        )
 
     def init_state(self):
         key = jax.random.PRNGKey(self.run.seed)
@@ -100,31 +123,55 @@ class Trainer:
         return params, opt_state
 
     def _jit_step(self, params, opt_state):
+        # One jitted step per rank assignment; without a controller there is
+        # exactly one entry, with one the cache is bounded by the ladder.
+        key = self.rank_ctrl.current_map if self.rank_ctrl else None
+        cached = self._jit_cache.get(key)
+        if cached is not None:
+            return cached
         if self.mesh is None:
-            return jax.jit(self._step_fn, donate_argnums=(0, 1))
-        psh = named_sharding_tree(params, self.mesh)
-        osh = opt_state_sharding(opt_state, self.mesh)
-        return jax.jit(
-            self._step_fn,
-            in_shardings=(psh, osh, None),
-            out_shardings=(psh, osh, None),
-            donate_argnums=(0, 1),
-        )
+            jitted = jax.jit(self._step_fn, donate_argnums=(0, 1))
+        else:
+            psh = named_sharding_tree(params, self.mesh)
+            osh = opt_state_sharding(opt_state, self.mesh)
+            jitted = jax.jit(
+                self._step_fn,
+                in_shardings=(psh, osh, None),
+                out_shardings=(psh, osh, None),
+                donate_argnums=(0, 1),
+            )
+        self._jit_cache[key] = jitted
+        return jitted
 
     # ------------------------------------------------------------- loop
 
+    def _ckpt_extra(self) -> Optional[dict]:
+        if self.rank_ctrl is None:
+            return None
+        return {"rank_policy": self.rank_ctrl.state_dict()}
+
     def train(self, steps: Optional[int] = None) -> TrainResult:
         steps = steps or self.run.steps
-        params, opt_state = self.init_state()
         stream = build_stream(self.data_cfg)
 
         start_step, resumed_from = 0, None
-        if self.run.resume:
-            restored = self.ckpt.restore_latest((params, opt_state))
-            if restored is not None:
-                start_step, (params, opt_state), _ = restored
-                resumed_from = start_step
-                stream.resume(start_step)  # exact skip-ahead
+        latest = self.ckpt.latest_step() if self.run.resume else None
+        if latest is not None and self.rank_ctrl is not None:
+            # The controller state determines the optimizer-state SHAPES, so
+            # it must be rebuilt from the saved extras before the restore
+            # template exists — this is what makes resume exact across a
+            # rank change.
+            extra = self.ckpt.read_extra(latest)
+            if "rank_policy" in extra:
+                self.rank_ctrl.load_state_dict(extra["rank_policy"])
+                self._set_optimizer(self.rank_ctrl.transform())
+        params, opt_state = self.init_state()
+        if latest is not None:
+            (params, opt_state), _ = self.ckpt.restore(
+                latest, (params, opt_state)
+            )
+            start_step, resumed_from = latest, latest
+            stream.resume(start_step)  # exact skip-ahead
 
         step_jit = self._jit_step(params, opt_state)
 
@@ -133,6 +180,15 @@ class Trainer:
         with use_mesh(self.mesh):
             for step in range(start_step, steps):
                 t0 = time.time()
+                if self.rank_ctrl is not None:
+                    opt_state, changed = self.rank_ctrl.maybe_update(
+                        opt_state, params
+                    )
+                    if changed:
+                        self._set_optimizer(self.rank_ctrl.transform())
+                        step_jit = self._jit_step(params, opt_state)
+                        print(f"step {step:6d} rank-policy -> "
+                              f"{self.rank_ctrl.current_map}", flush=True)
                 tokens = jnp.asarray(next(stream))
                 new_params, new_opt, metrics = step_jit(
                     params, opt_state, {"tokens": tokens}
@@ -147,11 +203,12 @@ class Trainer:
                 self.monitor.record(step, time.time() - t0)
 
                 if self.run.ckpt_every and (step + 1) % self.run.ckpt_every == 0:
-                    self.ckpt.save(step + 1, (params, opt_state))
+                    self.ckpt.save(step + 1, (params, opt_state),
+                                   extra=self._ckpt_extra())
                 if self.run.log_every and (step + 1) % self.run.log_every == 0:
                     print(f"step {step + 1:6d} loss {loss:.4f}", flush=True)
 
-        self.ckpt.save(steps, (params, opt_state))
+        self.ckpt.save(steps, (params, opt_state), extra=self._ckpt_extra())
         return TrainResult(
             final_step=steps,
             losses=losses,

@@ -339,6 +339,32 @@ def test_pending_back_survives_chain_without_lr():
         assert not bool(jnp.array_equal(a, b))
 
 
-def test_gum_accum_tools_rejects_fusion():
-    with pytest.raises(NotImplementedError):
-        core.gum_accum_tools(1e-2, rank=4, fuse_families=True)
+def test_gum_accum_tools_fused_layout():
+    """gum_accum_tools speaks the family-plan state layout: under
+    fuse_families the compact project/reconstruct hooks unstack each
+    family's projector and shift its global idx back to member-local block
+    ids, so (a) the projected-accumulation roundtrip stays update-equivalent
+    and (b) the compact trees match the per-leaf layout's bit-for-bit (the
+    fused refresh preserves per-member PRNG exactly)."""
+    params = {k: PARAMS[k] for k in ("blocks", "single_a", "ragged",
+                                     "norm_scale")}
+    g = jax.tree_util.tree_map(lambda p: 0.7 * p + 0.01, params)
+
+    compacts = []
+    for fuse in (False, True):
+        tools = core.gum_accum_tools(1e-2, rank=4, gamma=1, period=2,
+                                     projector="svd", kernel_impl="jnp",
+                                     fuse_families=fuse)
+        st = tools.transform.init(params)
+        st = tools.refresh(g, st, params)
+        u1, _ = tools.transform.update(g, st, params)
+        ghat = tools.reconstruct(tools.project(g, st, params), st, params)
+        u2, _ = tools.transform.update(ghat, st, params)
+        for a, b in zip(jax.tree_util.tree_leaves(u1),
+                        jax.tree_util.tree_leaves(u2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6, err_msg=f"fuse={fuse}")
+        compacts.append(tools.project(g, st, params))
+    for a, b in zip(jax.tree_util.tree_leaves(compacts[0]),
+                    jax.tree_util.tree_leaves(compacts[1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

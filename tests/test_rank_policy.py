@@ -1,0 +1,318 @@
+"""Rank-policy engine: schedules, spectral adaptation, live state migration.
+
+The migration contract: a rank change at a refresh boundary is
+indistinguishable — from the next refresh on — from having run at the new
+rank all along.  With ``reset_on_refresh=True`` chains (the GUM family) that
+means a ``stepwise`` rank drop mid-run produces BIT-IDENTICAL updates to a
+fresh run started at the low rank, from the first post-drop refresh onward
+(same step counts => same PRNG keys => same projectors / gamma samples; the
+refresh recomputes the projector at the new rank and zeroes all momenta).
+Covered on the per-leaf AND family-stacked paths, with ragged shapes and
+``pad_rank_to=128``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import combinators as C
+from repro.core import rank_policy as RP
+from repro.core import OptimizerConfig, build_optimizer, find_lowrank_states
+
+KEY = jax.random.PRNGKey(0)
+
+PARAMS = {
+    "blocks": jax.random.normal(jax.random.fold_in(KEY, 0), (3, 16, 24)) * 0.1,
+    "single": jax.random.normal(jax.random.fold_in(KEY, 1), (16, 24)) * 0.1,
+    "ragged": jax.random.normal(jax.random.fold_in(KEY, 2), (20, 9)) * 0.1,
+}
+
+
+def grads_at(step):
+    """Deterministic per-step synthetic gradients (identical across runs)."""
+    return jax.tree_util.tree_map(
+        lambda p, i=step: p + 0.03 * jax.random.normal(
+            jax.random.fold_in(KEY, 1000 + i), p.shape),
+        PARAMS,
+    )
+
+
+# ----------------------------------------------------------- RankMap / specs
+
+
+def test_rank_map_basics():
+    m = RP.RankMap(64, {(16, 24): 8, (20, 9): 4})
+    assert m.rank_for(16, 24) == 8
+    assert m.rank_for(20, 9) == 4
+    assert m.rank_for(100, 100) == 64
+    # canonical form: overrides equal to the default vanish
+    assert RP.RankMap(8, {(16, 24): 8}) == RP.RankMap(8)
+    assert hash(RP.RankMap(8, {(16, 24): 8})) == hash(RP.RankMap(8))
+    assert RP.RankMap.from_json(m.to_json()) == m
+
+
+def test_parse_rank_policy_specs():
+    assert RP.parse_rank_policy("fixed:64").ladder() == (64,)
+    assert RP.parse_rank_policy("64").ladder() == (64,)
+    sw = RP.parse_rank_policy("stepwise:0=128,500=64")
+    assert sw.initial_map(0).default == 128
+    _, m = sw.decide({}, 600, {}, RP.RankMap(128))
+    assert m.default == 64
+    fam = RP.parse_rank_policy("family:512x512=32,1024x256=64")
+    assert fam.initial_map(128).rank_for(512, 512) == 32
+    assert fam.initial_map(128).rank_for(7, 7) == 128
+    sp = RP.parse_rank_policy("spectral:0.9", ladder=(4, 8, 16))
+    assert sp.ladder() == (4, 8, 16) and sp.wants_probes
+    with pytest.raises(ValueError):
+        RP.parse_rank_policy("nope:1")
+
+
+def test_stepwise_threshold_snapping():
+    pol = RP.stepwise({0: 8, 10: 4, 20: 2})
+    assert [pol._rank_at(s, 99) for s in (0, 9, 10, 19, 20, 99)] == \
+        [8, 8, 4, 4, 2, 2]
+    assert pol.ladder() == (2, 4, 8)
+    # without a step-0 key the configured base rank applies until the first
+    # threshold — it is NOT silently replaced by the first scheduled value
+    pol = RP.stepwise({500: 64})
+    assert pol.initial_map(128) == RP.RankMap(128)
+    _, m = pol.decide({}, 400, {}, RP.RankMap(128))
+    assert m == RP.RankMap(128)
+    _, m = pol.decide({}, 500, {}, RP.RankMap(128))
+    assert m == RP.RankMap(64)
+
+
+# ----------------------------------------------------------- migration
+
+
+def _chain(rank, period=4, ff=False, prt=0, gamma=1):
+    return C.chain(
+        C.lowrank(
+            C.layerwise_unbias(C.scale_by_momentum(beta=0.9), gamma=gamma),
+            rank=rank, period=period, reset_on_refresh=True,
+            kernel_impl="jnp", pad_rank_to=prt, fuse_families=ff,
+        ),
+        C.scale_by_lr(0.1),
+    )
+
+
+def test_migrate_truncates_and_preserves():
+    t_hi, t_lo = _chain(RP.RankMap(6)), _chain(RP.RankMap(3))
+    st = t_hi.init(PARAMS)
+    for step in range(3):
+        _, st = t_hi.update(grads_at(step), st, PARAMS)
+    mig = RP.migrate_opt_state(st, t_lo.init(PARAMS))
+    lr_hi = find_lowrank_states(st)[0]
+    lr_lo = find_lowrank_states(mig)[0]
+    assert int(lr_lo.count) == int(lr_hi.count)
+    for hi, lo in zip(jax.tree_util.tree_leaves(lr_hi.projs),
+                      jax.tree_util.tree_leaves(lr_lo.projs)):
+        np.testing.assert_array_equal(np.asarray(hi[..., :lo.shape[-1]]),
+                                      np.asarray(lo))
+    for hi, lo in zip(jax.tree_util.tree_leaves(lr_hi.inner.idx),
+                      jax.tree_util.tree_leaves(lr_lo.inner.idx)):
+        np.testing.assert_array_equal(np.asarray(hi), np.asarray(lo))
+    # growing back zero-pads the new columns
+    grown = RP.migrate_opt_state(mig, t_hi.init(PARAMS))
+    for lo, gr in zip(jax.tree_util.tree_leaves(lr_lo.projs),
+                      jax.tree_util.tree_leaves(
+                          find_lowrank_states(grown)[0].projs)):
+        np.testing.assert_array_equal(np.asarray(gr[..., :lo.shape[-1]]),
+                                      np.asarray(lo))
+        assert not np.asarray(gr[..., lo.shape[-1]:]).any()
+
+
+def test_migrate_rejects_structure_change():
+    t = _chain(RP.RankMap(4))
+    other = C.chain(C.lowrank(C.scale_by_momentum(0.9), rank=4),
+                    C.scale_by_lr(0.1))
+    with pytest.raises(ValueError, match="structure"):
+        RP.migrate_opt_state(t.init(PARAMS), other.init(PARAMS))
+
+
+@pytest.mark.parametrize("ff", [False, True], ids=["perleaf", "fused"])
+@pytest.mark.parametrize("prt", [0, 128], ids=["nopad", "pad128"])
+def test_stepwise_drop_matches_fresh_low_rank_run(ff, prt):
+    """A stepwise 8->3 rank drop at step 8 (a refresh boundary of period 4)
+    produces bit-identical updates to a fresh rank-3 run from the first
+    post-drop refresh on — on per-leaf and fused paths, ragged shapes
+    included, with and without lane-aligned rank padding."""
+    period, drop, total = 4, 8, 16
+    pol = RP.stepwise({0: 8, drop: 3})
+    build = lambda m: _chain(m, period=period, ff=ff, prt=prt)
+    ctrl = RP.RankPolicyController(pol, build, period=period, default_rank=8)
+
+    opt = ctrl.transform()
+    st = opt.init(PARAMS)
+    mig_updates = []
+    changed_at = None
+    for step in range(total):
+        st, changed = ctrl.maybe_update(st, PARAMS)
+        if changed:
+            opt = ctrl.transform()
+            changed_at = step
+        u, st = opt.update(grads_at(step), st, PARAMS)
+        mig_updates.append(u)
+    assert changed_at == drop
+    assert ctrl.current_map == RP.RankMap(3)
+
+    fresh = build(RP.RankMap(3))
+    st_f = fresh.init(PARAMS)
+    for step in range(total):
+        u_f, st_f = fresh.update(grads_at(step), st_f, PARAMS)
+        if step >= drop:
+            for a, b in zip(jax.tree_util.tree_leaves(mig_updates[step]),
+                            jax.tree_util.tree_leaves(u_f)):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"step {step} ff={ff} prt={prt}")
+
+
+# ----------------------------------------------------------- spectral
+
+
+def test_spectrum_probe_matches_svd():
+    """probe sv2 == squared top-r singular values of G (svd projector)."""
+    g = grads_at(0)
+    pol = RP.spectral(target_energy=0.99, r_min=2, r_max=8, ladder=(2, 4, 8))
+    t = C.chain(
+        C.lowrank(C.scale_by_momentum(0.9), rank=8, period=4,
+                  kernel_impl="jnp", rank_policy=pol),
+        C.scale_by_lr(0.1),
+    )
+    st = t.init(PARAMS)
+    _, st = t.update(g, st, PARAMS)  # count=1 -> refresh, probes captured
+    probes = RP.gather_probes(st)
+    sv = np.linalg.svd(np.asarray(g["single"]), compute_uv=False)
+    got = probes[(16, 24)]["sv2"]
+    # (16, 24) aggregates "single" + the 3 "blocks" members
+    blocks = np.asarray(g["blocks"]).reshape(-1, 16, 24)
+    want = np.sort(np.concatenate(
+        [np.linalg.svd(b, compute_uv=False)[:8] ** 2 for b in blocks]
+        + [sv[:8] ** 2]))[::-1]
+    # aggregation sums per-leaf sorted spectra; compare total captured energy
+    np.testing.assert_allclose(got.sum(), want.sum(), rtol=1e-4)
+    g2 = probes[(16, 24)]["g2"]
+    assert got.sum() <= g2 * (1 + 1e-5)
+
+
+def test_spectral_decisions():
+    pol = RP.spectral(target_energy=0.9, r_min=2, r_max=8, ladder=(2, 4, 8))
+    cur = RP.RankMap(8)
+    # concentrated spectrum: top-2 carry 99% of the energy -> shrink to 2
+    probes = {(16, 24): {"sv2": np.array([50.0, 49.0, 0.5, 0.25] + [0.0] * 4),
+                         "g2": 100.0, "rank": 8}}
+    _, m = pol.decide(pol.init_state(), 4, probes, cur)
+    assert m.rank_for(16, 24) == 2
+    # flat spectrum far from target -> grow one ladder step above current
+    probes = {(16, 24): {"sv2": np.ones(4) * 1.0, "g2": 100.0, "rank": 4}}
+    _, m = pol.decide(pol.init_state(), 4, probes, RP.RankMap(4))
+    assert m.rank_for(16, 24) == 8
+    # never exceeds the family dims
+    probes = {(20, 9): {"sv2": np.ones(8), "g2": 1e6, "rank": 8}}
+    _, m = pol.decide(pol.init_state(), 4, probes, RP.RankMap(8))
+    assert m.rank_for(20, 9) <= 9
+    # probe_every rate-limits decisions
+    pol2 = RP.spectral(target_energy=0.9, probe_every=100,
+                       r_min=2, r_max=8, ladder=(2, 4, 8))
+    ps = pol2.init_state()
+    ps, m = pol2.decide(ps, 4, probes, RP.RankMap(8))
+    assert m is not None
+    ps, m = pol2.decide(ps, 8, probes, RP.RankMap(8))
+    assert m is None  # within the probe_every window
+
+
+@pytest.mark.parametrize("ff", [False, True], ids=["perleaf", "fused"])
+def test_spectral_shrinks_on_lowrank_gradients(ff):
+    """Rank-2 gradients drive the spectral policy down the ladder on both
+    execution paths; the shrunken state is smaller and still trains."""
+    u = jax.random.normal(jax.random.fold_in(KEY, 7), (16, 2))
+    v = jax.random.normal(jax.random.fold_in(KEY, 8), (2, 24))
+    glow = {"blocks": jnp.stack([u @ v] * 3), "single": u @ v,
+            "ragged": jax.random.normal(jax.random.fold_in(KEY, 10), (20, 1))
+            @ jax.random.normal(jax.random.fold_in(KEY, 11), (1, 9))}
+    pol = RP.spectral(target_energy=0.95, r_min=2, r_max=8, ladder=(2, 4, 8))
+    build = lambda m: C.chain(
+        C.lowrank(C.layerwise_unbias(C.scale_by_momentum(0.9), gamma=1),
+                  rank=m, period=2, reset_on_refresh=True, kernel_impl="jnp",
+                  rank_policy=pol, fuse_families=ff),
+        C.scale_by_lr(0.1))
+    ctrl = RP.RankPolicyController(pol, build, period=2, default_rank=8)
+    opt = ctrl.transform()
+    st = opt.init(PARAMS)
+    bytes_before = core.state_bytes(st)
+    for step in range(6):
+        st, changed = ctrl.maybe_update(st, PARAMS)
+        if changed:
+            opt = ctrl.transform()
+        _, st = opt.update(glow, st, PARAMS)
+    assert ctrl.current_map.rank_for(16, 24) == 2, ctrl.history
+    assert core.state_bytes(st) < bytes_before
+
+
+# ----------------------------------------------------------- checkpointing
+
+
+def test_checkpoint_layout_mismatch_names_fuse_families(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    cfg = dict(rank=4, gamma=1, period=3, kernel_impl="jnp")
+    fused_state = core.gum(1e-2, fuse_families=True, **cfg).init(PARAMS)
+    leaf_state = core.gum(1e-2, **cfg).init(PARAMS)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, fused_state)
+    with pytest.raises(ValueError, match="fuse_families"):
+        mgr.restore(1, leaf_state)
+
+
+def test_checkpoint_rank_mismatch_hint(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _chain(RP.RankMap(6)).init(PARAMS))
+    with pytest.raises(ValueError, match="rank"):
+        mgr.restore(1, _chain(RP.RankMap(3)).init(PARAMS))
+
+
+def test_trainer_bitexact_resume_across_rank_change(tmp_path):
+    """End-to-end acceptance: a stepwise drop at step 6 (period 3), trained
+    through the real Trainer + CheckpointManager; stopping at step 8 (after
+    the drop) and resuming to 10 reproduces the uninterrupted run's final
+    params BIT-exactly — the controller state rides in checkpoint extras and
+    rebuilds the restore template at the saved RankMap."""
+    from repro.configs import RunConfig, get_smoke
+    from repro.data import DataConfig
+    from repro.models import build_model
+    from repro.train import Trainer
+
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    opt_cfg = OptimizerConfig(
+        name="gum", lr=5e-3, rank=8, gamma=1, period=3,
+        kernel_impl="jnp", rank_policy="stepwise:0=8,6=4",
+    )
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4)
+
+    def run(ckpt_dir, steps, resume):
+        run_cfg = RunConfig(steps=steps, ckpt_dir=str(ckpt_dir),
+                            resume=resume, ckpt_every=0, log_every=0)
+        tr = Trainer(model, opt_cfg, run_cfg, data_cfg)
+        tr.train()
+        return tr
+
+    tr_a = run(tmp_path / "a", 10, resume=False)
+    assert tr_a.rank_ctrl.current_map == RP.RankMap(4), tr_a.rank_ctrl.history
+
+    run(tmp_path / "b", 8, resume=False)   # stops AFTER the rank change
+    tr_b = run(tmp_path / "b", 10, resume=True)
+    assert tr_b.rank_ctrl.current_map == RP.RankMap(4)
+
+    (pa, sa), _ = tr_a.ckpt.restore(10, tr_a.init_state())
+    (pb, sb), _ = tr_b.ckpt.restore(10, tr_b.init_state())
+    for a, b in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(sa),
+                    jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
