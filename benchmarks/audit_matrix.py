@@ -1,0 +1,65 @@
+"""Static-audit pass matrix (PR 6): every factory optimizer, all fuse modes.
+
+Runs :func:`repro.analysis.audit.run_matrix` — chain lint, closed-form
+launch model vs trace-time dispatch counts, dtype-flow and
+recompilation-hazard passes — over the reference 3-family tree.  Everything
+is abstract (eval_shape / make_jaxpr), so the whole matrix costs seconds and
+zero accelerator time; the committed JSON records per-cell launch counts,
+projected-state bytes and signature hashes so audit regressions are visible
+across PRs.
+
+Emits ``name,us_per_call,derived`` CSV rows (us = wall time to audit the
+cell, derived = ``clean`` / the finding codes) and writes
+``BENCH_audit_matrix.json`` under --out (default results/).
+
+Usage: PYTHONPATH=src python benchmarks/audit_matrix.py [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.analysis.audit import audit_optimizer, default_params, matrix_configs
+
+
+def main() -> None:
+    from _smoke import smoke
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results")
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+    params = default_params()
+    cells = matrix_configs()
+    if smoke():
+        cells = cells[:2]  # execution check only — full matrix is tier-1
+    reports = {}
+    for cfg in cells:
+        t0 = time.time()
+        rep = audit_optimizer(cfg, params, ladder=cfg.rank_ladder)
+        us = (time.time() - t0) * 1e6
+        reports[rep.name] = rep
+        derived = "clean" if rep.ok else "+".join(sorted(rep.codes()))
+        print(f"audit_{rep.name},{us:.0f},{derived}", flush=True)
+
+    if smoke():
+        print("# smoke mode: skipping BENCH_audit_matrix.json write",
+              flush=True)
+        return
+    entry = {
+        "cells": {name: rep.to_json() for name, rep in reports.items()},
+        "clean": sum(r.ok for r in reports.values()),
+        "total": len(reports),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "BENCH_audit_matrix.json")
+    with open(path, "w") as f:
+        json.dump(entry, f, indent=2, default=str)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,10 @@ test existed).
   rank_policy               — rank-policy engine: projected-state bytes +
                               step time, fixed vs stepwise vs spectral
                               (writes BENCH_rank_policy.json)
+  audit_matrix              — static-audit pass matrix: every factory
+                              optimizer x fuse_families x fused_epilogue,
+                              abstract tracing only (PR 6; writes
+                              BENCH_audit_matrix.json)
   kernel_micro              — per-kernel wall-time microbenchmarks (CPU
                               interpret/xla; indicative only, not TPU)
 """
@@ -89,7 +93,28 @@ SUITES = [
     "optimizer_api",
     "fused_step",
     "rank_policy",
+    "audit_matrix",
 ]
+
+# Suites that commit a results/BENCH_*.json trajectory.  A registered suite
+# whose JSON is missing means someone added (or regenerated) the suite and
+# forgot to commit the numbers — warn loudly so it can't slip through CI.
+RESULT_JSON = {
+    "optimizer_api": "BENCH_optimizer_api.json",
+    "fused_step": "BENCH_fused_step.json",
+    "rank_policy": "BENCH_rank_policy.json",
+    "audit_matrix": "BENCH_audit_matrix.json",
+}
+
+
+def warn_missing_results() -> None:
+    results_dir = os.path.join(os.path.dirname(_HERE), "results")
+    for suite, fname in RESULT_JSON.items():
+        if not os.path.exists(os.path.join(results_dir, fname)):
+            print(f"WARNING: suite '{suite}' is registered but "
+                  f"results/{fname} is not committed — run "
+                  f"PYTHONPATH=src python benchmarks/{suite}.py to record it",
+                  file=sys.stderr, flush=True)
 
 
 def main() -> None:
@@ -101,6 +126,7 @@ def main() -> None:
     if args.smoke:
         os.environ["BENCH_SMOKE"] = "1"
     only = os.environ.get("BENCH_ONLY")
+    warn_missing_results()
     ran_header = False
     for name in SUITES:
         if only and only != name:

@@ -1,0 +1,53 @@
+"""repro.analysis — static analysis of the optimizer step (PR 6).
+
+The paper's promise — unbiased low-rank updates at GaLore-class memory cost
+— only holds if the implementation keeps its invariants: debiasing stays in
+the compute dtype, the fused engine launches once per shape family, and the
+projected-state bytes match the Table-1 accounting.  This package *proves*
+those invariants on the traced program, before a single real step runs:
+
+  * :mod:`~repro.analysis.chain_lint` — combinator-composition rules checked
+    on the static ``chain_info`` metadata (``RC1xx`` codes): ``lowrank()``
+    not nested, ``layerwise_unbias`` inside the projection, ``scale_by_lr``
+    terminal, ladder monotone and containing the initial rank,
+    ``pad_rank_to`` lane-aligned.
+  * :mod:`~repro.analysis.launch_model` — the closed-form expected kernel
+    launch count derived from the chain composition and the
+    :class:`~repro.core.family_plan.FamilyPlan`, asserted against the
+    dispatch layer's trace-time counter (``RA3xx``).
+  * :mod:`~repro.analysis.jaxpr_passes` — jaxpr-level passes over
+    ``jax.make_jaxpr`` of the update (no real arrays, nothing executes):
+    dtype-flow audit (``RA2xx``), recompilation-hazard detection across a
+    declared rank ladder (``RA4xx``), and the static memory accountant
+    (``RA5xx``) cross-checked against ``results/BENCH_rank_policy.json``.
+  * :mod:`~repro.analysis.audit` — the orchestrator and CLI::
+
+        PYTHONPATH=src python -m repro.analysis.audit --optimizer gum \
+            --fuse-families --fused-epilogue --rank-ladder 16,32,64
+        PYTHONPATH=src python -m repro.analysis.audit --matrix
+
+Wired into ``build_optimizer(..., audit=True)`` (chain lint at build time),
+``launch/dryrun.py --audit`` (full audit per compiled cell) and the
+``Trainer`` startup log (one-line summary: launches/step, state bytes,
+signature hash).
+"""
+from .audit import audit_optimizer, audit_summary, run_matrix
+from .chain_lint import ChainLintError, lint_chain
+from .findings import CODES, AuditReport, Finding
+from .jaxpr_passes import (
+    dtype_flow_findings,
+    memory_crosscheck,
+    projected_state_bytes,
+    recompile_findings,
+    signature_hash,
+    trace_update,
+)
+from .launch_model import expected_launches, lowrank_plan_stats
+
+__all__ = [
+    "AuditReport", "CODES", "ChainLintError", "Finding",
+    "audit_optimizer", "audit_summary", "dtype_flow_findings",
+    "expected_launches", "lint_chain", "lowrank_plan_stats",
+    "memory_crosscheck", "projected_state_bytes", "recompile_findings",
+    "run_matrix", "signature_hash", "trace_update",
+]

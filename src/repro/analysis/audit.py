@@ -1,0 +1,299 @@
+"""Audit orchestrator + CLI: run every analyzer over a built optimizer.
+
+One audit cell = one ``OptimizerConfig``: chain lint, closed-form launch
+model vs trace-time dispatch counts, dtype-flow pass, recompilation-hazard
+pass across the rank ladder, and the static memory accountant — all on the
+abstract program, nothing executes.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis.audit --optimizer gum \
+        --fuse-families --fused-epilogue --rank-ladder 8,16
+    PYTHONPATH=src python -m repro.analysis.audit --matrix --json
+    PYTHONPATH=src python -m repro.analysis.audit --optimizer gum \
+        --check-memory          # cross-check results/BENCH_rank_policy.json
+
+Exit status 1 iff any error-severity finding survives.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import OptimizerConfig, Transform, state_bytes
+from repro.core.combinators import chain_info, find_lowrank_states
+from repro.core.factory import build_optimizer
+from repro.core.rank_policy import RankMap
+from repro.kernels import launch_count
+
+from .chain_lint import lint_chain
+from .findings import AuditReport, Finding
+from .jaxpr_passes import (
+    dtype_flow_findings,
+    memory_crosscheck,
+    recompile_findings,
+    signature_hash,
+    trace_update,
+)
+from .launch_model import expected_launches, lowrank_plan_stats
+
+# Factory optimizers that route matrices through lowrank() — audited across
+# the full fuse_families x fused_epilogue grid — vs. full-rank baselines
+# (one cell each; the fuse knobs are no-ops for them).
+LOWRANK_OPTIMIZERS = ("gum", "galore", "galore_muon", "golore", "fira",
+                      "unbiased_galore_adam")
+FULLRANK_OPTIMIZERS = ("muon", "adamw", "sgdm", "lisa")
+
+
+def default_params(dtype=jnp.float32):
+    """The audit's reference tree: three hidden-matrix shape families
+    (4x 64x64, 2x 64x128, 2x 128x64) plus an embedding and a norm vector so
+    the matrix/fallback routing is exercised.  ShapeDtypeStructs only."""
+    shapes = {
+        "layers/0/attn/wq": (64, 64), "layers/0/attn/wo": (64, 64),
+        "layers/1/attn/wq": (64, 64), "layers/1/attn/wo": (64, 64),
+        "layers/0/mlp/up": (64, 128), "layers/1/mlp/up": (64, 128),
+        "layers/0/mlp/down": (128, 64), "layers/1/mlp/down": (128, 64),
+        "embed/table": (256, 64),
+        "norm/scale": (64,),
+    }
+    return {k: jax.ShapeDtypeStruct(s, dtype) for k, s in shapes.items()}
+
+
+def arch_params(arch: str):
+    """Abstract param tree of a registered model config (``eval_shape``'d
+    init — nothing allocates).  ``name-smoke`` selects the tiny variant."""
+    from repro.configs import get_config, get_smoke
+    from repro.models import build_model
+
+    if arch.endswith("-smoke"):
+        cfg = get_smoke(arch[: -len("-smoke")])
+    else:
+        cfg = get_config(arch)
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _cell_name(cfg: OptimizerConfig) -> str:
+    bits = [cfg.name]
+    if cfg.fuse_families:
+        bits.append("fused")
+    if cfg.fused_epilogue:
+        bits.append("epilogue")
+    return "+".join(bits)
+
+
+def launch_findings(expected: dict, traced: dict, *, fused_epilogue: bool,
+                    where: str = "") -> list[Finding]:
+    """Classify an expected-vs-traced launch-count diff into findings.
+
+    Back-projection diffs under ``fused_epilogue=True`` are RA302 (the
+    epilogue failed to fold — stray unfused back_projects); every other
+    diff is RA301 (the one-launch-set-per-family contract broke, or the
+    model's coefficient table is stale)."""
+    if traced == expected:
+        return []
+    stray, other = [], []
+    for op in sorted(set(traced) | set(expected)):
+        e, a = expected.get(op, 0), traced.get(op, 0)
+        if e != a:
+            line = f"{op}: expected {e}, traced {a}"
+            (stray if fused_epilogue and op.startswith("back_project")
+             else other).append(line)
+    out = []
+    if stray:
+        out.append(Finding(
+            code="RA302", where=where,
+            message="fused_epilogue=True left unfused back-projection "
+                    "launches: " + "; ".join(stray),
+            hint="the chain tail is not folding into "
+                 "back_project_epilogue — check that scale_by_lr is "
+                 "terminal and the inner emits a projected update",
+            detail={"expected": expected, "traced": traced},
+        ))
+    if other:
+        out.append(Finding(
+            code="RA301", where=where,
+            message="traced launch counts diverge from the closed-form "
+                    "FamilyPlan expectation: " + "; ".join(other),
+            hint="either the fused engine regressed (launches per leaf "
+                 "instead of per family) or the launch model's "
+                 "coefficient table is stale",
+            detail={"expected": expected, "traced": traced},
+        ))
+    return out
+
+
+def audit_optimizer(
+    cfg: OptimizerConfig,
+    params=None,
+    *,
+    ladder=None,
+    check_memory: bool = False,
+) -> AuditReport:
+    """Run every analyzer over ``build_optimizer(cfg)``; nothing executes."""
+    name = _cell_name(cfg)
+    report = AuditReport(name=name)
+    params = default_params() if params is None else params
+    ladder = tuple(ladder if ladder is not None else cfg.rank_ladder)
+
+    transform = build_optimizer(cfg)
+    report.extend(lint_chain(transform, ladder=ladder, name=name))
+    if not report.ok:
+        return report  # a malformed chain traces garbage (or TypeErrors)
+
+    expected, model_findings = expected_launches(transform, params, name=name)
+    report.extend(model_findings)
+
+    state = jax.eval_shape(transform.init, params)
+    with launch_count.count_launches() as counts:
+        jaxpr = jax.make_jaxpr(
+            lambda g, s, w: transform.update(g, s, w))(params, state, params)
+    traced = dict(counts)
+
+    if not model_findings:
+        report.extend(launch_findings(
+            expected, traced, fused_epilogue=cfg.fused_epilogue, where=name))
+
+    report.extend(dtype_flow_findings(jaxpr, where=name))
+
+    hashes = {}
+    if ladder:
+        def at_rank(r: int) -> Transform:
+            return build_optimizer(cfg, rank_map=RankMap(r))
+
+        rec, hashes = recompile_findings(at_rank, params, ladder, where=name)
+        report.extend(rec)
+
+    if check_memory:
+        report.extend(memory_crosscheck())
+
+    proj = sum(state_bytes(lr)
+               for lr in find_lowrank_states(
+                   jax.eval_shape(transform.init, params)))
+    report.summary.update({
+        "launches_per_step": sum(traced.values()),
+        "launch_counts": launch_count.format_counts(traced),
+        "proj_state_bytes": proj,
+        "signature": signature_hash(jaxpr),
+        "ladder_signatures": hashes,
+        "family_plans": lowrank_plan_stats(transform, params, name=name),
+    })
+    return report
+
+
+def audit_summary(transform: Transform, params, *, name: str = "optimizer") -> str:
+    """One-line startup summary for the Trainer log: per-step launch counts,
+    projected-state bytes and the abstract signature hash — from a single
+    abstract trace."""
+    state = jax.eval_shape(transform.init, params)
+    with launch_count.count_launches() as counts:
+        jaxpr = jax.make_jaxpr(
+            lambda g, s, w: transform.update(g, s, w))(params, state, params)
+    proj = sum(state_bytes(lr) for lr in find_lowrank_states(state))
+    return (f"audit[{name}]: launches/step="
+            f"{launch_count.format_counts(dict(counts))} "
+            f"proj_state={proj}B sig={signature_hash(jaxpr)}")
+
+
+def matrix_configs(rank: int = 16, period: int = 10,
+                   ladder=(8, 16)) -> list[OptimizerConfig]:
+    """The full audit pass matrix: every lowrank factory optimizer across
+    fuse_families x fused_epilogue, plus the full-rank baselines."""
+    cells = []
+    for opt in LOWRANK_OPTIMIZERS:
+        for fuse in (False, True):
+            for epi in (False, True):
+                cells.append(OptimizerConfig(
+                    name=opt, rank=rank, period=period, gamma=1,
+                    kernel_impl="jnp", fuse_families=fuse,
+                    fused_epilogue=epi, rank_ladder=tuple(ladder),
+                ))
+    for opt in FULLRANK_OPTIMIZERS:
+        cells.append(OptimizerConfig(name=opt, period=period, gamma=1))
+    return cells
+
+
+def run_matrix(params=None, *, rank: int = 16, period: int = 10,
+               ladder=(8, 16), check_memory: bool = False,
+               ) -> dict[str, AuditReport]:
+    """Audit every matrix cell; returns ``{cell_name: AuditReport}``."""
+    params = default_params() if params is None else params
+    out: dict[str, AuditReport] = {}
+    for cfg in matrix_configs(rank=rank, period=period, ladder=ladder):
+        out[_cell_name(cfg)] = audit_optimizer(
+            cfg, params, ladder=cfg.rank_ladder, check_memory=False)
+    if check_memory:
+        mem = AuditReport(name="memory_crosscheck")
+        mem.extend(memory_crosscheck())
+        out[mem.name] = mem
+    return out
+
+
+def _parse_ladder(text: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in text.split(",") if x.strip())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="Static audit of the traced optimizer step "
+                    "(nothing executes).",
+    )
+    ap.add_argument("--optimizer", default="gum",
+                    help="factory optimizer name (default: gum)")
+    ap.add_argument("--arch", default=None, metavar="NAME",
+                    help="audit against a registered model config's real "
+                         "param tree (eval_shape'd, nothing allocates) "
+                         "instead of the synthetic reference tree; append "
+                         "-smoke for the tiny variant")
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--period", type=int, default=10)
+    ap.add_argument("--fuse-families", action="store_true")
+    ap.add_argument("--fused-epilogue", action="store_true")
+    ap.add_argument("--rank-ladder", type=_parse_ladder, default=(8, 16),
+                    metavar="R1,R2,...")
+    ap.add_argument("--matrix", action="store_true",
+                    help="audit the full optimizer x fuse x epilogue matrix")
+    ap.add_argument("--check-memory", action="store_true",
+                    help="also cross-check results/BENCH_rank_policy.json")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    params = arch_params(args.arch) if args.arch else None
+    if args.matrix:
+        reports = run_matrix(params, rank=args.rank, period=args.period,
+                             ladder=args.rank_ladder,
+                             check_memory=args.check_memory)
+    else:
+        cfg = OptimizerConfig(
+            name=args.optimizer, rank=args.rank, period=args.period,
+            gamma=1, kernel_impl="jnp",
+            fuse_families=args.fuse_families,
+            fused_epilogue=args.fused_epilogue,
+            rank_ladder=args.rank_ladder,
+        )
+        reports = {_cell_name(cfg): audit_optimizer(
+            cfg, params, ladder=args.rank_ladder,
+            check_memory=args.check_memory)}
+
+    ok = all(r.ok for r in reports.values())
+    if args.as_json:
+        print(json.dumps({k: r.to_json() for k, r in reports.items()},
+                         indent=2, default=str))
+    else:
+        for r in reports.values():
+            print(r.format(verbose=args.verbose))
+        print(f"audit matrix: {sum(r.ok for r in reports.values())}"
+              f"/{len(reports)} cells clean")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,284 @@
+"""Jaxpr-level analyzer passes: trace the update, never execute it.
+
+Everything here works on ``jax.make_jaxpr`` / ``jax.eval_shape`` output over
+``ShapeDtypeStruct`` trees — no real arrays are materialized and no kernel
+runs, so the passes are safe to run at build time on any host.
+
+Passes (stable codes in :mod:`repro.analysis.findings`):
+
+  * dtype-flow audit — ``RA201`` flags f64 creeping into the update path
+    (silently doubling state bytes and halving MXU throughput), ``RA202``
+    flags bf16 round-trips *inside* the f32 update math (a downcast whose
+    result is upcast again lost 16 bits of mantissa for nothing).
+  * recompilation hazards — ``RA401`` retraces the step at a fixed rank and
+    compares abstract signatures (a mismatch means every step recompiles);
+    ``RA402`` flags weak-typed 0-d closure captures, the classic way Python
+    scalars leak into the cache key.
+  * static memory accountant — projected-state bytes straight from the
+    ``eval_shape``'d optimizer state, cross-checked (``RA501``) against the
+    runtime numbers recorded in ``results/BENCH_rank_policy.json``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import Transform, state_bytes
+from repro.core.combinators import find_lowrank_states
+
+from .findings import Finding
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+
+def abstract_tree(tree):
+    """The ``ShapeDtypeStruct`` skeleton of a pytree (identity on structs)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)), tree
+    )
+
+
+def trace_update(transform: Transform, params):
+    """Trace one optimizer step abstractly.
+
+    Returns ``(closed_jaxpr, state_structs)`` where the jaxpr is of
+    ``update(grads, state, params)`` over gradient structs shaped like
+    ``params``.  Nothing executes."""
+    p = abstract_tree(params)
+    state = jax.eval_shape(transform.init, p)
+    jaxpr = jax.make_jaxpr(
+        lambda g, s, w: transform.update(g, s, w))(p, state, p)
+    return jaxpr, state
+
+
+def _subjaxprs(value) -> Iterator:
+    if isinstance(value, jax.extend.core.ClosedJaxpr):
+        yield value.jaxpr
+    elif isinstance(value, jax.extend.core.Jaxpr):
+        yield value
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _subjaxprs(v)
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """All equations of a (Closed)Jaxpr, recursing into control-flow /
+    pjit / scan sub-jaxprs, in trace order."""
+    if hasattr(jaxpr, "jaxpr"):           # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from iter_eqns(sub)
+
+
+# ---------------------------------------------------------------------------
+# dtype flow (RA2xx)
+# ---------------------------------------------------------------------------
+
+_LOW = (jnp.bfloat16, jnp.float16)
+_HIGH32 = (jnp.float32, jnp.float64)
+
+
+def dtype_flow_findings(jaxpr, *, allow_bf16_roundtrip: bool = False,
+                        where: str = "step") -> list[Finding]:
+    """RA201 (f32 -> f64 leaks) and RA202 (bf16 round-trips) over a traced
+    step.  ``allow_bf16_roundtrip`` is the per-optimizer allowlist knob for
+    transforms that deliberately stage through bf16."""
+    out: list[Finding] = []
+    f64_prims: dict[str, int] = {}
+    downcast: set[int] = set()       # ids of vars produced by f32->bf16/f16
+    roundtrips = 0
+    for eqn in iter_eqns(jaxpr):
+        prim = eqn.primitive.name
+        for v in eqn.outvars:
+            dt = getattr(getattr(v, "aval", None), "dtype", None)
+            if dt is not None and dt == jnp.float64:
+                f64_prims[prim] = f64_prims.get(prim, 0) + 1
+        if prim == "convert_element_type":
+            src = getattr(eqn.invars[0].aval, "dtype", None)
+            dst = getattr(eqn.outvars[0].aval, "dtype", None)
+            if src in _HIGH32 and dst in _LOW:
+                downcast.add(id(eqn.outvars[0]))
+            elif (src in _LOW and dst in _HIGH32
+                  and id(eqn.invars[0]) in downcast):
+                roundtrips += 1
+    if f64_prims:
+        total = sum(f64_prims.values())
+        tops = ", ".join(f"{k}x{v}" for k, v in sorted(f64_prims.items())[:4])
+        out.append(Finding(
+            code="RA201", where=where,
+            message=f"{total} f64 value(s) in the traced update ({tops}) — "
+                    "the update path is f32-by-contract",
+            hint="find the float64 promotion (usually a numpy scalar or "
+                 "x64-enabled constant) and cast to jnp.float32",
+            detail={"per_primitive": f64_prims},
+        ))
+    if roundtrips and not allow_bf16_roundtrip:
+        out.append(Finding(
+            code="RA202", where=where,
+            message=f"{roundtrips} bf16/f16 round-trip(s) inside f32 update "
+                    "math — a downcast immediately re-upcast loses mantissa "
+                    "for no memory win",
+            hint="keep optimizer math in f32 end-to-end, or allowlist the "
+                 "optimizer (allow_bf16_roundtrip=True) if the staging is "
+                 "deliberate",
+            detail={"roundtrips": roundtrips},
+        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# recompilation hazards (RA4xx)
+# ---------------------------------------------------------------------------
+
+
+def signature_hash(jaxpr) -> str:
+    """Stable digest of a traced step's abstract signature: input/output
+    avals plus the full program text.  Equal hashes => jit cache hit."""
+    core = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+    h = hashlib.sha256()
+    for v in list(core.invars) + list(core.outvars):
+        h.update(str(getattr(v, "aval", v)).encode())
+    h.update(str(core).encode())
+    return h.hexdigest()[:16]
+
+
+def recompile_findings(
+    make_transform: Callable[[int], Transform],
+    params,
+    ladder: Iterable[int],
+    *,
+    where: str = "step",
+) -> tuple[list[Finding], dict[int, str]]:
+    """Trace the step twice per ladder rank and compare signatures.
+
+    Returns ``(findings, {rank: signature_hash})``.  RA401 (error): the two
+    traces of the *same* rank disagree — something non-deterministic or
+    Python-id-dependent is in the trace, so every step would recompile.
+    RA402 (warning): weak-typed 0-d constvars closed over by the step — a
+    Python scalar captured as a weak constant re-keys the jit cache whenever
+    its producing code path changes."""
+    out: list[Finding] = []
+    hashes: dict[int, str] = {}
+    for rank in ladder:
+        t = make_transform(int(rank))
+        j1, _ = trace_update(t, params)
+        j2, _ = trace_update(t, params)
+        h1, h2 = signature_hash(j1), signature_hash(j2)
+        hashes[int(rank)] = h1
+        if h1 != h2:
+            out.append(Finding(
+                code="RA401", where=f"{where}@rank{rank}",
+                message=f"abstract step signature unstable across retraces "
+                        f"at rank {rank} ({h1} != {h2}) — every jit call "
+                        "would recompile",
+                hint="hunt for trace-order nondeterminism (dict iteration "
+                     "over id()s, fresh closures per trace) in the chain",
+            ))
+        weak = [v for v in j1.jaxpr.constvars
+                if getattr(v.aval, "weak_type", False)
+                and getattr(v.aval, "shape", None) == ()]
+        if weak:
+            out.append(Finding(
+                code="RA402", severity="warning", where=f"{where}@rank{rank}",
+                message=f"{len(weak)} weak-typed 0-d constant(s) captured by "
+                        "the traced step — Python scalars in the closure "
+                        "re-key the jit cache on unrelated code changes",
+                hint="materialize captured scalars with an explicit dtype, "
+                     "e.g. jnp.asarray(x, jnp.float32)",
+                detail={"count": len(weak)},
+            ))
+    return out, hashes
+
+
+# ---------------------------------------------------------------------------
+# static memory accountant (RA5xx)
+# ---------------------------------------------------------------------------
+
+
+def projected_state_bytes(transform: Transform, params) -> int:
+    """Bytes of every LowRankState (projectors + projected momenta + probe
+    slots) in the ``eval_shape``'d optimizer state — the Table-1 quantity,
+    computed without allocating anything."""
+    state = jax.eval_shape(transform.init, abstract_tree(params))
+    return sum(state_bytes(lr) for lr in find_lowrank_states(state))
+
+
+_RANKMAP_RE = re.compile(r"RankMap\(default=(\d+), overrides=\{([^}]*)\}\)")
+_OVERRIDE_RE = re.compile(r"'(\d+)x(\d+)':\s*(\d+)")
+
+
+def _parse_rank_map(text: str):
+    from repro.core.rank_policy import RankMap
+
+    m = _RANKMAP_RE.match(text)
+    if not m:
+        raise ValueError(f"unparseable RankMap repr: {text!r}")
+    overrides = {(int(a), int(b)): int(r)
+                 for a, b, r in _OVERRIDE_RE.findall(m.group(2))}
+    return RankMap(int(m.group(1)), overrides)
+
+
+def memory_crosscheck(
+    bench_path: str | Path = "results/BENCH_rank_policy.json",
+) -> list[Finding]:
+    """RA501: recompute each policy's final projected-state bytes statically
+    (eval_shape at the recorded final RankMap) and require exact agreement
+    with the runtime ``proj_bytes_final`` committed by the rank-policy
+    benchmark.  Skips (info finding) when the benchmark JSON is absent."""
+    path = Path(bench_path)
+    if not path.exists():
+        return [Finding(
+            code="RA501", severity="info", where=str(path),
+            message="no recorded rank-policy benchmark to cross-check "
+                    "against",
+            hint="run PYTHONPATH=src python benchmarks/rank_policy.py to "
+                 "record one",
+        )]
+
+    from repro.configs import get_smoke
+    from repro.core import OptimizerConfig, build_optimizer
+    from repro.core.rank_policy import RankMap
+    from repro.models import build_model
+
+    data = json.loads(path.read_text())
+    cfg = data["config"]
+    model = build_model(get_smoke(cfg["arch"].replace("-smoke", "")))
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    out: list[Finding] = []
+    for policy, res in data["results"].items():
+        history = res.get("rank_history") or []
+        final_map = (_parse_rank_map(history[-1][1]) if history
+                     else RankMap(int(cfg["rank"])))
+        opt_cfg = OptimizerConfig(
+            name=cfg["opt"], lr=1e-2, rank=int(cfg["rank"]), gamma=1,
+            period=int(cfg["period"]), base="muon",
+            rank_policy=cfg.get("policies", {}).get(policy),
+            rank_ladder=tuple(cfg.get("ladder", ())),
+        )
+        opt = build_optimizer(opt_cfg, rank_map=final_map)
+        static = projected_state_bytes(opt, params)
+        recorded = int(res["proj_bytes_final"])
+        if static != recorded:
+            out.append(Finding(
+                code="RA501", where=f"{path.name}:{policy}",
+                message=f"static projected-state bytes {static} != recorded "
+                        f"proj_bytes_final {recorded} "
+                        f"(final map {final_map!r})",
+                hint="the state layout changed since the benchmark was "
+                     "recorded — re-run benchmarks/rank_policy.py or fix "
+                     "the regression",
+                detail={"static": static, "recorded": recorded},
+            ))
+    return out

@@ -59,6 +59,7 @@ from .combinators import (
     ProjGrad,
     add_decayed_weights,
     chain,
+    chain_info,
     find_lowrank_states,
     layerwise_unbias,
     lowrank,
@@ -105,7 +106,8 @@ __all__ = [
     "OptimizerConfig", "PendingBack", "ProjGrad", "RankMap", "RankPolicy",
     "RankPolicyController", "StackSeg", "Transform",
     "adamw", "add_decayed_weights", "apply_updates", "build_family_plan",
-    "build_optimizer", "chain", "clip_by_global_norm", "constant",
+    "build_optimizer", "chain", "chain_info", "clip_by_global_norm",
+    "constant",
     "default_lowrank_filter", "find_lowrank_states", "fira", "fira_matrices",
     "galore", "galore_matrices", "gather_probes", "global_norm", "golore",
     "grass_projector",

@@ -108,6 +108,17 @@ def multi_transform(
         merged = unmask_merge(upds, labels)
         return merged, MultiState(inner=new_inner)
 
+    # Static composition metadata for the analysis layer (repro.analysis):
+    # per-branch chain_info plus the label_fn itself, so the chain linter /
+    # launch model can resolve the actual leaf routing from a params tree.
+    update.chain_info = {
+        "kind": "multi_transform",
+        "branches": {
+            k: dict(getattr(t.update, "chain_info", None) or {"kind": "opaque"})
+            for k, t in transforms.items()
+        },
+        "label_fn": label_fn,
+    }
     return Transform(init, update)
 
 

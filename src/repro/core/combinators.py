@@ -428,6 +428,20 @@ def _transpose(flat: PyTree, n: int) -> tuple:
 # ---------------------------------------------------------------------------
 
 
+def chain_info(t: Transform) -> dict:
+    """Static composition metadata for a combinator-built transform.
+
+    Every combinator in this module attaches a ``chain_info`` dict to its
+    update function — ``{"kind": <combinator name>, ...}``, nesting through
+    ``stages`` (chain), ``inner`` (lowrank / layerwise_unbias /
+    with_fira_residual) and ``branches`` (multi_transform) — so the static
+    analyzer (:mod:`repro.analysis`) can walk the composition without
+    executing anything.  Transforms built outside this module read as
+    ``{"kind": "opaque"}`` and are treated as unmodelable."""
+    info = getattr(t.update, "chain_info", None) if t is not None else None
+    return dict(info) if info else {"kind": "opaque"}
+
+
 def chain(*transforms: Transform) -> Transform:
     """Sequentially compose gradient transforms (optax semantics): each
     transform maps (updates, state, params) -> (updates, state); state is the
@@ -459,6 +473,9 @@ def chain(*transforms: Transform) -> Transform:
 
         update.refresh_state = refresh_state
 
+    update.chain_info = {
+        "kind": "chain", "stages": [chain_info(t) for t in transforms],
+    }
     return Transform(init, update)
 
 
@@ -497,6 +514,7 @@ def scale_by_momentum(beta: float = 0.9, use_muon_scale: bool = False) -> Transf
         out, new_mu = _transpose(flat, 2)
         return out, new_mu
 
+    update.chain_info = {"kind": "scale_by_momentum", "beta": beta}
     return Transform(init, update)
 
 
@@ -547,6 +565,8 @@ def scale_by_muon(
         out, new_mu = _transpose(flat, 2)
         return out, new_mu
 
+    update.chain_info = {"kind": "scale_by_muon", "beta": beta,
+                         "ns_steps": ns_steps, "nesterov": nesterov}
     return Transform(init, update)
 
 
@@ -607,6 +627,7 @@ def scale_by_adam(
         out, mu, nu = _transpose(flat, 3)
         return out, ScaleByAdamState(count=count, mu=mu, nu=nu)
 
+    update.chain_info = {"kind": "scale_by_adam", "scale": scale}
     return Transform(init, update)
 
 
@@ -630,6 +651,8 @@ def add_decayed_weights(weight_decay: float = 0.0) -> Transform:
         out = jax.tree_util.tree_map(one, updates, params, is_leaf=_IS_NONE)
         return out, ()
 
+    update.chain_info = {"kind": "add_decayed_weights",
+                         "weight_decay": weight_decay}
     return Transform(init, update)
 
 
@@ -661,6 +684,7 @@ def scale_by_lr(lr: Schedule) -> Transform:
         out = materialize_pending(out)
         return out, ScaleByLrState(count=count)
 
+    update.chain_info = {"kind": "scale_by_lr"}
     return Transform(init, update)
 
 
@@ -687,6 +711,7 @@ def scale_by_factor(factor: float) -> Transform:
         out = jax.tree_util.tree_map(one, updates, is_leaf=_IS_NONE)
         return out, ()
 
+    update.chain_info = {"kind": "scale_by_factor", "factor": factor}
     return Transform(init, update)
 
 
@@ -700,6 +725,7 @@ def clip_by_global_norm(max_norm: float) -> Transform:
     def update(updates: PyTree, state, params: PyTree):
         return _clip_tree(materialize_pending(updates), max_norm), ()
 
+    update.chain_info = {"kind": "clip_by_global_norm"}
     return Transform(init, update)
 
 
@@ -1182,10 +1208,20 @@ def lowrank(
                     if probe_spectrum else None),
         )
 
+    info = {
+        "kind": "lowrank", "inner": chain_info(inner), "rank": rank,
+        "period": period, "projector": projector,
+        "kernel_impl": kernel_impl, "pad_rank_to": pad_rank_to,
+        "fuse_families": fuse_families, "fused_epilogue": fused_epilogue,
+        "external_refresh": external_refresh, "rank_policy": rank_policy,
+        "probe_spectrum": probe_spectrum,
+    }
     if fuse_families:
         update_fused.refresh = refresh_fused
+        update_fused.chain_info = info
         return Transform(init_fused, update_fused)
     update.refresh = refresh
+    update.chain_info = info
     return Transform(init, update)
 
 
@@ -1429,6 +1465,8 @@ def layerwise_unbias(
     update.wants_sample_key = True
     update.wants_params = True
     update.refresh_state = refresh_state
+    update.chain_info = {"kind": "layerwise_unbias", "inner": chain_info(base),
+                         "gamma": gamma, "compensation": compensation}
     return Transform(init, update)
 
 
@@ -1523,6 +1561,8 @@ def with_fira_residual(
 
     if getattr(base.update, "wants_params", False):
         update.wants_params = True
+    update.chain_info = {"kind": "with_fira_residual",
+                         "inner": chain_info(base)}
     return Transform(init, update)
 
 

@@ -51,12 +51,33 @@ def _fusion_kw(cfg: OptimizerConfig) -> dict:
 
 
 def build_optimizer(
-    cfg: OptimizerConfig, rank_map: Optional[RankMap] = None
+    cfg: OptimizerConfig, rank_map: Optional[RankMap] = None,
+    *, audit: bool = False,
 ) -> Transform:
     """``rank_map`` overrides the rank assignment for this build — the
     :class:`~repro.core.rank_policy.RankPolicyController` re-entry point
     (``lambda m: build_optimizer(cfg, rank_map=m)``).  Without it the rank
-    is ``cfg.rank`` (or the policy's initial map when one is configured)."""
+    is ``cfg.rank`` (or the policy's initial map when one is configured).
+
+    ``audit=True`` runs the static chain linter
+    (:func:`repro.analysis.chain_lint.lint_chain`) on the composed chain and
+    raises :class:`repro.analysis.chain_lint.ChainLintError` on any
+    error-severity finding — malformed compositions fail at build time with
+    a lint code and fix-it hint instead of a TypeError mid-step."""
+    transform = _compose(cfg, rank_map)
+    if audit:
+        # Lazy import: repro.analysis sits on top of this module.
+        from repro.analysis.chain_lint import ChainLintError, lint_chain
+
+        findings = lint_chain(transform, ladder=cfg.rank_ladder,
+                              name=cfg.name.lower())
+        errors = [f for f in findings if f.severity == "error"]
+        if errors:
+            raise ChainLintError(errors)
+    return transform
+
+
+def _compose(cfg: OptimizerConfig, rank_map: Optional[RankMap]) -> Transform:
     name = cfg.name.lower()
     policy = resolve_rank_policy(cfg)
     rank = rank_map if rank_map is not None else cfg.rank

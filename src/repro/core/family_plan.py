@@ -96,6 +96,22 @@ def build_family_plan(leaves, rank) -> FamilyPlan:
     return FamilyPlan(families=tuple(families), n_leaves=len(leaves))
 
 
+def plan_stats(plan: FamilyPlan) -> dict:
+    """Static geometry summary of a plan, JSON-serializable — consumed by the
+    analysis layer's audit summary so a one-line startup log can show how the
+    routed leaves collapse into launch units."""
+    return {
+        "n_families": len(plan.families),
+        "n_leaves": plan.n_leaves,
+        "n_stacked": sum(f.seg.members for f in plan.families),
+        "families": [
+            f"{f.member_fs.m}x{f.member_fs.n}r{f.member_fs.rank}"
+            f"x{f.seg.members}"
+            for f in plan.families
+        ],
+    }
+
+
 def stack_family(fam: Family, leaves: list) -> jax.Array:
     """Stack member leaves ``(*lead, a, b)`` -> ``(members*member_L, a, b)``.
     Row-major, so member ``j``'s blocks occupy rows

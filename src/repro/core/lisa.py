@@ -88,4 +88,7 @@ def lisa(
         )
         return updates, LISAState(count=count, inner=inner, masks=masks)
 
+    update.chain_info = {"kind": "lisa", "gamma": gamma, "period": period,
+                         "inner": dict(getattr(base.update, "chain_info",
+                                               None) or {"kind": "opaque"})}
     return Transform(init, update)

@@ -267,7 +267,16 @@ class spectral(RankPolicy):
 
     ``probe_every`` rate-limits *decisions* to every that-many steps
     (probes themselves ride the refresh for free); None decides at every
-    refresh boundary."""
+    refresh boundary.
+
+    Grow/shrink hysteresis: a starvation grow means the just-probed rank was
+    too small to even *measure* the target energy — so the very next probe
+    at the grown rank, which typically reports the target met within the old
+    rank, must not immediately shrink back (the 4↔8 oscillation).  Growing
+    therefore sets a per-family rank *floor* at the grown rank; shrink
+    decisions clamp to the floor until it expires ``floor_ttl`` decisions
+    later (long enough for the spectrum estimate at the grown rank to be
+    trustworthy, finite so genuine rank decay can still win)."""
 
     wants_probes = True
 
@@ -279,6 +288,7 @@ class spectral(RankPolicy):
         r_max: int = 256,
         ladder: Optional[tuple[int, ...]] = None,
         init_rank: Optional[int] = None,
+        floor_ttl: int = 8,
     ):
         if not 0.0 < target_energy <= 1.0:
             raise ValueError(f"target_energy must be in (0, 1]: {target_energy}")
@@ -291,6 +301,7 @@ class spectral(RankPolicy):
         if not self._ladder:
             raise ValueError(f"empty ladder within [{r_min}, {r_max}]: {lad}")
         self.init_rank = init_rank
+        self.floor_ttl = int(floor_ttl)
 
     def ladder(self) -> tuple[int, ...]:
         return self._ladder
@@ -307,7 +318,10 @@ class spectral(RankPolicy):
         return RankMap(self._snap(min(max(r0, self.r_min), self.r_max)))
 
     def init_state(self) -> dict:
-        return {"last_decision_step": None}
+        # "floors": {"MxN": [floor_rank, expires_at_decision]} — the
+        # starvation-grow hysteresis state (JSON-serializable for
+        # checkpoint extras).
+        return {"last_decision_step": None, "decisions": 0, "floors": {}}
 
     def decide(self, pstate, step, probes, current):
         last = pstate.get("last_decision_step")
@@ -318,6 +332,11 @@ class spectral(RankPolicy):
             return pstate, None
         new = dict(pstate)
         new["last_decision_step"] = int(step)
+        decisions = int(pstate.get("decisions", 0)) + 1
+        new["decisions"] = decisions
+        floors = {k: [int(v[0]), int(v[1])]
+                  for k, v in dict(pstate.get("floors", {})).items()
+                  if int(v[1]) > decisions}
         new_map = current
         for (m, n), pr in sorted(probes.items()):
             g2 = float(pr["g2"])
@@ -325,17 +344,26 @@ class spectral(RankPolicy):
             cur = int(pr["rank"])
             if g2 <= 0.0 or sv2.size == 0:
                 continue
+            key = f"{m}x{n}"
             energy = np.cumsum(sv2) / g2
             hit = np.nonzero(energy >= self.target_energy)[0]
             if hit.size:
                 r_new = self._snap(int(hit[0]) + 1)
+                if key in floors:
+                    # A recent starvation grow owns this family: the
+                    # shrink estimate comes from the same kind of probe
+                    # that was just proven too small — hold the floor.
+                    r_new = max(r_new, floors[key][0])
             else:
                 # Even the full probed rank misses the target: grow one
-                # ladder step above the current rank (bounded by r_max).
+                # ladder step above the current rank (bounded by r_max)
+                # and floor the family there for floor_ttl decisions.
                 above = [v for v in self._ladder if v > cur]
                 r_new = above[0] if above else self._ladder[-1]
+                floors[key] = [r_new, decisions + self.floor_ttl]
             # Never emit more rank than the family can hold.
             new_map = new_map.with_override(m, n, min(r_new, m, n))
+        new["floors"] = floors
         return new, new_map
 
     def __repr__(self) -> str:

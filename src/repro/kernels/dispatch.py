@@ -429,6 +429,13 @@ REGISTRY: dict[str, KernelEntry] = {}
 
 
 def register(entry: KernelEntry) -> KernelEntry:
+    if entry.name not in launch_count.DISPATCH_OPS:
+        raise ValueError(
+            f"kernel name {entry.name!r} is not in launch_count.DISPATCH_OPS "
+            f"{launch_count.DISPATCH_OPS} — the closed-form launch model "
+            "(repro.analysis.launch_model) requires the vocabulary to be "
+            "closed; extend DISPATCH_OPS first"
+        )
     REGISTRY[entry.name] = entry
     return entry
 
@@ -446,6 +453,12 @@ register(KernelEntry(
     name="lowrank_update",
     fn=lowrank_update,
     reference=ref.lowrank_update_ref,
+    supported=lowrank_update_supported,
+))
+register(KernelEntry(
+    name="project",
+    fn=project,
+    reference=lambda p, g, *, side="left": _project_jnp(p, g, side),
     supported=lowrank_update_supported,
 ))
 register(KernelEntry(

@@ -15,6 +15,12 @@ Usage::
         jax.eval_shape(lambda: opt.update(grads, state, params))
     # counts == {"lowrank_update": 3, "newton_schulz": 3, ...}
 
+:func:`assert_launches` upgrades the counter to a trace-time *assertion*:
+the static-analysis layer (``repro.analysis``) computes the closed-form
+expected counts from the optimizer's chain composition and
+:class:`~repro.core.family_plan.FamilyPlan`, and a mismatch raises
+:class:`LaunchCountMismatch` before a single real step runs.
+
 Deliberately dependency-free itself (no jax import); :mod:`repro.core`
 callers lazy-import it inside function bodies because the kernels package's
 module-load imports run the other way (kernels.newton_schulz pulls
@@ -24,6 +30,17 @@ from __future__ import annotations
 
 import contextlib
 from typing import Iterator
+
+# Every op name the dispatch layer may record — the closed vocabulary the
+# closed-form launch model (repro.analysis.launch_model) and the assertion
+# below validate against.
+DISPATCH_OPS = (
+    "lowrank_update",
+    "project",
+    "back_project",
+    "back_project_epilogue",
+    "newton_schulz",
+)
 
 _ACTIVE: list[dict[str, int]] = []
 
@@ -42,3 +59,51 @@ def count_launches() -> Iterator[dict[str, int]]:
         yield counts
     finally:
         _ACTIVE.remove(counts)
+
+
+class LaunchCountMismatch(AssertionError):
+    """Traced launch counts diverged from the closed-form expectation."""
+
+    def __init__(self, expected: dict[str, int], actual: dict[str, int]):
+        self.expected = dict(expected)
+        self.actual = dict(actual)
+        diff = []
+        for op in sorted(set(expected) | set(actual)):
+            e, a = expected.get(op, 0), actual.get(op, 0)
+            if e != a:
+                diff.append(f"{op}: expected {e}, traced {a}")
+        super().__init__(
+            "kernel-launch count mismatch — " + "; ".join(diff)
+            + f" (expected {format_counts(expected)},"
+            + f" traced {format_counts(actual)})"
+        )
+
+
+def format_counts(counts: dict[str, int]) -> str:
+    """Stable one-line rendering: ``total [op=n, ...]`` in op order."""
+    total = sum(counts.values())
+    parts = [f"{op}={counts[op]}" for op in DISPATCH_OPS if counts.get(op)]
+    parts += [f"{op}={n}" for op, n in sorted(counts.items())
+              if op not in DISPATCH_OPS]
+    return f"{total} [{', '.join(parts)}]"
+
+
+@contextlib.contextmanager
+def assert_launches(expected: dict[str, int]) -> Iterator[dict[str, int]]:
+    """Count launches over the body and raise :class:`LaunchCountMismatch`
+    unless they equal ``expected`` exactly (ops absent from ``expected``
+    must not appear at all).  Run the body under ``jax.eval_shape`` /
+    ``jax.make_jaxpr`` for a pure trace-time check — no math executes::
+
+        with assert_launches({"project": 3, "back_project": 3}):
+            jax.eval_shape(lambda: opt.update(grads, state, params))
+    """
+    for op in expected:
+        if op not in DISPATCH_OPS:
+            raise ValueError(f"unknown dispatch op in expectation: {op!r} "
+                             f"(known: {DISPATCH_OPS})")
+    with count_launches() as counts:
+        yield counts
+    clean = {op: n for op, n in expected.items() if n}
+    if counts != clean:
+        raise LaunchCountMismatch(clean, counts)

@@ -87,7 +87,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
              lowrank_accum: bool = False, kernel_impl: str = "auto",
              pad_rank_to: int = 0, fuse_families: bool = False,
              fused_epilogue: bool = False, rank_policy: str | None = None,
-             rank_ladder: tuple[int, ...] = ()):
+             rank_ladder: tuple[int, ...] = (), audit: bool = False):
     cfg = get_config(arch)
     if overrides:
         cfg = cfg.replace(**overrides)
@@ -137,6 +137,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
                 opt = tools.transform
             else:
                 opt = build_optimizer(ocfg)
+            if audit:
+                # Full static audit of this cell's optimizer over the real
+                # model's param structs (chain lint, launch model vs traced
+                # dispatch counts, dtype flow, recompile hazards) — abstract
+                # tracing only, before the expensive XLA compile below.
+                from repro.analysis import audit_optimizer
+
+                report = audit_optimizer(ocfg, params_struct,
+                                         ladder=ocfg.rank_ladder)
+                result["audit"] = report.to_json()
+                print("  " + report.format().replace("\n", "\n  "),
+                      flush=True)
             opt_struct = jax.eval_shape(opt.init, params_struct)
             opt_sh = opt_state_sharding(opt_struct, mesh)
             batch = batch_struct(cfg, shape)
@@ -240,6 +252,10 @@ def main():
     ap.add_argument("--rank-ladder", default="",
                     help="comma-separated ladder for adaptive policies, "
                          "e.g. 32,64,128")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the repro.analysis static audit on each train "
+                         "cell's optimizer (findings land in the result "
+                         "JSON under 'audit')")
     ap.add_argument(
         "--set", action="append", default=[],
         help="ModelConfig overrides, e.g. --set attn_impl=xla_chunked "
@@ -294,7 +310,8 @@ def main():
                                rank_policy=args.rank_policy,
                                rank_ladder=tuple(
                                    int(r) for r in args.rank_ladder.split(",")
-                                   if r))
+                                   if r),
+                               audit=args.audit)
                 res["overrides"] = overrides
                 res["tag"] = args.tag
             except Exception as e:  # record failures — they are bugs to fix

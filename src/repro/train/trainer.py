@@ -166,6 +166,18 @@ class Trainer:
                 self.rank_ctrl.load_state_dict(extra["rank_policy"])
                 self._set_optimizer(self.rank_ctrl.transform())
         params, opt_state = self.init_state()
+        try:
+            # One-line static audit of the step we are about to jit:
+            # launches/step, projected-state bytes, abstract signature hash.
+            # Purely abstract (trace only) and best-effort — a failure here
+            # must never block training.
+            from repro.analysis import audit_summary
+
+            print(audit_summary(self.optimizer, params,
+                                name=self.opt_cfg.name), flush=True)
+        except Exception as e:  # pragma: no cover - diagnostics only
+            print(f"audit[{self.opt_cfg.name}]: unavailable "
+                  f"({type(e).__name__}: {e})", flush=True)
         if latest is not None:
             (params, opt_state), _ = self.ckpt.restore(
                 latest, (params, opt_state)

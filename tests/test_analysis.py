@@ -1,0 +1,364 @@
+"""Static-analysis subsystem (PR 6): lint codes, launch model, jaxpr passes.
+
+Three layers of guarantees:
+
+  1. the full audit pass matrix — every factory optimizer across
+     fuse_families x fused_epilogue — is clean, with the closed-form launch
+     model agreeing with the dispatch layer's trace-time counts (9/step for
+     fused GUM on the 3-family reference tree);
+  2. every lint code has a failing case: a deliberately malformed chain /
+     program is caught with the right code and an actionable message;
+  3. the integration points work: ``build_optimizer(audit=True)`` raises at
+     build time, ``assert_launches`` raises at trace time, the memory
+     accountant agrees with the committed benchmark numbers.
+"""
+import itertools
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as core
+from repro.analysis import (
+    ChainLintError,
+    audit_optimizer,
+    audit_summary,
+    dtype_flow_findings,
+    expected_launches,
+    lint_chain,
+    memory_crosscheck,
+    recompile_findings,
+    run_matrix,
+    trace_update,
+)
+from repro.analysis.audit import default_params, launch_findings
+from repro.core import OptimizerConfig, Transform, build_optimizer
+from repro.core import combinators as C
+from repro.kernels import launch_count
+
+PARAMS = default_params()
+
+
+def codes(findings):
+    return {f.code for f in findings}
+
+
+def _msg(findings, code):
+    return next(f.message for f in findings if f.code == code)
+
+
+# ------------------------------------------------------------ pass matrix
+
+
+def test_audit_matrix_all_clean():
+    """Acceptance: every factory optimizer x fuse_families x fused_epilogue
+    audits clean — chain lint, launch model vs traced dispatch counts,
+    dtype flow, signature stability across the rank ladder."""
+    reports = run_matrix(PARAMS)
+    dirty = {k: [f.format() for f in r.errors]
+             for k, r in reports.items() if not r.ok}
+    assert not dirty, dirty
+    # 6 lowrank optimizers x 4 fuse combos + 4 full-rank baselines
+    assert len(reports) == 28
+
+
+@pytest.mark.parametrize("opt,epi,want", [
+    ("gum", False, {"project": 3, "newton_schulz": 3, "back_project": 3}),
+    ("gum", True, {"project": 3, "newton_schulz": 3, "back_project": 3}),
+    ("galore_muon", True, {"lowrank_update": 3, "newton_schulz": 3,
+                           "back_project_epilogue": 3}),
+    ("golore", True, {"lowrank_update": 3, "newton_schulz": 3,
+                      "back_project_epilogue": 3}),  # default base=muon
+], ids=["gum", "gum_epilogue", "galore_muon_epilogue", "golore_epilogue"])
+def test_static_launches_match_traced_on_family_tree(opt, epi, want):
+    """The closed-form expectation equals the dispatch layer's trace-time
+    count on the 3-family reference tree — one launch set per family (GUM:
+    9/step; the unbias emits FullUpdates so its epilogue stays unfused)."""
+    cfg = OptimizerConfig(name=opt, rank=8, period=5, gamma=1,
+                          kernel_impl="jnp", fuse_families=True,
+                          fused_epilogue=epi)
+    t = build_optimizer(cfg)
+    expected, model_findings = expected_launches(t, PARAMS)
+    assert not model_findings
+    assert expected == want
+    state = jax.eval_shape(t.init, PARAMS)
+    with launch_count.assert_launches(expected):
+        jax.make_jaxpr(lambda g, s, p: t.update(g, s, p))(
+            PARAMS, state, PARAMS)
+
+
+def test_assert_launches_raises_on_mismatch():
+    cfg = OptimizerConfig(name="galore", rank=8, period=5,
+                          kernel_impl="jnp", fuse_families=True)
+    t = build_optimizer(cfg)
+    state = jax.eval_shape(t.init, PARAMS)
+    with pytest.raises(launch_count.LaunchCountMismatch, match="project"):
+        with launch_count.assert_launches({"project": 999,
+                                           "back_project": 3}):
+            jax.make_jaxpr(lambda g, s, p: t.update(g, s, p))(
+                PARAMS, state, PARAMS)
+    with pytest.raises(ValueError, match="unknown dispatch op"):
+        with launch_count.assert_launches({"warp_drive": 1}):
+            pass
+
+
+# ------------------------------------------------- chain linter (RC1xx)
+
+
+def test_rc101_nested_lowrank():
+    t = C.chain(
+        C.lowrank(C.lowrank(C.scale_by_momentum(0.9), rank=4, period=2),
+                  rank=8, period=2),
+        C.scale_by_lr(1e-2),
+    )
+    fs = lint_chain(t)
+    assert "RC101" in codes(fs)
+    assert "nested" in _msg(fs, "RC101")
+
+
+def test_rc102_unbias_outside_lowrank():
+    t = C.chain(C.layerwise_unbias(C.scale_by_momentum(0.9), gamma=1),
+                C.scale_by_lr(1e-2))
+    fs = lint_chain(t)
+    assert "RC102" in codes(fs)
+    assert "lowrank" in _msg(fs, "RC102")
+
+
+def test_rc103_scale_by_lr_not_terminal():
+    t = C.chain(C.scale_by_lr(1e-2), C.scale_by_momentum(0.9))
+    fs = lint_chain(t)
+    assert "RC103" in codes(fs)
+    assert any(f.code == "RC103" and f.severity == "error" for f in fs)
+    # ... and inside lowrank() is also an error
+    t2 = C.chain(
+        C.lowrank(C.chain(C.scale_by_momentum(0.9), C.scale_by_lr(1e-2)),
+                  rank=4, period=2),
+        C.scale_by_lr(1e-2),
+    )
+    assert "RC103" in codes(lint_chain(t2))
+    # missing entirely (with a lowrank stage) is only a warning
+    t3 = C.chain(C.lowrank(C.scale_by_momentum(0.9), rank=4, period=2))
+    fs3 = lint_chain(t3)
+    assert any(f.code == "RC103" and f.severity == "warning" for f in fs3)
+    assert not any(f.severity == "error" for f in fs3)
+
+
+def test_rc104_non_monotone_ladder():
+    t = C.chain(C.lowrank(C.scale_by_momentum(0.9), rank=16, period=2),
+                C.scale_by_lr(1e-2))
+    fs = lint_chain(t, ladder=(16, 8, 16))
+    assert "RC104" in codes(fs)
+    assert "strictly increasing" in _msg(fs, "RC104")
+
+
+def test_rc105_initial_rank_off_ladder():
+    t = C.chain(C.lowrank(C.scale_by_momentum(0.9), rank=5, period=2),
+                C.scale_by_lr(1e-2))
+    fs = lint_chain(t, ladder=(8, 16))
+    assert "RC105" in codes(fs)
+    assert "[5]" in _msg(fs, "RC105")
+    # on-ladder initial rank is clean
+    t2 = C.chain(C.lowrank(C.scale_by_momentum(0.9), rank=8, period=2),
+                 C.scale_by_lr(1e-2))
+    assert "RC105" not in codes(lint_chain(t2, ladder=(8, 16)))
+
+
+def test_rc106_unaligned_pad_rank():
+    t = C.chain(
+        C.lowrank(C.scale_by_momentum(0.9), rank=4, period=2,
+                  pad_rank_to=96),
+        C.scale_by_lr(1e-2),
+    )
+    fs = lint_chain(t)
+    assert "RC106" in codes(fs)
+    assert "128" in _msg(fs, "RC106")  # the fix-it suggests the lane width
+
+
+def test_build_optimizer_audit_raises():
+    """audit=True turns lint errors into a build-time ChainLintError."""
+    cfg = OptimizerConfig(name="gum", rank=5, period=5, gamma=1,
+                          kernel_impl="jnp", rank_ladder=(8, 16))
+    with pytest.raises(ChainLintError, match="RC105"):
+        build_optimizer(cfg, audit=True)
+    # the same config without the off-ladder rank builds fine
+    build_optimizer(OptimizerConfig(name="gum", rank=8, period=5, gamma=1,
+                                    kernel_impl="jnp", rank_ladder=(8, 16)),
+                    audit=True)
+
+
+# ------------------------------------------- dtype-flow auditor (RA2xx)
+
+
+def _elementwise_transform(fn):
+    return Transform(
+        lambda p: (),
+        lambda g, s, p: (jax.tree_util.tree_map(fn, g), s),
+    )
+
+
+def test_ra201_f64_leak():
+    t = _elementwise_transform(lambda x: x.astype(jnp.float64))
+    with jax.experimental.enable_x64():
+        params = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+        jaxpr, _ = trace_update(t, params)
+        fs = dtype_flow_findings(jaxpr)
+    assert "RA201" in codes(fs)
+    assert "f64" in _msg(fs, "RA201")
+
+
+def test_ra202_bf16_roundtrip():
+    t = _elementwise_transform(
+        lambda x: x.astype(jnp.bfloat16).astype(jnp.float32) * 2.0)
+    jaxpr, _ = trace_update(t, PARAMS)
+    fs = dtype_flow_findings(jaxpr)
+    assert "RA202" in codes(fs)
+    # the allowlist knob suppresses it
+    assert "RA202" not in codes(
+        dtype_flow_findings(jaxpr, allow_bf16_roundtrip=True))
+
+
+def test_dtype_flow_clean_on_factory_step():
+    t = build_optimizer(OptimizerConfig(name="gum", rank=8, period=5,
+                                        gamma=1, kernel_impl="jnp"))
+    jaxpr, _ = trace_update(t, PARAMS)
+    assert not dtype_flow_findings(jaxpr)
+
+
+# ---------------------------------------- launch/fusion auditor (RA3xx)
+
+
+def test_ra301_launch_divergence():
+    fs = launch_findings({"project": 3, "back_project": 3},
+                         {"project": 8, "back_project": 3},
+                         fused_epilogue=False, where="x")
+    assert codes(fs) == {"RA301"}
+    assert "expected 3, traced 8" in _msg(fs, "RA301")
+
+
+def test_ra302_stray_back_projection():
+    fs = launch_findings(
+        {"lowrank_update": 3, "back_project_epilogue": 3},
+        {"lowrank_update": 3, "back_project": 3},
+        fused_epilogue=True, where="x")
+    assert codes(fs) == {"RA302"}
+    assert "back_project" in _msg(fs, "RA302")
+
+
+def test_ra303_unmodelable_stage():
+    opaque = Transform(lambda p: (), lambda g, s, p: (g, s))
+    t = C.chain(C.lowrank(opaque, rank=4, period=2), C.scale_by_lr(1e-2))
+    _, fs = expected_launches(t, PARAMS)
+    assert "RA303" in codes(fs)
+
+
+# --------------------------------- recompilation-hazard detector (RA4xx)
+
+
+def test_ra401_unstable_signature():
+    counter = itertools.count(1)
+    t = _elementwise_transform(lambda x: x * float(next(counter)))
+    fs, _ = recompile_findings(lambda r: t, PARAMS, [4])
+    assert "RA401" in codes(fs)
+
+
+def test_ra402_weak_scalar_capture():
+    weak = jnp.asarray(0.5)  # weak-typed 0-d closure capture
+    t = _elementwise_transform(lambda x: x * weak)
+    fs, _ = recompile_findings(lambda r: t, PARAMS, [4])
+    assert "RA402" in codes(fs)
+    assert all(f.severity == "warning" for f in fs if f.code == "RA402")
+
+
+def test_signature_stable_per_rank_for_factory():
+    cfg = OptimizerConfig(name="galore", rank=8, period=5,
+                          kernel_impl="jnp", rank_ladder=(4, 8))
+    from repro.core.rank_policy import RankMap
+
+    fs, hashes = recompile_findings(
+        lambda r: build_optimizer(cfg, rank_map=RankMap(r)), PARAMS, (4, 8))
+    assert not [f for f in fs if f.severity == "error"]
+    # ranks recompile (different shapes) but each rank's trace is stable
+    assert len(set(hashes.values())) == 2
+
+
+# ----------------------------------- static memory accountant (RA5xx)
+
+
+def test_memory_crosscheck_matches_committed_bench():
+    """The eval_shape accountant reproduces the committed runtime
+    proj_bytes_final for every rank-policy cell exactly."""
+    assert memory_crosscheck() == []
+
+
+def test_ra501_on_doctored_bench(tmp_path):
+    real = json.loads(
+        open("results/BENCH_rank_policy.json").read())
+    real["results"]["fixed16"]["proj_bytes_final"] += 1
+    doctored = tmp_path / "BENCH_rank_policy.json"
+    doctored.write_text(json.dumps(real))
+    fs = memory_crosscheck(doctored)
+    assert "RA501" in codes(fs)
+    assert any(f.code == "RA501" and "fixed16" in f.where for f in fs)
+    assert "303137" in _msg(fs, "RA501")
+
+
+# --------------------------------------------------------- integration
+
+
+def test_audit_summary_one_liner():
+    t = build_optimizer(OptimizerConfig(name="gum", rank=8, period=5,
+                                        gamma=1, kernel_impl="jnp",
+                                        fuse_families=True))
+    line = audit_summary(t, PARAMS, name="gum")
+    assert "launches/step=9" in line
+    assert "proj_state=" in line and "sig=" in line
+    assert "\n" not in line
+
+
+def test_audit_report_roundtrip():
+    cfg = OptimizerConfig(name="golore", rank=8, period=5,
+                          kernel_impl="jnp", fuse_families=True,
+                          fused_epilogue=True, rank_ladder=(4, 8))
+    rep = audit_optimizer(cfg, PARAMS, ladder=(4, 8))
+    assert rep.ok, [f.format() for f in rep.errors]
+    d = rep.to_json()
+    assert d["ok"] and d["summary"]["launches_per_step"] == 9
+    assert "back_project_epilogue" in d["summary"]["launch_counts"]
+
+
+def test_lowrank_plan_stats_geometry():
+    from repro.analysis import lowrank_plan_stats
+    t = build_optimizer(OptimizerConfig(name="gum", rank=8, period=5,
+                                        gamma=1, kernel_impl="jnp",
+                                        fuse_families=True))
+    stats = lowrank_plan_stats(t, PARAMS, name="gum")
+    assert len(stats) == 1
+    (s,) = stats
+    assert s["fused"] and s["n_families"] == 3 and s["n_stacked"] == 8
+    assert sorted(s["families"]) == ["128x64r8x2", "64x128r8x2", "64x64r8x4"]
+
+
+def test_launch_model_counts_both_unbias_branches_when_q_lt_1():
+    """Leaves with lead blocks (q = gamma/L < 1) trace BOTH layerwise_unbias
+    branches — the compensated sample AND the plain low-rank path — and the
+    closed-form model must count both (caught live on llama-60m-smoke)."""
+    lead_params = {
+        # L = 3 blocks per leaf, gamma = 1 -> q = 1/3 < 1
+        "blocks/wq": jax.ShapeDtypeStruct((3, 64, 64), jnp.float32),
+        "blocks/wo": jax.ShapeDtypeStruct((3, 64, 64), jnp.float32),
+        "norm/scale": jax.ShapeDtypeStruct((64,), jnp.float32),
+    }
+    cfg = OptimizerConfig(name="gum", rank=8, period=5, gamma=1,
+                          kernel_impl="jnp")
+    t = build_optimizer(cfg)
+    expected, findings = expected_launches(t, lead_params, name="gum")
+    assert findings == []
+    # per leaf: unbias sample (project, newton_schulz, back_project) + plain
+    # muon low branch (lowrank_update, newton_schulz, back_project)
+    assert expected == {"project": 2, "lowrank_update": 2,
+                       "newton_schulz": 4, "back_project": 4}
+    state = jax.eval_shape(t.init, lead_params)
+    with launch_count.assert_launches(expected):
+        jax.make_jaxpr(lambda g, s, w: t.update(g, s, w))(
+            lead_params, state, lead_params)

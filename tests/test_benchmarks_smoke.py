@@ -27,10 +27,15 @@ def test_run_py_smoke_executes_all_suites(tmp_path):
     # every registered suite announced itself (run.py prints to stderr)
     for suite in ("synthetic_counterexample", "memory_table", "pretrain_proxy",
                   "bias_residual", "stable_rank", "roofline_report",
-                  "optimizer_api", "fused_step"):
+                  "optimizer_api", "fused_step", "rank_policy",
+                  "audit_matrix"):
         assert f"# --- {suite} ---" in res.stderr, suite
-    # the new suite produced its rows, including launch counts
+    # the fused-step suite produced its rows, including launch counts
     assert "fusedstep_gum_stacked" in out
     assert "launches=" in out
+    # the audit-matrix suite audited its smoke cells clean
+    assert "audit_gum," in out and ",clean" in out
+    # registered suites all have their result JSONs committed
+    assert "WARNING: suite" not in res.stderr
     # no result JSONs written in smoke mode (cwd is a scratch dir anyway)
     assert "# wrote" not in out

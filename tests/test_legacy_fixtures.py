@@ -1,0 +1,149 @@
+"""Frozen-monolith equivalence baselines as committed fixtures.
+
+``tests/test_combinators.py`` proves the combinator chains match
+``repro.core.legacy`` by running both *live*.  That guard dies with
+``legacy.py`` — and legacy is scheduled to be deleted once nothing imports
+it.  This module freezes the monoliths' trajectories (per-step quadratic
+losses + final param norm, jnp path, 8 steps on the shared routing tree)
+into ``tests/data/legacy_trajectories.json`` and asserts:
+
+  1. the combinator-built optimizers reproduce the *recorded* trajectories
+     (the guard that survives legacy's deletion), and
+  2. while legacy still exists, it matches its own recording (fixture
+     staleness check).
+
+Regenerate after a deliberate trajectory change::
+
+    PYTHONPATH=src python tests/test_legacy_fixtures.py --regen
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import apply_updates, global_norm, legacy
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "data", "legacy_trajectories.json")
+KEY = jax.random.PRNGKey(0)
+STEPS = 8
+
+PARAMS = {
+    "blocks": {
+        "wq": jax.random.normal(KEY, (3, 16, 24)) * 0.1,
+        "w_out": jax.random.normal(jax.random.fold_in(KEY, 1), (3, 24, 16)) * 0.1,
+    },
+    "embed": jax.random.normal(jax.random.fold_in(KEY, 2), (64, 16)) * 0.1,
+    "norm_scale": jnp.ones((16,)),
+}
+
+
+def builder_specs():
+    """(name, core builder, legacy builder) — the PR-2 equivalence matrix,
+    jnp path (the legacy monoliths' only fully shared impl)."""
+    kw = dict(kernel_impl="jnp")
+    return [
+        ("gum",
+         lambda: core.gum(1e-2, rank=4, gamma=1, period=3, seed=5,
+                          weight_decay=0.01, **kw),
+         lambda: legacy.gum(1e-2, rank=4, gamma=1, period=3, seed=5,
+                            weight_decay=0.01, **kw)),
+        ("gum_finetune_sgdm",
+         lambda: core.gum(1e-2, rank=4, gamma=1, period=3, seed=7,
+                          base="sgdm", compensation="finetune", **kw),
+         lambda: legacy.gum(1e-2, rank=4, gamma=1, period=3, seed=7,
+                            base="sgdm", compensation="finetune", **kw)),
+        ("galore",
+         lambda: core.galore(1e-2, rank=4, period=3, **kw),
+         lambda: legacy.galore(1e-2, rank=4, period=3, **kw)),
+        ("galore_muon",
+         lambda: core.galore(1e-2, rank=4, period=3, base="muon",
+                             weight_decay=0.01, **kw),
+         lambda: legacy.galore(1e-2, rank=4, period=3, base="muon",
+                               weight_decay=0.01, **kw)),
+        ("golore",
+         lambda: core.golore(1e-2, rank=4, period=3, seed=2, **kw),
+         lambda: legacy.golore(1e-2, rank=4, period=3, seed=2, **kw)),
+        ("fira",
+         lambda: core.fira(1e-2, rank=4, period=3, **kw),
+         lambda: legacy.fira(1e-2, rank=4, period=3, **kw)),
+        ("muon",
+         lambda: core.muon(1e-2, weight_decay=0.01, **kw),
+         lambda: legacy.muon(1e-2, weight_decay=0.01, **kw)),
+    ]
+
+
+def quad_loss(p):
+    return 0.5 * sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(p))
+
+
+def run_traj(opt, steps=STEPS):
+    st = opt.init(PARAMS)
+    p = PARAMS
+    losses = []
+    for _ in range(steps):
+        g = jax.grad(quad_loss)(p)
+        u, st = opt.update(g, st, p)
+        p = apply_updates(p, u)
+        losses.append(float(quad_loss(p)))
+    return losses, float(global_norm(p))
+
+
+def _load():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+NAMES = [name for name, _, _ in builder_specs()]
+
+
+@pytest.mark.parametrize("idx", range(len(NAMES)), ids=NAMES)
+def test_core_matches_recorded_legacy(idx):
+    """Combinator chains reproduce the frozen monolith trajectories — the
+    equivalence guard that outlives core/legacy.py itself."""
+    name, build_core, _ = builder_specs()[idx]
+    rec = _load()[name]
+    losses, pnorm = run_traj(build_core())
+    np.testing.assert_allclose(losses, rec["losses"], rtol=1e-5,
+                               err_msg=name)
+    np.testing.assert_allclose(pnorm, rec["final_param_norm"], rtol=1e-5,
+                               err_msg=name)
+
+
+@pytest.mark.parametrize("idx", range(len(NAMES)), ids=NAMES)
+def test_legacy_matches_its_recording(idx):
+    """While the monoliths still exist, they must agree with their own
+    fixture — catches silent edits to legacy.py or a stale recording."""
+    name, _, build_legacy = builder_specs()[idx]
+    rec = _load()[name]
+    losses, pnorm = run_traj(build_legacy())
+    np.testing.assert_allclose(losses, rec["losses"], rtol=1e-5,
+                               err_msg=name)
+    np.testing.assert_allclose(pnorm, rec["final_param_norm"], rtol=1e-5,
+                               err_msg=name)
+
+
+def _regen():
+    out = {}
+    for name, _, build_legacy in builder_specs():
+        losses, pnorm = run_traj(build_legacy())
+        out[name] = {"losses": losses, "final_param_norm": pnorm,
+                     "steps": STEPS, "impl": "jnp"}
+        print(f"{name}: final loss {losses[-1]:.6f}")
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {FIXTURE}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

@@ -316,3 +316,56 @@ def test_trainer_bitexact_resume_across_rank_change(tmp_path):
     for a, b in zip(jax.tree_util.tree_leaves(sa),
                     jax.tree_util.tree_leaves(sb)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spectral_grow_hysteresis_no_oscillation():
+    """Regression: spectral's grow path oscillated (4 <-> 8).  A shrink to a
+    rank that barely met the target produces *starved* probes at the new
+    rank (the smaller sketch cannot measure the target energy), which grew
+    the rank right back — and the next full-rank probe shrank it again,
+    forever.  A starvation grow now floors the family at the grown rank for
+    floor_ttl decisions, so replaying the oscillating probe sequence must
+    converge instead of flip-flopping."""
+    import json as _json
+
+    pol = RP.spectral(target_energy=0.9, r_min=2, r_max=8, ladder=(2, 4, 8))
+    ps = pol.init_state()
+    cur = RP.RankMap(8)
+    # probe the policy would see at rank 8: target met at k=4 -> shrink
+    at8 = {"sv2": np.array([50.0, 30.0, 9.0, 5.0, 2.0, 1.5, 1.5, 1.0]),
+           "g2": 100.0}
+    # probe at rank 4: 4 singular values cannot reach the target -> starved
+    at4 = {"sv2": np.array([40.0, 25.0, 10.0, 5.0]), "g2": 100.0}
+    hist = []
+    for i in range(8):
+        r = cur.rank_for(16, 24)
+        pr = dict(at8 if r == 8 else at4, rank=r)
+        ps, m = pol.decide(ps, 4 * (i + 1), {(16, 24): pr}, cur)
+        if m is not None:
+            cur = m
+        hist.append(cur.rank_for(16, 24))
+    # first decision shrinks, second grows back; the floor then pins the
+    # family — no further oscillation
+    assert hist[0] == 4 and hist[1] == 8, hist
+    assert all(r == 8 for r in hist[2:]), f"rank oscillated: {hist}"
+    assert ps["floors"] == {"16x24": [8, 2 + pol.floor_ttl]}
+    # hysteresis state must survive the checkpoint-extras JSON round-trip
+    assert _json.loads(_json.dumps(ps)) == ps
+
+
+def test_spectral_floor_expires():
+    """The hysteresis floor has a TTL: once it expires, genuine rank decay
+    can shrink the family again."""
+    pol = RP.spectral(target_energy=0.9, r_min=2, r_max=8, ladder=(2, 4, 8),
+                      floor_ttl=2)
+    ps = {"last_decision_step": None, "decisions": 0,
+          "floors": {"16x24": [8, 2]}}
+    shrinky = {(16, 24): {"sv2": np.array([95.0] + [0.5] * 7),
+                          "g2": 100.0, "rank": 8}}
+    # decision 1: floor [8, 2] still active (2 > 1) -> held at 8
+    ps, m = pol.decide(ps, 4, shrinky, RP.RankMap(8))
+    assert m.rank_for(16, 24) == 8
+    # decision 2: floor expired (2 > 2 is false) -> shrink wins
+    ps, m = pol.decide(ps, 8, shrinky, RP.RankMap(8))
+    assert m.rank_for(16, 24) == 2
+    assert ps["floors"] == {}
