@@ -1,15 +1,21 @@
-"""Static-audit pass matrix (PR 6): every factory optimizer, all fuse modes.
+"""Static-audit pass matrix (PR 6/PR 7): every factory optimizer, all fuse
+modes, plus the sharded collective-schedule cells.
 
 Runs :func:`repro.analysis.audit.run_matrix` — chain lint, closed-form
 launch model vs trace-time dispatch counts, dtype-flow and
-recompilation-hazard passes — over the reference 3-family tree.  Everything
-is abstract (eval_shape / make_jaxpr), so the whole matrix costs seconds and
-zero accelerator time; the committed JSON records per-cell launch counts,
-projected-state bytes and signature hashes so audit regressions are visible
-across PRs.
+recompilation-hazard passes — over the reference 3-family tree, then the
+PR-7 sharded pass (:func:`repro.analysis.audit.audit_sharded`,
+trace-only ``AbstractMesh`` mode) for mesh 1/2/8 x {gum, galore_muon,
+adamw} on the llama-60m smoke model.  Everything is abstract (eval_shape /
+make_jaxpr / AbstractMesh), so the whole matrix costs seconds and zero
+accelerator time — the sharded cells need no real devices at all; the
+committed JSON records per-cell launch counts, collective counts, wire
+bytes, projected-state bytes and signature hashes so audit regressions are
+visible across PRs.
 
 Emits ``name,us_per_call,derived`` CSV rows (us = wall time to audit the
-cell, derived = ``clean`` / the finding codes) and writes
+cell, derived = ``clean`` / the finding codes; sharded rows append
+collective counts + steady-state wire bytes) and writes
 ``BENCH_audit_matrix.json`` under --out (default results/).
 
 Usage: PYTHONPATH=src python benchmarks/audit_matrix.py [--out DIR]
@@ -21,7 +27,30 @@ import json
 import os
 import time
 
-from repro.analysis.audit import audit_optimizer, default_params, matrix_configs
+from repro.analysis.audit import (
+    audit_optimizer,
+    audit_sharded,
+    default_params,
+    matrix_configs,
+)
+from repro.core import OptimizerConfig
+
+SHARDED_OPTS = ("gum", "galore_muon", "adamw")
+SHARDED_MESHES = (1, 2, 8)
+
+
+def sharded_cells(smoke_mode: bool):
+    """(row_name, cfg, n_shards) for the sharded pass.  Smoke keeps one
+    mesh-8 cell — enough to prove the AbstractMesh trace path executes."""
+    cells = []
+    for opt in SHARDED_OPTS:
+        cfg = OptimizerConfig(name=opt, rank=16, period=10, gamma=1,
+                              kernel_impl="jnp")
+        for n in SHARDED_MESHES:
+            cells.append((f"audit_sharded_{opt}_mesh{n}", cfg, n))
+    if smoke_mode:
+        cells = [c for c in cells if c[0] == "audit_sharded_gum_mesh8"]
+    return cells
 
 
 def main() -> None:
@@ -44,6 +73,19 @@ def main() -> None:
         reports[rep.name] = rep
         derived = "clean" if rep.ok else "+".join(sorted(rep.codes()))
         print(f"audit_{rep.name},{us:.0f},{derived}", flush=True)
+
+    # Sharded collective-schedule cells (trace-only: AbstractMesh needs no
+    # devices, so the rows are identical under run.py and standalone).
+    for row, cfg, n in sharded_cells(smoke()):
+        t0 = time.time()
+        rep = audit_sharded(cfg, mesh_axes=(("data", n),), lower=False)
+        us = (time.time() - t0) * 1e6
+        reports[rep.name] = rep
+        derived = "clean" if rep.ok else "+".join(sorted(rep.codes()))
+        wire = rep.summary.get("wire", {})
+        derived += (f",collectives={rep.summary.get('collectives') or 'none'}"
+                    f",steady_wire_bytes={wire.get('steady_bytes_per_step')}")
+        print(f"{row},{us:.0f},{derived}", flush=True)
 
     if smoke():
         print("# smoke mode: skipping BENCH_audit_matrix.json write",

@@ -1,13 +1,13 @@
 """Family-stacked fused step engine vs the per-leaf chained path (PR 3).
 
-``BENCH_optimizer_api.json`` recorded the combinator API paying +7–17% per
-step over the frozen monoliths — the price of a Python loop over parameter
-leaves issuing three-plus dispatch launches per leaf.  This benchmark times
-all four execution modes on a per-layer (unstacked-leaf) tree, where the
+The per-leaf chained path pays for a Python loop over parameter leaves
+issuing three-plus dispatch launches per leaf.  This benchmark times the
+three execution modes on a per-layer (unstacked-leaf) tree, where the
 stacking engine has real work to do:
 
-  legacy         — the frozen monolith (repro.core.legacy)
-  chained        — per-leaf combinator path (PR 2 baseline)
+  chained        — per-leaf combinator path (the reference semantics and
+                   baseline; the frozen monoliths it was measured against
+                   were deleted in PR 7)
   stacked        — fuse_families=True: one batched launch per shape family
   stacked_fused  — + fused_epilogue=True: chain tails fold into the GEMM
 
@@ -16,8 +16,8 @@ counter — proving launches scale with the number of shape FAMILIES, not the
 number of leaves.
 
 Emits ``name,us_per_call,derived`` CSV rows and ``BENCH_fused_step.json``
-under --out (default results/).  Acceptance (ISSUE 3): stacked/fused chained
-per-step time at parity or better vs legacy for gum, galore_muon and fira.
+under --out (default results/).  Acceptance (ISSUE 3): stacked/fused
+per-step time at parity or better vs chained for gum, galore_muon and fira.
 
 Usage: PYTHONPATH=src python benchmarks/fused_step.py [--steps N] [--out DIR]
 """
@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.core as core
-from repro.core import apply_updates, legacy
+from repro.core import apply_updates
 from repro.kernels import launch_count
 
 from _smoke import smoke, steps as smoke_steps
@@ -65,9 +65,8 @@ OPT_KW = dict(rank=64, period=50, seed=0, kernel_impl="jnp")
 
 
 def _builders():
-    def modes(mk_new, mk_legacy):
+    def modes(mk_new):
         return {
-            "legacy": mk_legacy(),
             "chained": mk_new(),
             "stacked": mk_new(fuse_families=True),
             "stacked_fused": mk_new(fuse_families=True, fused_epilogue=True),
@@ -75,14 +74,11 @@ def _builders():
 
     return [
         ("gum", modes(
-            lambda **kw: core.gum(1e-3, gamma=2, **OPT_KW, **kw),
-            lambda: legacy.gum(1e-3, gamma=2, **OPT_KW))),
+            lambda **kw: core.gum(1e-3, gamma=2, **OPT_KW, **kw))),
         ("galore_muon", modes(
-            lambda **kw: core.galore(1e-3, base="muon", **OPT_KW, **kw),
-            lambda: legacy.galore(1e-3, base="muon", **OPT_KW))),
+            lambda **kw: core.galore(1e-3, base="muon", **OPT_KW, **kw))),
         ("fira", modes(
-            lambda **kw: core.fira(1e-3, **OPT_KW, **kw),
-            lambda: legacy.fira(1e-3, **OPT_KW))),
+            lambda **kw: core.fira(1e-3, **OPT_KW, **kw))),
     ]
 
 
@@ -140,17 +136,18 @@ def main() -> None:
     for name, opts in _builders():
         us = _time_modes(opts, params, n_steps, reps=1 if smoke() else 5)
         per_op = {mode: _launches(opt, params)
-                  for mode, opt in opts.items() if mode != "legacy"}
+                  for mode, opt in opts.items()}
         launches = {mode: sum(c.values()) for mode, c in per_op.items()}
         # gum and fira's inner transforms emit full-shape (FullUpdate)
         # leaves, so the deferred-epilogue path never engages for them —
         # stacked_fused is computationally identical to stacked there, and
         # the row says so instead of presenting noise as a delta.
         epi_active = per_op["stacked_fused"].get("back_project_epilogue", 0) > 0
-        for mode in ("legacy", "chained", "stacked", "stacked_fused"):
-            ovh = (us[mode] - us["legacy"]) / us["legacy"] * 100.0
-            tag = ("baseline" if mode == "legacy"
-                   else f"vs_legacy_pct={ovh:+.1f},launches={launches[mode]}")
+        for mode in ("chained", "stacked", "stacked_fused"):
+            ovh = (us[mode] - us["chained"]) / us["chained"] * 100.0
+            tag = ("baseline" if mode == "chained"
+                   else f"vs_chained_pct={ovh:+.1f}")
+            tag += f",launches={launches[mode]}"
             if mode == "stacked_fused" and not epi_active:
                 tag += ",epilogue=inert(FullUpdate_path)"
             print(f"fusedstep_{name}_{mode},{us[mode]:.0f},{tag}")
@@ -159,10 +156,10 @@ def main() -> None:
             **{f"us_{m}": round(v, 1) for m, v in us.items()},
             **{f"launches_{m}": v for m, v in launches.items()},
             "epilogue_active": epi_active,
-            "stacked_vs_legacy_pct":
-                round((us["stacked"] - us["legacy"]) / us["legacy"] * 100.0, 2),
-            "stacked_fused_vs_legacy_pct":
-                round((us["stacked_fused"] - us["legacy"]) / us["legacy"] * 100.0, 2),
+            "stacked_vs_chained_pct":
+                round((us["stacked"] - us["chained"]) / us["chained"] * 100.0, 2),
+            "stacked_fused_vs_chained_pct":
+                round((us["stacked_fused"] - us["chained"]) / us["chained"] * 100.0, 2),
         })
 
     if smoke():

@@ -13,10 +13,10 @@ test existed).
   bias_residual             — Fig. 4 (GaLore's chi_t bias curve)
   stable_rank               — Figs. 2/3/5 (stable rank & spectra)
   roofline_report           — §Roofline aggregation from the dry-run JSONs
-  optimizer_api             — combinator-chain vs legacy-monolith per-step
-                              overhead (PR 2; writes BENCH_optimizer_api.json)
-  fused_step                — family-stacked fused engine vs per-leaf chained
-                              vs legacy: step time + kernel-launch counts
+  optimizer_api             — per-leaf chained vs family-stacked per-step
+                              overhead (PR 2/3; writes BENCH_optimizer_api.json)
+  fused_step                — family-stacked fused engine vs per-leaf
+                              chained: step time + kernel-launch counts
                               (PR 3; writes BENCH_fused_step.json)
   rank_policy               — rank-policy engine: projected-state bytes +
                               step time, fixed vs stepwise vs spectral

@@ -20,19 +20,47 @@ those invariants on the traced program, before a single real step runs:
     dtype-flow audit (``RA2xx``), recompilation-hazard detection across a
     declared rank ladder (``RA4xx``), and the static memory accountant
     (``RA5xx``) cross-checked against ``results/BENCH_rank_policy.json``.
+  * :mod:`~repro.analysis.collectives` — collective-schedule auditor for
+    the ``shard_map`` FSDP step (``RA601/602/603/606``): every collective
+    extracted from the traced step (on an ``AbstractMesh`` — no devices),
+    diffed against the closed-form schedule (one barrier-pinned
+    ``reduce_dtype`` gradient psum + one loss pmean per steady-state step,
+    gathers only at refresh boundaries), with a ring-coefficient wire-bytes
+    accountant per step.
+  * :mod:`~repro.analysis.buffers` — buffer-lifetime auditor on the lowered
+    jit module (``RA604/605``): donated params/opt_state really alias
+    outputs (``tf.aliasing_output``), the batch is per-shard not
+    per-replica, and a static per-shard peak-memory model.
   * :mod:`~repro.analysis.audit` — the orchestrator and CLI::
 
         PYTHONPATH=src python -m repro.analysis.audit --optimizer gum \
             --fuse-families --fused-epilogue --rank-ladder 16,32,64
         PYTHONPATH=src python -m repro.analysis.audit --matrix
+        PYTHONPATH=src python -m repro.analysis.audit --sharded --mesh data=8
 
 Wired into ``build_optimizer(..., audit=True)`` (chain lint at build time),
-``launch/dryrun.py --audit`` (full audit per compiled cell) and the
-``Trainer`` startup log (one-line summary: launches/step, state bytes,
-signature hash).
+``launch/dryrun.py --audit`` (full audit per compiled cell),
+``launch/train.py --audit`` (full audit incl. sharded passes before step 0)
+and the ``Trainer`` startup log (one-line summary: launches/step, state
+bytes, signature hash, donation when a mesh is configured).
 """
-from .audit import audit_optimizer, audit_summary, run_matrix
+from .audit import audit_optimizer, audit_sharded, audit_summary, run_matrix
+from .buffers import (
+    ArgInfo,
+    donation_findings,
+    parse_main_args,
+    per_shard_memory,
+    replication_findings,
+)
 from .chain_lint import ChainLintError, lint_chain
+from .collectives import (
+    CollectiveRecord,
+    collect_collectives,
+    collective_schedule_findings,
+    expected_collective_schedule,
+    trace_sharded_step,
+    wire_bytes_model,
+)
 from .findings import CODES, AuditReport, Finding
 from .jaxpr_passes import (
     dtype_flow_findings,
@@ -45,9 +73,14 @@ from .jaxpr_passes import (
 from .launch_model import expected_launches, lowrank_plan_stats
 
 __all__ = [
-    "AuditReport", "CODES", "ChainLintError", "Finding",
-    "audit_optimizer", "audit_summary", "dtype_flow_findings",
-    "expected_launches", "lint_chain", "lowrank_plan_stats",
-    "memory_crosscheck", "projected_state_bytes", "recompile_findings",
-    "run_matrix", "signature_hash", "trace_update",
+    "ArgInfo", "AuditReport", "CODES", "ChainLintError",
+    "CollectiveRecord", "Finding",
+    "audit_optimizer", "audit_sharded", "audit_summary",
+    "collect_collectives", "collective_schedule_findings",
+    "donation_findings", "dtype_flow_findings",
+    "expected_collective_schedule", "expected_launches", "lint_chain",
+    "lowrank_plan_stats", "memory_crosscheck", "parse_main_args",
+    "per_shard_memory", "projected_state_bytes", "recompile_findings",
+    "replication_findings", "run_matrix", "signature_hash",
+    "trace_sharded_step", "trace_update", "wire_bytes_model",
 ]

@@ -12,6 +12,9 @@ CLI::
     PYTHONPATH=src python -m repro.analysis.audit --matrix --json
     PYTHONPATH=src python -m repro.analysis.audit --optimizer gum \
         --check-memory          # cross-check results/BENCH_rank_policy.json
+    PYTHONPATH=src python -m repro.analysis.audit --sharded --mesh data=8
+                                # collective schedule + donation on the
+                                # shard_map step (forces host CPU devices)
 
 Exit status 1 iff any error-severity finding survives.
 """
@@ -31,7 +34,19 @@ from repro.core.factory import build_optimizer
 from repro.core.rank_policy import RankMap
 from repro.kernels import launch_count
 
+from .buffers import (
+    donation_findings,
+    parse_main_args,
+    per_shard_memory,
+    replication_findings,
+)
 from .chain_lint import lint_chain
+from .collectives import (
+    collective_schedule_findings,
+    expected_collective_schedule,
+    trace_sharded_step,
+    wire_bytes_model,
+)
 from .findings import AuditReport, Finding
 from .jaxpr_passes import (
     dtype_flow_findings,
@@ -65,9 +80,9 @@ def default_params(dtype=jnp.float32):
     return {k: jax.ShapeDtypeStruct(s, dtype) for k, s in shapes.items()}
 
 
-def arch_params(arch: str):
-    """Abstract param tree of a registered model config (``eval_shape``'d
-    init — nothing allocates).  ``name-smoke`` selects the tiny variant."""
+def arch_model(arch: str):
+    """Built model for a registered config name (``name-smoke`` selects the
+    tiny variant).  Building is pure metadata — nothing allocates."""
     from repro.configs import get_config, get_smoke
     from repro.models import build_model
 
@@ -75,8 +90,13 @@ def arch_params(arch: str):
         cfg = get_smoke(arch[: -len("-smoke")])
     else:
         cfg = get_config(arch)
-    model = build_model(cfg)
-    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return build_model(cfg)
+
+
+def arch_params(arch: str):
+    """Abstract param tree of a registered model config (``eval_shape``'d
+    init — nothing allocates).  ``name-smoke`` selects the tiny variant."""
+    return jax.eval_shape(arch_model(arch).init, jax.random.PRNGKey(0))
 
 
 def _cell_name(cfg: OptimizerConfig) -> str:
@@ -187,6 +207,112 @@ def audit_optimizer(
     return report
 
 
+def audit_sharded(
+    cfg: OptimizerConfig,
+    *,
+    arch: str = "llama-60m-smoke",
+    model=None,
+    mesh_axes=(("data", 8),),
+    reduce_dtype=jnp.bfloat16,
+    grad_clip: float = 1.0,
+    batch_size: int = 8,
+    lower: bool | None = None,
+) -> AuditReport:
+    """Audit the ``shard_map`` train step: collective schedule (RA601/602/
+    603/606) + wire-bytes accountant on an ``AbstractMesh`` trace (no
+    devices needed), and — when enough real devices exist — donation /
+    replication of the lowered jit step (RA604/RA605) plus the per-shard
+    peak-memory model.
+
+    ``lower=None`` lowers iff ``jax.device_count()`` covers the mesh;
+    ``lower=False`` keeps the cell fully device-free (what the benchmark
+    matrix uses so its numbers don't depend on forced host devices).
+    """
+    (data_axis, n_shards), = mesh_axes  # pure-DP path: exactly one axis
+    n_shards = int(n_shards)
+    name = f"sharded:{_cell_name(cfg)}@{data_axis}={n_shards}"
+    report = AuditReport(name=name)
+
+    transform = build_optimizer(cfg)
+    report.extend(lint_chain(transform, ladder=cfg.rank_ladder, name=name))
+    if not report.ok:
+        return report
+
+    model = arch_model(arch) if model is None else model
+    batch_size = n_shards * -(-int(batch_size) // n_shards)  # round up to /N
+    jaxpr, records, counts, (params, opt_state, batch) = trace_sharded_step(
+        model, transform, n_shards=n_shards, batch_size=batch_size,
+        reduce_dtype=reduce_dtype, grad_clip=grad_clip, data_axis=data_axis,
+    )
+
+    expected = expected_collective_schedule(
+        transform, params, n_shards=n_shards, reduce_dtype=reduce_dtype,
+        data_axis=data_axis)
+    report.extend(collective_schedule_findings(
+        records, expected, reduce_dtype=reduce_dtype, params=params,
+        where=name))
+
+    # the dispatch-launch contract holds under shard_map too: the optimizer
+    # runs once, replicated, after the reduction.
+    exp_launch, model_findings = expected_launches(
+        transform, params, name=name)
+    report.extend(model_findings)
+    dispatch_traced = {op: n for op, n in counts.items()
+                       if op in launch_count.DISPATCH_OPS}
+    if not model_findings:
+        report.extend(launch_findings(
+            exp_launch, dispatch_traced,
+            fused_epilogue=cfg.fused_epilogue, where=name))
+
+    wire = wire_bytes_model(records, n_shards)
+    mem = per_shard_memory(params, opt_state, batch,
+                           n_shards=n_shards, reduce_dtype=reduce_dtype)
+    report.summary.update({
+        "n_shards": n_shards,
+        "collectives": launch_count.format_counts(
+            {op: n for op, n in counts.items()
+             if op in launch_count.COLLECTIVE_OPS}),
+        "expected_schedule": expected,
+        "wire": wire,
+        "per_shard_memory": mem,
+        "launch_counts": launch_count.format_counts(dict(counts)),
+    })
+
+    if lower is None:
+        lower = jax.device_count() >= n_shards
+    if not lower:
+        report.summary["buffers"] = (
+            f"skipped (lowering needs {n_shards} devices; "
+            "run the CLI with --sharded to force host devices)")
+        return report
+
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.launch.shardmap_fsdp import make_shardmap_train_step
+
+    mesh = Mesh(np.asarray(jax.devices()[:n_shards]), (data_axis,))
+    _, jit_builder = make_shardmap_train_step(
+        model, transform, mesh,
+        grad_clip=grad_clip, reduce_dtype=reduce_dtype, data_axis=data_axis)
+    lowered = jit_builder(params, opt_state).lower(
+        params, opt_state, batch).as_text()
+    args_info = parse_main_args(lowered)
+    n_params = len(jax.tree_util.tree_leaves(params))
+    n_opt = len(jax.tree_util.tree_leaves(opt_state))
+    report.extend(donation_findings(
+        args_info, n_params=n_params, n_opt=n_opt, where=name))
+    report.extend(replication_findings(
+        args_info, n_params=n_params, n_opt=n_opt, n_shards=n_shards,
+        where=name))
+    report.summary["buffers"] = {
+        "donated_args": sum(a.aliased for a in args_info),
+        "expected_donated": n_params + n_opt,
+        "total_args": len(args_info),
+    }
+    return report
+
+
 def audit_summary(transform: Transform, params, *, name: str = "optimizer") -> str:
     """One-line startup summary for the Trainer log: per-step launch counts,
     projected-state bytes and the abstract signature hash — from a single
@@ -239,6 +365,23 @@ def _parse_ladder(text: str) -> tuple[int, ...]:
     return tuple(int(x) for x in text.split(",") if x.strip())
 
 
+def _parse_mesh(text: str) -> tuple[tuple[str, int], ...]:
+    """``"data=8"`` (comma-separable) -> ``(("data", 8),)``."""
+    axes = []
+    for part in text.split(","):
+        if not part.strip():
+            continue
+        axis, _, size = part.partition("=")
+        axes.append((axis.strip(), int(size)))
+    if not axes:
+        raise ValueError(f"unparseable mesh spec: {text!r}")
+    return tuple(axes)
+
+
+_REDUCE_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32,
+                  "fp32": jnp.float32, "f16": jnp.float16}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.audit",
@@ -262,9 +405,47 @@ def main(argv=None) -> int:
                     help="audit the full optimizer x fuse x epilogue matrix")
     ap.add_argument("--check-memory", action="store_true",
                     help="also cross-check results/BENCH_rank_policy.json")
+    ap.add_argument("--sharded", action="store_true",
+                    help="audit the shard_map train step instead: collective "
+                         "schedule + wire bytes (abstract trace) and "
+                         "donation / per-shard buffers (lowered module; "
+                         "forces host CPU devices to cover the mesh)")
+    ap.add_argument("--mesh", default="data=8", metavar="AXIS=N",
+                    help="mesh spec for --sharded (default: data=8)")
+    ap.add_argument("--reduce-dtype", default="bf16",
+                    choices=sorted(_REDUCE_DTYPES),
+                    help="declared gradient-reduction dtype for --sharded")
     ap.add_argument("--json", action="store_true", dest="as_json")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.sharded:
+        # must happen before ANY jax device use in this process
+        from repro.launch.devices import force_host_device_count
+
+        mesh_axes = _parse_mesh(args.mesh)
+        total = 1
+        for _, size in mesh_axes:
+            total *= size
+        force_host_device_count(total)
+        cfg = OptimizerConfig(
+            name=args.optimizer, rank=args.rank, period=args.period,
+            gamma=1, kernel_impl="jnp",
+            fuse_families=args.fuse_families,
+            fused_epilogue=args.fused_epilogue,
+            rank_ladder=args.rank_ladder,
+        )
+        rep = audit_sharded(
+            cfg, arch=args.arch or "llama-60m-smoke", mesh_axes=mesh_axes,
+            reduce_dtype=_REDUCE_DTYPES[args.reduce_dtype])
+        reports = {rep.name: rep}
+        if args.as_json:
+            print(json.dumps({k: r.to_json() for k, r in reports.items()},
+                             indent=2, default=str))
+        else:
+            for r in reports.values():
+                print(r.format(verbose=args.verbose))
+        return 0 if rep.ok else 1
 
     params = arch_params(args.arch) if args.arch else None
     if args.matrix:

@@ -1,0 +1,225 @@
+"""Buffer-lifetime auditor for the jitted sharded step (RA604/RA605).
+
+``make_shardmap_train_step``'s jit wrapper donates ``params`` and
+``opt_state`` (``donate_argnums=(0, 1)``) so the update happens in place —
+without donation every step holds two full copies of the model plus two of
+the optimizer state.  Donation is easy to lose silently: drop the argnums,
+change an output dtype, or reorder outputs, and XLA just stops aliasing
+with no error.  This pass reads the *lowered* StableHLO module (no
+compile, no devices beyond the mesh used to lower) and verifies the
+aliasing actually happened:
+
+  * :func:`parse_main_args` extracts every ``%argN`` of the module's public
+    ``@main`` — shape, dtype, bytes, ``tf.aliasing_output`` (the
+    input→output alias XLA records for donated buffers) and the
+    ``mhlo.sharding`` attribute.
+  * :func:`donation_findings` — RA604 when a params / opt-state argument
+    does not alias an output.
+  * :func:`replication_findings` — RA605 when the per-shard batch input is
+    actually replicated on a >1 mesh (the accountant's bytes/N model would
+    silently become bytes×1).
+  * :func:`per_shard_memory` — static per-shard peak-memory model (params +
+    grads at fp32 + wire-copy at ``reduce_dtype`` + opt state + batch/N),
+    reusing the PR-6 accountant (:func:`repro.core.api.state_bytes`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import state_bytes
+from repro.core.combinators import find_lowrank_states
+
+from .findings import Finding
+
+PyTree = Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8E4M3FN": 1, "f8E5M2": 1,
+    "i64": 8, "i32": 4, "i16": 2, "i8": 1, "i1": 1,
+    "ui64": 8, "ui32": 4, "ui16": 2, "ui8": 1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArgInfo:
+    """One ``%argN`` of the lowered module's ``@main`` signature."""
+
+    index: int
+    shape: tuple[int, ...]
+    dtype: str
+    nbytes: int
+    aliased: bool            # carries tf.aliasing_output (donation happened)
+    sharding: str | None     # raw mhlo.sharding attribute, if any
+
+    @property
+    def replicated(self) -> bool:
+        return self.sharding is None or "replicated" in self.sharding
+
+
+def _main_signature(lowered_text: str) -> str:
+    m = re.search(r"func\.func\s+public\s+@main\(", lowered_text)
+    if m is None:
+        raise ValueError("no public @main function in lowered module text")
+    i, depth = m.end(), 1
+    while depth and i < len(lowered_text):
+        c = lowered_text[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    return lowered_text[m.end():i - 1]
+
+
+def parse_main_args(lowered_text: str) -> list[ArgInfo]:
+    """Parse the ``@main`` signature of ``jitted.lower(...).as_text()``."""
+    sig = _main_signature(lowered_text)
+    args: list[ArgInfo] = []
+    chunks = re.split(r"(?=%arg\d+:)", sig)
+    for chunk in chunks:
+        m = re.match(r"%arg(\d+):", chunk)
+        if not m:
+            continue
+        t = re.search(r"tensor<([^>]*)>", chunk)
+        if not t:
+            continue
+        toks = t.group(1).split("x")
+        dtype = toks[-1]
+        dims = tuple(int(d) for d in toks[:-1])
+        size = 1
+        for d in dims:
+            size *= d
+        itemsize = _DTYPE_BYTES.get(dtype, 4)
+        sh = re.search(r'mhlo\.sharding\s*=\s*"([^"]*)"', chunk)
+        args.append(ArgInfo(
+            index=int(m.group(1)),
+            shape=dims,
+            dtype=dtype,
+            nbytes=size * itemsize,
+            aliased="tf.aliasing_output" in chunk,
+            sharding=sh.group(1) if sh else None,
+        ))
+    args.sort(key=lambda a: a.index)
+    return args
+
+
+# ---------------------------------------------------------------------------
+# findings
+# ---------------------------------------------------------------------------
+
+
+def donation_findings(args: Iterable[ArgInfo], *, n_params: int, n_opt: int,
+                      where: str = "sharded-step") -> list[Finding]:
+    """RA604: every params / opt-state argument (the first
+    ``n_params + n_opt`` flat args, jit's flattening order) must carry
+    ``tf.aliasing_output`` — i.e. ``donate_argnums=(0, 1)`` survived all the
+    way into the lowered module."""
+    args = list(args)
+    n_donated = n_params + n_opt
+    if len(args) < n_donated:
+        return [Finding(
+            code="RA604", where=where,
+            message=f"lowered module has {len(args)} args but "
+                    f"{n_donated} donated leaves were expected — signature "
+                    "parse / flattening mismatch",
+            detail={"n_args": len(args), "expected_donated": n_donated},
+        )]
+    missing = [a for a in args[:n_donated] if not a.aliased]
+    if not missing:
+        return []
+    lost = sum(a.nbytes for a in missing)
+    kinds = sorted({"params" if a.index < n_params else "opt_state"
+                    for a in missing})
+    return [Finding(
+        code="RA604", where=where,
+        message=f"{len(missing)}/{n_donated} donated buffer(s) "
+                f"({'+'.join(kinds)}) do not alias an output — "
+                f"{lost} extra bytes live per step (double-buffered "
+                "instead of updated in place)",
+        hint="restore donate_argnums=(0, 1) on the jit wrapper and keep "
+             "output dtypes/shapes identical to the donated inputs "
+             "(XLA silently drops mismatched aliases)",
+        detail={"missing_indices": [a.index for a in missing[:8]],
+                "missing_bytes": lost},
+    )]
+
+
+def replication_findings(args: Iterable[ArgInfo], *, n_params: int,
+                         n_opt: int, n_shards: int,
+                         where: str = "sharded-step") -> list[Finding]:
+    """RA605: on a >1 mesh the batch argument(s) must be sharded over the
+    data axis; a replicated batch means every shard holds (and the memory
+    model should have charged) per-replica bytes, not per-shard.
+
+    Params / opt state are replicated BY DESIGN in the pure-DP variant, so
+    only the trailing (batch) args are checked."""
+    if n_shards <= 1:
+        return []
+    args = list(args)
+    batch = [a for a in args[n_params + n_opt:] if a.nbytes > 0]
+    bad = [a for a in batch if a.replicated]
+    if not bad:
+        return []
+    total = sum(a.nbytes for a in bad)
+    return [Finding(
+        code="RA605", where=where,
+        message=f"{len(bad)} batch buffer(s) are replicated on the "
+                f"{n_shards}-way mesh — per-replica bytes on every shard "
+                f"({total}B each) where the per-shard model charges "
+                f"{total // n_shards}B",
+        hint="shard the batch over the data axis "
+             "(NamedSharding(mesh, P('data')) on the tokens input)",
+        detail={"indices": [a.index for a in bad], "bytes": total,
+                "n_shards": n_shards},
+    )]
+
+
+# ---------------------------------------------------------------------------
+# static per-shard peak-memory model
+# ---------------------------------------------------------------------------
+
+
+def per_shard_memory(params: PyTree, opt_state: PyTree, batch: PyTree, *,
+                     n_shards: int, reduce_dtype=jnp.bfloat16) -> dict:
+    """Static per-shard peak bytes for one sharded train step, from
+    ``ShapeDtypeStruct`` trees (nothing allocates).  Reuses the PR-6
+    accountant (:func:`repro.core.api.state_bytes`) for every tree term.
+
+    Model: params + opt state are replicated (pure-DP variant), gradients
+    exist once at fp32 (the accumulate) plus once at ``reduce_dtype`` (the
+    wire copy inside the psum), and the batch is split 1/N over the data
+    axis — the per-SHARD number, which is the whole point (RA605 guards the
+    accountant against silently reporting per-replica)."""
+    rd = jnp.dtype(reduce_dtype)
+    n = max(int(n_shards), 1)
+    p_leaves = [x for x in jax.tree_util.tree_leaves(params)
+                if hasattr(x, "shape")]
+    p_elems = sum(int(_size(x)) for x in p_leaves)
+    out = {
+        "n_shards": n,
+        "params_bytes": state_bytes(params),
+        "opt_state_bytes": state_bytes(opt_state),
+        "proj_state_bytes": sum(
+            state_bytes(lr) for lr in find_lowrank_states(opt_state)),
+        "grad_bytes_fp32": p_elems * 4,
+        "grad_wire_bytes": p_elems * rd.itemsize,
+        "batch_bytes_per_shard": -(-state_bytes(batch) // n),
+    }
+    out["peak_bytes_per_shard"] = (
+        out["params_bytes"] + out["opt_state_bytes"]
+        + out["grad_bytes_fp32"] + out["grad_wire_bytes"]
+        + out["batch_bytes_per_shard"]
+    )
+    return out
+
+
+def _size(x) -> int:
+    nelem = 1
+    for d in jnp.shape(x):
+        nelem *= int(d)
+    return nelem

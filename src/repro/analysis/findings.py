@@ -8,6 +8,7 @@ a code's meaning never changes and retired codes are not reused.
   RA3xx — launch/fusion auditor (dispatch trace vs closed-form model)
   RA4xx — recompilation-hazard detector (abstract signatures)
   RA5xx — static memory accountant
+  RA6xx — collective-schedule / buffer-lifetime auditor (sharded step)
 """
 from __future__ import annotations
 
@@ -38,6 +39,19 @@ CODES: dict[str, str] = {
     # static memory accountant
     "RA501": "static projected-state bytes disagree with recorded runtime "
              "numbers",
+    # collective-schedule / buffer-lifetime auditor (sharded step)
+    "RA601": "gradient reduction not pinned at the declared reduce_dtype "
+             "(wider-dtype collective, or convert not barrier-pinned so "
+             "XLA re-promotes the all-reduce)",
+    "RA602": "collective executes unconditionally that the schedule model "
+             "says is boundary-only",
+    "RA603": "full-gradient gather in the steady-state step",
+    "RA604": "donated input buffer (params / opt state) does not alias an "
+             "output in the lowered module",
+    "RA605": "per-replica instead of per-shard buffer in the sharded step "
+             "(memory accountant would over-count by the mesh size)",
+    "RA606": "traced collective schedule diverges from the closed-form "
+             "expectation (count / operands / payload bytes)",
 }
 
 _SEVERITIES = ("error", "warning", "info")

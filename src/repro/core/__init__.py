@@ -37,8 +37,8 @@ optimizer's state is now the tuple of its chain stages (e.g. gum:
 ``MultiState(inner={"gum": (LowRankState, (), ScaleByLrState), "adamw":
 (ScaleByAdamState, (), ScaleByLrState)})``).  Checkpoints from the monolith
 era do not restore into the new layout.  Trajectories are preserved
-loss-for-loss (equivalence suite: tests/test_combinators.py vs the frozen
-:mod:`repro.core.legacy`).
+loss-for-loss against the deleted pre-redesign monoliths via the recorded
+fixtures in tests/test_legacy_fixtures.py.
 """
 from .adamw import adamw, sgdm
 from .api import (

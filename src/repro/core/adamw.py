@@ -8,8 +8,8 @@ Both are now one-line compositions over :mod:`repro.core.combinators`::
                   scale_by_lr(lr))
 
 Public signatures and trajectories match the pre-combinator monoliths
-(verified loss-for-loss in tests/test_combinators.py against
-:mod:`repro.core.legacy`)."""
+(verified loss-for-loss against the recorded fixtures in
+tests/test_legacy_fixtures.py)."""
 from __future__ import annotations
 
 from .api import Schedule, Transform

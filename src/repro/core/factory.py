@@ -2,9 +2,9 @@
 
 Every named optimizer resolves to a :mod:`repro.core.combinators` chain
 (built by the thin shims in gum/galore/fira/muon/adamw) — public names and
-signatures are unchanged from the monolith era, and the equivalence suite
-(tests/test_combinators.py) proves loss-for-loss parity against
-:mod:`repro.core.legacy`.
+signatures are unchanged from the monolith era, and the recorded-trajectory
+suite (tests/test_legacy_fixtures.py) proves loss-for-loss parity against
+the deleted monoliths.
 
 ``cfg.kernel_impl`` is forwarded to every optimizer with a low-rank /
 Newton–Schulz hot loop (gum, galore, galore_muon, golore, fira, muon,

@@ -42,6 +42,21 @@ DISPATCH_OPS = (
     "newton_schulz",
 )
 
+# Collective primitives the sharded-step auditor
+# (repro.analysis.collectives) records alongside the dispatch ops when it
+# walks a shard_map'ped jaxpr — one count per collective *equation*, so a
+# tree-level psum over N gradient leaves counts once, mirroring the single
+# wire operation it becomes.
+COLLECTIVE_OPS = (
+    "psum",
+    "all_gather",
+    "reduce_scatter",
+    "all_to_all",
+    "ppermute",
+)
+
+_KNOWN_OPS = DISPATCH_OPS + COLLECTIVE_OPS
+
 _ACTIVE: list[dict[str, int]] = []
 
 
@@ -82,9 +97,9 @@ class LaunchCountMismatch(AssertionError):
 def format_counts(counts: dict[str, int]) -> str:
     """Stable one-line rendering: ``total [op=n, ...]`` in op order."""
     total = sum(counts.values())
-    parts = [f"{op}={counts[op]}" for op in DISPATCH_OPS if counts.get(op)]
+    parts = [f"{op}={counts[op]}" for op in _KNOWN_OPS if counts.get(op)]
     parts += [f"{op}={n}" for op, n in sorted(counts.items())
-              if op not in DISPATCH_OPS]
+              if op not in _KNOWN_OPS]
     return f"{total} [{', '.join(parts)}]"
 
 
@@ -99,9 +114,9 @@ def assert_launches(expected: dict[str, int]) -> Iterator[dict[str, int]]:
             jax.eval_shape(lambda: opt.update(grads, state, params))
     """
     for op in expected:
-        if op not in DISPATCH_OPS:
-            raise ValueError(f"unknown dispatch op in expectation: {op!r} "
-                             f"(known: {DISPATCH_OPS})")
+        if op not in _KNOWN_OPS:
+            raise ValueError(f"unknown op in expectation: {op!r} "
+                             f"(known: {_KNOWN_OPS})")
     with count_launches() as counts:
         yield counts
     clean = {op: n for op, n in expected.items() if n}

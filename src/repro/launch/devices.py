@@ -1,0 +1,47 @@
+"""Shared control of the forced host-platform device count.
+
+Several entry points (the sharded-audit CLI, ``launch/dryrun.py``, the
+shard_map subprocess tests) need a multi-device CPU "mesh" backed by
+``--xla_force_host_platform_device_count``.  Historically each call site
+wrote ``os.environ["XLA_FLAGS"] = ...`` directly, clobbering whatever flags
+the caller had set.  This helper is the one place that edits the flag: it
+replaces any existing ``force_host_platform_device_count`` entry while
+preserving every other flag, and (optionally) verifies the backend actually
+came up with enough devices.
+
+This module must stay importable without touching jax — callers import it
+*before* jax initializes its backends.
+"""
+from __future__ import annotations
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int, *, verify: bool = True) -> None:
+    """Force ``n`` host (CPU) devices via ``XLA_FLAGS``, preserving other flags.
+
+    Must be called before jax initializes its backends (i.e. before the first
+    device/array/jit use in the process — importing jax is fine).  With
+    ``verify=True`` the backend is initialized immediately and a
+    ``RuntimeError`` is raised if fewer than ``n`` devices came up, which is
+    the symptom of calling this too late.
+
+    ``n <= 1`` removes any forced count (single-device default).
+    """
+    n = int(n)
+    parts = [f for f in os.environ.get("XLA_FLAGS", "").split() if not f.startswith(_FLAG)]
+    if n > 1:
+        parts.append(f"{_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(parts)
+    if verify and n > 1:
+        import jax
+
+        have = jax.device_count()
+        if have < n:
+            raise RuntimeError(
+                f"requested {n} host devices but the jax backend is already "
+                f"initialized with {have}; call force_host_device_count({n}) "
+                "before any jax device/array/jit use in this process"
+            )

@@ -1,8 +1,10 @@
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 MUST be run as a process entry point (``python -m repro.launch.dryrun``) —
-the first two lines below force 512 placeholder host devices BEFORE jax
-initializes, so ``make_production_mesh`` can build the production meshes.
+the first import below forces 512 placeholder host devices (via the shared
+:func:`repro.launch.devices.force_host_device_count` helper, which preserves
+any other ``XLA_FLAGS``) BEFORE jax initializes, so ``make_production_mesh``
+can build the production meshes.
 
 Per cell this script:
   1. builds the model + GUM optimizer (the paper's technique, first-class),
@@ -12,15 +14,13 @@ Per cell this script:
   4. records memory_analysis / cost_analysis / the 3 roofline terms parsed
      from the post-SPMD HLO into a JSON next to EXPERIMENTS.md.
 """
-import os
+from repro.launch.devices import force_host_device_count
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+force_host_device_count(512, verify=False)  # before jax backend init
 
 import argparse  # noqa: E402
 import json  # noqa: E402
+import os  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
@@ -137,17 +137,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
                 opt = tools.transform
             else:
                 opt = build_optimizer(ocfg)
+            audit_report = None
             if audit:
                 # Full static audit of this cell's optimizer over the real
                 # model's param structs (chain lint, launch model vs traced
                 # dispatch counts, dtype flow, recompile hazards) — abstract
                 # tracing only, before the expensive XLA compile below.
+                # The buffer pass (donation / replication) is appended after
+                # the lowering exists.
                 from repro.analysis import audit_optimizer
 
-                report = audit_optimizer(ocfg, params_struct,
-                                         ladder=ocfg.rank_ladder)
-                result["audit"] = report.to_json()
-                print("  " + report.format().replace("\n", "\n  "),
+                audit_report = audit_optimizer(ocfg, params_struct,
+                                               ladder=ocfg.rank_ladder)
+                result["audit"] = audit_report.to_json()
+                print("  " + audit_report.format().replace("\n", "\n  "),
                       flush=True)
             opt_struct = jax.eval_shape(opt.init, params_struct)
             opt_sh = opt_state_sharding(opt_struct, mesh)
@@ -164,6 +167,47 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
             )
             lowered = jit_step.lower(params_struct, opt_struct, batch)
             result["microbatches"] = mb
+            if audit_report is not None:
+                # Buffer-lifetime pass on the lowered module: donated
+                # params/opt_state must alias outputs (RA604) and the batch
+                # must actually be sharded, not replicated per device
+                # (RA605) — the lowering is already paid, so this is free.
+                from repro.analysis import (
+                    donation_findings,
+                    parse_main_args,
+                    replication_findings,
+                )
+
+                infos = parse_main_args(lowered.as_text())
+                n_p = len(jax.tree_util.tree_leaves(params_struct))
+                n_o = len(jax.tree_util.tree_leaves(opt_struct))
+                cell = f"{arch}/{shape_name}"
+                buf_findings = donation_findings(
+                    infos, n_params=n_p, n_opt=n_o, where=cell)
+                buf_findings += replication_findings(
+                    infos, n_params=n_p, n_opt=n_o, n_shards=chips,
+                    where=cell)
+                audit_report.extend(buf_findings)
+                from repro.sharding import per_shard_bytes
+
+                audit_report.summary["buffers"] = {
+                    "donated_args": sum(a.aliased for a in infos),
+                    "expected_donated": n_p + n_o,
+                    "total_args": len(infos),
+                    # static per-shard (not per-replica) footprint under the
+                    # param rules — the number RA605 keeps honest
+                    "params_bytes_per_shard": per_shard_bytes(
+                        params_struct, mesh),
+                    "opt_state_bytes_per_shard": per_shard_bytes(
+                        opt_struct, mesh),
+                }
+                result["audit"] = audit_report.to_json()
+                print(f"  buffers: donated "
+                      f"{audit_report.summary['buffers']['donated_args']}"
+                      f"/{n_p + n_o} args alias outputs", flush=True)
+                for f in buf_findings:
+                    print("  " + f.format().replace("\n", "\n  "),
+                          flush=True)
         elif shape.kind == "prefill":
             batch = batch_struct(cfg, shape)
             batch_sh = batch_shardings(cfg, shape, mesh)

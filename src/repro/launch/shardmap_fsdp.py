@@ -59,13 +59,15 @@ def make_shardmap_train_step(
         # optimization_barrier pins the convert: without it XLA's
         # excess-precision pass re-promotes the all-reduce to fp32
         # (convert-around-collective reassociation), silently undoing the
-        # 2x wire saving.
+        # 2x wire saving.  The psum is tree-level on purpose — one
+        # multi-operand reduction for the whole gradient, not one per leaf,
+        # which is both fewer collectives on the wire and the exact
+        # "one gradient reduction per steady-state step" contract the
+        # collective-schedule auditor (repro.analysis.collectives) asserts.
         loss, grads = jax.value_and_grad(local_loss)(params, batch)
         grads = jax.tree_util.tree_map(lambda g: g.astype(reduce_dtype), grads)
         grads = jax.lax.optimization_barrier(grads)
-        grads = jax.tree_util.tree_map(
-            lambda g: jax.lax.psum(g, data_axis), grads
-        )
+        grads = jax.lax.psum(grads, data_axis)
         grads = jax.lax.optimization_barrier(grads)
         loss = jax.lax.pmean(loss, data_axis)
         return loss, grads
@@ -110,5 +112,18 @@ def make_shardmap_train_step(
             out_shardings=(psh, osh, None),
             donate_argnums=(0, 1),
         )
+
+    # Static contract read by the collective/buffer auditor
+    # (repro.analysis.collectives / .buffers): the declared reduction dtype,
+    # mesh axis, shard count and donation wiring this step was built with.
+    step_info = {
+        "reduce_dtype": jnp.dtype(reduce_dtype),
+        "data_axis": data_axis,
+        "n_shards": int(n_shards),
+        "grad_clip": float(grad_clip),
+        "donate_argnums": (0, 1),
+    }
+    train_step.sharded_step_info = step_info
+    jit_step.sharded_step_info = step_info
 
     return train_step, jit_step

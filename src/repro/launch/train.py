@@ -3,18 +3,18 @@
 Runs a real training loop on whatever devices exist (CPU here, TPU pod in
 production — the mesh flag switches pjit on).  For the production meshes use
 dryrun.py first to verify the cell compiles and fits.
+
+``--audit`` runs the full static audit before step 0 (chain lint, launch
+model, dtype flow, recompile hazards, and — when ``--mesh`` is set — the
+sharded collective-schedule and donation/buffer passes) and exits non-zero
+on any error finding, so a misconfigured launch dies before it burns a
+single step.  ``--mesh data=8`` trains pjit'ed over a data mesh, forcing
+host CPU devices when the backend has fewer.
 """
 from __future__ import annotations
 
 import argparse
-
-import jax
-
-from repro.configs import RunConfig, get_config, get_smoke
-from repro.core import OptimizerConfig
-from repro.data import DataConfig
-from repro.models import build_model
-from repro.train import Trainer
+import sys
 
 
 def main():
@@ -63,7 +63,36 @@ def main():
                     help="comma-separated ranks an adaptive policy may emit, "
                          "e.g. 32,64,128 (bounds recompilation; empty = "
                          "powers of two up to --rank)")
+    ap.add_argument("--mesh", default="", metavar="AXIS=N",
+                    help="train pjit'ed over a data mesh, e.g. data=8 "
+                         "(forces host CPU devices when the backend has "
+                         "fewer; production passes the real device mesh)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the full static audit — including the sharded "
+                         "collective/buffer passes when --mesh is set — "
+                         "before step 0, exiting non-zero on any error "
+                         "finding (parity with dryrun.py --audit)")
     args = ap.parse_args()
+
+    # device forcing must precede the first jax backend use below
+    mesh_axes = None
+    if args.mesh:
+        from repro.analysis.audit import _parse_mesh
+        from repro.launch.devices import force_host_device_count
+
+        mesh_axes = _parse_mesh(args.mesh)
+        total = 1
+        for _, size in mesh_axes:
+            total *= size
+        force_host_device_count(total)
+
+    import jax
+
+    from repro.configs import RunConfig, get_config, get_smoke
+    from repro.core import OptimizerConfig
+    from repro.data import DataConfig
+    from repro.models import build_model
+    from repro.train import Trainer
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -83,7 +112,37 @@ def main():
         vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
         num_hosts=jax.process_count(), host_id=jax.process_index(),
     )
-    trainer = Trainer(model, opt_cfg, run_cfg, data_cfg,
+
+    mesh = None
+    if mesh_axes is not None:
+        sizes = tuple(size for _, size in mesh_axes)
+        names = tuple(axis for axis, _ in mesh_axes)
+        mesh = jax.make_mesh(sizes, names)
+
+    if args.audit:
+        # The full static audit of exactly what is about to train, before
+        # step 0: chain lint + launch model + dtype flow + recompile pass on
+        # the optimizer, and — when a mesh is configured — the sharded
+        # collective-schedule / donation / per-shard-buffer passes.  Any
+        # error finding aborts the launch (parity with dryrun.py --audit).
+        from repro.analysis import audit_optimizer, audit_sharded
+
+        params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        reports = [audit_optimizer(opt_cfg, params_abs,
+                                   ladder=opt_cfg.rank_ladder)]
+        if mesh_axes is not None:
+            reports.append(audit_sharded(
+                opt_cfg, model=model, mesh_axes=mesh_axes,
+                grad_clip=run_cfg.grad_clip,
+                batch_size=args.batch))
+        for rep in reports:
+            print(rep.format(), flush=True)
+        if not all(rep.ok for rep in reports):
+            print("audit: error finding(s) before step 0 — not training",
+                  flush=True)
+            sys.exit(1)
+
+    trainer = Trainer(model, opt_cfg, run_cfg, data_cfg, mesh=mesh,
                       microbatches=args.microbatches)
     result = trainer.train()
     print(

@@ -169,6 +169,34 @@ def named_sharding_tree(params: Any, mesh: Mesh) -> Any:
     )
 
 
+def per_shard_bytes(tree: Any, mesh: Mesh) -> int:
+    """Static bytes ONE device holds for ``tree`` sharded under the param
+    rules on ``mesh`` — nbytes divided by the shard count of every resolved
+    (and divisibility-surviving) spec axis.  Works on ShapeDtypeStructs;
+    this is the per-SHARD number the analysis buffer pass (RA605) checks
+    runtime shardings against, not the per-replica total."""
+    from repro.core.api import tree_paths  # local import to avoid cycles
+
+    paths = tree_paths(tree)
+    total = 0
+    for path, x in zip(jax.tree_util.tree_leaves(paths),
+                       jax.tree_util.tree_leaves(tree)):
+        if not hasattr(x, "shape"):
+            continue
+        nelem = 1
+        for d in x.shape:
+            nelem *= int(d)
+        nbytes = nelem * jax.numpy.dtype(x.dtype).itemsize
+        spec = validate_spec(x.shape,
+                             resolve_spec(spec_for_param(path, x), mesh),
+                             mesh)
+        shards = 1
+        for ax in spec:
+            shards *= _axis_size(ax, mesh)
+        total += nbytes // max(shards, 1)
+    return total
+
+
 def opt_state_sharding(opt_state: Any, mesh: Mesh) -> Any:
     """Sharding for optimizer states.  State leaves live under the param path
     they belong to (e.g. families/blocks/attn/wq/r_low), so the param rules

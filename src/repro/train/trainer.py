@@ -175,6 +175,30 @@ class Trainer:
 
             print(audit_summary(self.optimizer, params,
                                 name=self.opt_cfg.name), flush=True)
+            if self.mesh is not None:
+                # Mesh run: also verify the jitted step's donation wiring on
+                # the lowered module (donated params/opt_state must alias
+                # outputs — losing it double-buffers the whole model).
+                from repro.analysis import donation_findings, parse_main_args
+
+                opt_state0 = jax.eval_shape(self.optimizer.init, params)
+                batch0 = {"tokens": jax.ShapeDtypeStruct(
+                    (self.data_cfg.global_batch
+                     // max(self.data_cfg.num_hosts, 1),
+                     self.data_cfg.seq_len), jnp.int32)}
+                infos = parse_main_args(
+                    self._jit_step(params, opt_state0)
+                    .lower(params, opt_state0, batch0).as_text())
+                n_donate = (len(jax.tree_util.tree_leaves(params))
+                            + len(jax.tree_util.tree_leaves(opt_state0)))
+                print(f"audit[{self.opt_cfg.name}]: mesh donation "
+                      f"{sum(a.aliased for a in infos)}/{n_donate} args "
+                      f"alias outputs", flush=True)
+                for f in donation_findings(
+                        infos, n_params=len(jax.tree_util.tree_leaves(params)),
+                        n_opt=len(jax.tree_util.tree_leaves(opt_state0)),
+                        where=self.opt_cfg.name):
+                    print("  " + f.format(), flush=True)
         except Exception as e:  # pragma: no cover - diagnostics only
             print(f"audit[{self.opt_cfg.name}]: unavailable "
                   f"({type(e).__name__}: {e})", flush=True)

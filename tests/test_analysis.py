@@ -98,7 +98,7 @@ def test_assert_launches_raises_on_mismatch():
                                            "back_project": 3}):
             jax.make_jaxpr(lambda g, s, p: t.update(g, s, p))(
                 PARAMS, state, PARAMS)
-    with pytest.raises(ValueError, match="unknown dispatch op"):
+    with pytest.raises(ValueError, match="unknown op"):
         with launch_count.assert_launches({"warp_drive": 1}):
             pass
 
@@ -362,3 +362,253 @@ def test_launch_model_counts_both_unbias_branches_when_q_lt_1():
     with launch_count.assert_launches(expected):
         jax.make_jaxpr(lambda g, s, w: t.update(g, s, w))(
             lead_params, state, lead_params)
+
+
+# ------------------------------------------- sharded audit (RA6xx, PR 7)
+# The clean path is covered at mesh 1/2/8 via the AbstractMesh trace (no
+# devices needed); every RA6xx code then gets a doctored failing case.
+
+
+from repro.analysis import (  # noqa: E402  (section-local imports)
+    ArgInfo,
+    CollectiveRecord,
+    audit_sharded,
+    collective_schedule_findings,
+    donation_findings,
+    expected_collective_schedule,
+    parse_main_args,
+    per_shard_memory,
+    replication_findings,
+    trace_sharded_step,
+    wire_bytes_model,
+)
+
+
+def _rec(**kw):
+    base = dict(primitive="psum", axes=("data",), dtypes=("bfloat16",),
+                shapes=((64, 64),), n_operands=1, payload_bytes=8192,
+                under_cond=False, pinned=True, path=("shard_map",))
+    base.update(kw)
+    return CollectiveRecord(**base)
+
+
+def _sharded_expected(n_leaves=1, payload=8192):
+    return {
+        "grad_psum": {"count": 1, "dtype": "bfloat16",
+                      "operands": n_leaves, "payload_bytes": payload,
+                      "axis": "data", "phase": "steady"},
+        "loss_psum": {"count": 1, "dtype": "float32", "operands": 1,
+                      "payload_bytes": 4, "axis": "data",
+                      "phase": "steady"},
+        "boundary_gather": {"count": 0, "families": 0, "payload_bytes": 0,
+                            "phase": "boundary"},
+        "n_shards": 2,
+    }
+
+
+_LOSS = dict(dtypes=("float32",), shapes=((),), payload_bytes=4,
+             pinned=False)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 8])
+def test_sharded_audit_clean_static_matches_traced(n_shards):
+    """Acceptance: the traced shard_map step matches the closed-form
+    schedule on 1/2/8-way meshes — one reduce_dtype gradient psum over
+    every param leaf plus one scalar f32 loss psum, nothing else.
+    AbstractMesh trace: runs with however many devices the host has."""
+    cfg = OptimizerConfig(name="gum", rank=8, period=5, gamma=1,
+                          kernel_impl="jnp")
+    rep = audit_sharded(cfg, mesh_axes=(("data", n_shards),), lower=False)
+    assert rep.ok, [f.format() for f in rep.errors]
+    exp = rep.summary["expected_schedule"]
+    assert exp["grad_psum"]["count"] == 1
+    assert exp["grad_psum"]["dtype"] == "bfloat16"
+    wire = rep.summary["wire"]
+    if n_shards == 1:
+        assert wire["steady_bytes_per_step"] == 0
+    else:
+        # ring psum: 2(N-1)/N bytes on the wire per payload byte
+        payload = (exp["grad_psum"]["payload_bytes"]
+                   + exp["loss_psum"]["payload_bytes"])
+        want = int(exp["grad_psum"]["payload_bytes"]
+                   * 2 * (n_shards - 1) / n_shards) + int(
+                       exp["loss_psum"]["payload_bytes"]
+                       * 2 * (n_shards - 1) / n_shards)
+        assert wire["steady_bytes_per_step"] == want, (wire, payload)
+
+
+def test_trace_sharded_step_schedule_shape():
+    """The raw trace on an 8-way AbstractMesh: exactly two steady psums —
+    the multi-operand bf16 gradient reduction (barrier-pinned) and the
+    scalar f32 loss pmean."""
+    from repro.analysis.audit import arch_model
+
+    model = arch_model("llama-60m-smoke")
+    t = build_optimizer(OptimizerConfig(name="adamw", lr=1e-3))
+    _, records, counts, (params, _, _) = trace_sharded_step(
+        model, t, n_shards=8)
+    psums = [r for r in records if r.primitive == "psum"]
+    assert len(psums) == 2
+    grad = next(r for r in psums if not r.scalar_only)
+    loss = next(r for r in psums if r.scalar_only)
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    assert grad.n_operands == n_leaves
+    assert grad.dtypes == ("bfloat16",) and grad.pinned
+    assert loss.dtypes == ("float32",)
+    assert counts["psum"] == 2
+
+
+def test_ra601_wide_dtype_on_wire():
+    recs = [_rec(dtypes=("float32",), payload_bytes=16384), _rec(**_LOSS)]
+    fs = collective_schedule_findings(recs, _sharded_expected())
+    assert "RA601" in codes(fs)
+    assert "float32" in _msg(fs, "RA601")
+
+
+def test_ra601_unpinned_narrow_reduction():
+    """bf16 psum without the optimization_barrier pin: XLA may re-promote
+    it — the structural def-use check fires even though the jaxpr dtype
+    still says bf16."""
+    recs = [_rec(pinned=False), _rec(**_LOSS)]
+    fs = collective_schedule_findings(recs, _sharded_expected())
+    assert "RA601" in codes(fs)
+    assert "barrier" in _msg(fs, "RA601")
+
+
+def test_ra602_unconditional_boundary_collective():
+    recs = [_rec(), _rec(**_LOSS),
+            _rec(primitive="all_gather", shapes=((8, 16),),
+                 payload_bytes=512, pinned=False)]
+    fs = collective_schedule_findings(recs, _sharded_expected())
+    assert "RA602" in codes(fs)
+
+
+def test_ra603_full_gradient_gather_in_steady_state():
+    params = {"w": jax.ShapeDtypeStruct((64, 64), jnp.float32)}
+    recs = [_rec(), _rec(**_LOSS),
+            _rec(primitive="all_gather", shapes=((64, 64),),
+                 payload_bytes=16384, pinned=False)]
+    fs = collective_schedule_findings(recs, _sharded_expected(),
+                                      params=params)
+    assert "RA603" in codes(fs)
+    assert "RA602" not in codes(fs)
+
+
+def test_ra606_schedule_divergence():
+    # two gradient psums where the model says one (per-leaf reduction crept
+    # back in)
+    recs = [_rec(), _rec(), _rec(**_LOSS)]
+    fs = collective_schedule_findings(recs, _sharded_expected())
+    assert "RA606" in codes(fs)
+    # missing loss pmean
+    fs = collective_schedule_findings([_rec()], _sharded_expected())
+    assert "RA606" in codes(fs)
+
+
+_ALIASED = ('%arg{i}: tensor<{t}> {{tf.aliasing_output = {i} : i32, '
+            'mhlo.sharding = "{{replicated}}"}}')
+_PLAIN = '%arg{i}: tensor<{t}>'
+_SHARDED = ('%arg{i}: tensor<{t}> '
+            '{{mhlo.sharding = "{{devices=[2,1]<=[2]}}"}}')
+
+
+def _module(arg_chunks):
+    return ("module @jit_step {\n  func.func public @main("
+            + ", ".join(arg_chunks) + ") -> (tensor<4x4xf32>) {}\n}")
+
+
+def test_parse_main_args_and_donation_clean():
+    txt = _module([
+        _ALIASED.format(i=0, t="4x4xf32"),
+        _ALIASED.format(i=1, t="4x4xf32"),
+        _SHARDED.format(i=2, t="8x16xi32"),
+    ])
+    args = parse_main_args(txt)
+    assert [a.aliased for a in args] == [True, True, False]
+    assert args[0].nbytes == 64 and args[2].dtype == "i32"
+    assert not args[2].replicated
+    assert donation_findings(args, n_params=1, n_opt=1) == []
+    assert replication_findings(args, n_params=1, n_opt=1, n_shards=2) == []
+
+
+def test_ra604_lost_donation():
+    txt = _module([
+        _ALIASED.format(i=0, t="4x4xf32"),
+        _PLAIN.format(i=1, t="4x4xf32"),      # opt-state leaf, not aliased
+        _SHARDED.format(i=2, t="8x16xi32"),
+    ])
+    fs = donation_findings(parse_main_args(txt), n_params=1, n_opt=1)
+    assert codes(fs) == {"RA604"}
+    assert "opt_state" in _msg(fs, "RA604")
+
+
+def test_ra605_replicated_batch():
+    txt = _module([
+        _ALIASED.format(i=0, t="4x4xf32"),
+        _ALIASED.format(i=1, t="4x4xf32"),
+        _PLAIN.format(i=2, t="8x16xi32"),     # batch with no sharding attr
+    ])
+    fs = replication_findings(parse_main_args(txt), n_params=1, n_opt=1,
+                              n_shards=2)
+    assert codes(fs) == {"RA605"}
+    # mesh of 1: replication is the only option, not a finding
+    assert replication_findings(parse_main_args(txt), n_params=1, n_opt=1,
+                                n_shards=1) == []
+
+
+def test_wire_bytes_ring_coefficients():
+    recs = [_rec(payload_bytes=1000),
+            _rec(primitive="all_gather", payload_bytes=1000, pinned=False,
+                 under_cond=True)]
+    m = wire_bytes_model(recs, 8)
+    assert m["steady_bytes_per_step"] == int(1000 * 2 * 7 / 8)
+    assert m["boundary_bytes"] == int(1000 * 7 / 8)
+    assert wire_bytes_model(recs, 1)["steady_bytes_per_step"] == 0
+
+
+def test_per_shard_memory_model():
+    params = {"w": jax.ShapeDtypeStruct((64, 64), jnp.float32)}
+    opt = {"mu": jax.ShapeDtypeStruct((64, 64), jnp.float32)}
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    m = per_shard_memory(params, opt, batch, n_shards=8)
+    assert m["params_bytes"] == 64 * 64 * 4
+    assert m["grad_bytes_fp32"] == 64 * 64 * 4
+    assert m["grad_wire_bytes"] == 64 * 64 * 2     # bf16 wire copy
+    assert m["batch_bytes_per_shard"] == 8 * 16 * 4 // 8
+    assert m["peak_bytes_per_shard"] == sum(
+        m[k] for k in ("params_bytes", "opt_state_bytes", "grad_bytes_fp32",
+                       "grad_wire_bytes", "batch_bytes_per_shard"))
+
+
+def test_expected_schedule_counts_families():
+    t = build_optimizer(OptimizerConfig(name="gum", rank=8, period=5,
+                                        gamma=1, kernel_impl="jnp",
+                                        fuse_families=True))
+    exp = expected_collective_schedule(t, PARAMS, n_shards=4)
+    assert exp["grad_psum"]["operands"] == len(
+        jax.tree_util.tree_leaves(PARAMS))
+    assert exp["boundary_gather"]["count"] == 0
+    assert exp["boundary_gather"]["families"] == 3
+
+
+def test_per_shard_bytes_divides_by_mesh():
+    """sharding.per_shard_bytes charges per-shard, not per-replica: a 2-D
+    fsdp-sharded matrix divides by the data-axis size, a 1-D norm vector
+    (replicated by rule) does not."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.sharding import per_shard_bytes
+
+    devs = np.asarray(jax.devices()[:1]).reshape(1)
+    mesh = Mesh(devs, ("data",))
+    tree = {"layers/0/attn/wq": jax.ShapeDtypeStruct((64, 64), jnp.float32),
+            "norm/scale": jax.ShapeDtypeStruct((64,), jnp.float32)}
+    # 1-way mesh: nothing divides
+    assert per_shard_bytes(tree, mesh) == 64 * 64 * 4 + 64 * 4
+
+    class FakeMesh:
+        axis_names = ("data",)
+        shape = {"data": 4}
+
+    assert per_shard_bytes(tree, FakeMesh()) == 64 * 64 * 4 // 4 + 64 * 4

@@ -35,6 +35,10 @@ def test_run_py_smoke_executes_all_suites(tmp_path):
     assert "launches=" in out
     # the audit-matrix suite audited its smoke cells clean
     assert "audit_gum," in out and ",clean" in out
+    # ...including the sharded collective-schedule cell (AbstractMesh trace,
+    # so it runs identically with however many devices the runner has)
+    assert "audit_sharded_gum_mesh8," in out
+    assert "steady_wire_bytes=" in out
     # registered suites all have their result JSONs committed
     assert "WARNING: suite" not in res.stderr
     # no result JSONs written in smoke mode (cwd is a scratch dir anyway)

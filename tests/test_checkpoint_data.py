@@ -54,8 +54,8 @@ def test_elastic_reshard_on_load(tmp_path):
     """Save on one mesh shape, restore onto a different one (in a subprocess
     with 8 fake devices so meshes exist)."""
     script = f"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.launch.devices import force_host_device_count
+force_host_device_count(8)  # shared helper: preserves other XLA_FLAGS
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager

@@ -1,7 +1,10 @@
-"""The combinator redesign (PR 2): loss-for-loss equivalence of the
-combinator-built optimizers against the frozen pre-redesign monoliths
-(repro.core.legacy), Table-1 memory regression via state_bytes, the new
-unbiased GaLore-Adam composition, and custom-chain composition."""
+"""The combinator redesign (PR 2): Table-1 memory regression via
+state_bytes, the new unbiased GaLore-Adam composition, and custom-chain
+composition.  The pre-redesign-monolith equivalence guarantee lives in
+tests/test_legacy_fixtures.py as recorded trajectories
+(tests/data/legacy_trajectories.json) — the live monoliths
+(core/legacy.py) were deleted in PR 7 after the soak the ROADMAP
+scheduled."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,7 +18,6 @@ from repro.core import (
     chain,
     combinators,
     layerwise_unbias,
-    legacy,
     lowrank,
     scale_by_adam,
     scale_by_lr,
@@ -56,75 +58,27 @@ def run_traj(opt, params=PARAMS, steps=8):
     return p, losses, st
 
 
-# --------------------------------------------------------- equivalence suite
+# ---------------------------------------------------------- interpret parity
 
 
-def _builder_pairs(kernel_impl):
-    kw = dict(kernel_impl=kernel_impl)
-    return [
-        ("gum",
-         core.gum(1e-2, rank=4, gamma=1, period=3, seed=5, weight_decay=0.01, **kw),
-         legacy.gum(1e-2, rank=4, gamma=1, period=3, seed=5, weight_decay=0.01, **kw)),
-        ("gum_finetune_sgdm",
-         core.gum(1e-2, rank=4, gamma=1, period=3, seed=7, base="sgdm",
-                  compensation="finetune", **kw),
-         legacy.gum(1e-2, rank=4, gamma=1, period=3, seed=7, base="sgdm",
-                    compensation="finetune", **kw)),
-        ("galore",
-         core.galore(1e-2, rank=4, period=3, **kw),
-         legacy.galore(1e-2, rank=4, period=3, **kw)),
-        ("galore_muon",
-         core.galore(1e-2, rank=4, period=3, base="muon", weight_decay=0.01, **kw),
-         legacy.galore(1e-2, rank=4, period=3, base="muon", weight_decay=0.01, **kw)),
-        ("golore",
-         core.golore(1e-2, rank=4, period=3, seed=2, **kw),
-         legacy.golore(1e-2, rank=4, period=3, seed=2, **kw)),
-        ("fira",
-         core.fira(1e-2, rank=4, period=3, **kw),
-         legacy.fira(1e-2, rank=4, period=3, **kw)),
-        ("muon",
-         core.muon(1e-2, weight_decay=0.01, **kw),
-         legacy.muon(1e-2, weight_decay=0.01, **kw)),
-    ]
-
-
-@pytest.mark.parametrize("idx", range(7))
-def test_equivalence_jnp(idx):
-    """Acceptance: combinator-built optimizers reproduce the pre-redesign
-    trajectories loss-for-loss on the jnp path (bit-level in practice)."""
-    name, new, old = _builder_pairs("jnp")[idx]
-    p_new, l_new, _ = run_traj(new)
-    p_old, l_old, _ = run_traj(old)
-    np.testing.assert_allclose(l_new, l_old, rtol=1e-6, err_msg=name)
-    for a, b in zip(jax.tree_util.tree_leaves(p_new),
-                    jax.tree_util.tree_leaves(p_old)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   atol=1e-6, rtol=1e-6, err_msg=name)
-
-
-@pytest.mark.parametrize("idx", [0, 3])  # gum, galore_muon: the kernel users
-def test_equivalence_interpret(idx):
-    """Same trajectories through the Pallas interpreter.  The legacy
-    monoliths back-projected with a plain einsum while the combinators route
-    it through the new fused back_project kernel, so parity here is fp32
-    roundoff, not bit-level."""
-    name, new, old = _builder_pairs("interpret")[idx]
-    p_new, l_new, _ = run_traj(new, steps=5)
-    p_old, l_old, _ = run_traj(old, steps=5)
+@pytest.mark.parametrize("name,builder", [
+    ("gum", lambda kw: core.gum(1e-2, rank=4, gamma=1, period=3, seed=5,
+                                weight_decay=0.01, **kw)),
+    ("galore_muon", lambda kw: core.galore(1e-2, rank=4, period=3,
+                                           base="muon", weight_decay=0.01,
+                                           **kw)),
+])
+def test_jnp_vs_interpret_parity(name, builder):
+    """The kernel-using optimizers produce the same trajectory through the
+    Pallas interpreter as on the jnp reference path (fp32 roundoff — the
+    interpreter routes back-projection through the fused kernel)."""
+    p_new, l_new, _ = run_traj(builder(dict(kernel_impl="interpret")), steps=5)
+    p_old, l_old, _ = run_traj(builder(dict(kernel_impl="jnp")), steps=5)
     np.testing.assert_allclose(l_new, l_old, rtol=1e-4, err_msg=name)
     for a, b in zip(jax.tree_util.tree_leaves(p_new),
                     jax.tree_util.tree_leaves(p_old)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=2e-4, rtol=2e-4, err_msg=name)
-
-
-def test_adamw_sgdm_equivalence():
-    for name in ("adamw", "sgdm"):
-        new = (core.adamw if name == "adamw" else core.sgdm)(1e-2, weight_decay=0.01)
-        old = (legacy.adamw if name == "adamw" else legacy.sgdm)(1e-2, weight_decay=0.01)
-        p_new, l_new, _ = run_traj(new)
-        p_old, l_old, _ = run_traj(old)
-        np.testing.assert_allclose(l_new, l_old, rtol=1e-6, err_msg=name)
 
 
 def test_factory_returns_combinator_chains():
@@ -267,16 +221,14 @@ def test_with_matrix_routing_custom_filter():
 def test_layerwise_unbias_q1_skips_low_branch():
     """gamma >= L (q = 1, e.g. an unstacked 2-D matrix under the default
     gamma=2): every block is sampled full-rank, so the low branch carries no
-    state and does no work — and the trajectory still matches legacy gum."""
+    state and does no work — and the optimizer still descends."""
     params = {"w": jax.random.normal(KEY, (10, 14)) * 0.3}  # L = 1
     new = core.gum_matrices(1e-2, rank=4, gamma=2, period=3, seed=5)
-    old = legacy.gum_matrices(1e-2, rank=4, gamma=2, period=3, seed=5)
     st = new.init(params)
     assert core.find_lowrank_states(st)[0].inner.low["w"] is None
     assert core.find_lowrank_states(st)[0].inner.full["w"].shape == (1, 10, 14)
-    p_new, l_new, _ = run_traj(new, params)
-    p_old, l_old, _ = run_traj(old, params)
-    np.testing.assert_allclose(l_new, l_old, rtol=1e-6)
+    _, l_new, _ = run_traj(new, params)
+    assert l_new[-1] < l_new[0], l_new
 
 
 def test_chain_inside_lowrank_forwards_protocol():

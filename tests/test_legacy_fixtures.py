@@ -1,18 +1,17 @@
 """Frozen-monolith equivalence baselines as committed fixtures.
 
-``tests/test_combinators.py`` proves the combinator chains match
-``repro.core.legacy`` by running both *live*.  That guard dies with
-``legacy.py`` — and legacy is scheduled to be deleted once nothing imports
-it.  This module freezes the monoliths' trajectories (per-step quadratic
-losses + final param norm, jnp path, 8 steps on the shared routing tree)
-into ``tests/data/legacy_trajectories.json`` and asserts:
+The pre-redesign monoliths (``repro.core.legacy``) were deleted in PR 7
+after the soak the ROADMAP scheduled.  Their trajectories (per-step
+quadratic losses + final param norm, jnp path, 8 steps on the shared
+routing tree) live on in ``tests/data/legacy_trajectories.json``, recorded
+while the monoliths were still importable.  This module asserts the
+combinator-built optimizers reproduce those recorded trajectories — the
+equivalence guard that outlives ``legacy.py`` itself.
 
-  1. the combinator-built optimizers reproduce the *recorded* trajectories
-     (the guard that survives legacy's deletion), and
-  2. while legacy still exists, it matches its own recording (fixture
-     staleness check).
-
-Regenerate after a deliberate trajectory change::
+The fixture is frozen history: regenerating it from the live builders
+(``--regen``) re-baselines after a *deliberate* trajectory change and
+forfeits the link back to the monoliths, so do it only with a reviewed
+diff of the JSON::
 
     PYTHONPATH=src python tests/test_legacy_fixtures.py --regen
 """
@@ -25,7 +24,7 @@ import numpy as np
 import pytest
 
 import repro.core as core
-from repro.core import apply_updates, global_norm, legacy
+from repro.core import apply_updates, global_norm
 
 FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "data", "legacy_trajectories.json")
@@ -43,37 +42,27 @@ PARAMS = {
 
 
 def builder_specs():
-    """(name, core builder, legacy builder) — the PR-2 equivalence matrix,
-    jnp path (the legacy monoliths' only fully shared impl)."""
+    """(name, core builder) — the PR-2 equivalence matrix, jnp path (the
+    only impl the deleted monoliths fully shared)."""
     kw = dict(kernel_impl="jnp")
     return [
         ("gum",
          lambda: core.gum(1e-2, rank=4, gamma=1, period=3, seed=5,
-                          weight_decay=0.01, **kw),
-         lambda: legacy.gum(1e-2, rank=4, gamma=1, period=3, seed=5,
-                            weight_decay=0.01, **kw)),
+                          weight_decay=0.01, **kw)),
         ("gum_finetune_sgdm",
          lambda: core.gum(1e-2, rank=4, gamma=1, period=3, seed=7,
-                          base="sgdm", compensation="finetune", **kw),
-         lambda: legacy.gum(1e-2, rank=4, gamma=1, period=3, seed=7,
-                            base="sgdm", compensation="finetune", **kw)),
+                          base="sgdm", compensation="finetune", **kw)),
         ("galore",
-         lambda: core.galore(1e-2, rank=4, period=3, **kw),
-         lambda: legacy.galore(1e-2, rank=4, period=3, **kw)),
+         lambda: core.galore(1e-2, rank=4, period=3, **kw)),
         ("galore_muon",
          lambda: core.galore(1e-2, rank=4, period=3, base="muon",
-                             weight_decay=0.01, **kw),
-         lambda: legacy.galore(1e-2, rank=4, period=3, base="muon",
-                               weight_decay=0.01, **kw)),
+                             weight_decay=0.01, **kw)),
         ("golore",
-         lambda: core.golore(1e-2, rank=4, period=3, seed=2, **kw),
-         lambda: legacy.golore(1e-2, rank=4, period=3, seed=2, **kw)),
+         lambda: core.golore(1e-2, rank=4, period=3, seed=2, **kw)),
         ("fira",
-         lambda: core.fira(1e-2, rank=4, period=3, **kw),
-         lambda: legacy.fira(1e-2, rank=4, period=3, **kw)),
+         lambda: core.fira(1e-2, rank=4, period=3, **kw)),
         ("muon",
-         lambda: core.muon(1e-2, weight_decay=0.01, **kw),
-         lambda: legacy.muon(1e-2, weight_decay=0.01, **kw)),
+         lambda: core.muon(1e-2, weight_decay=0.01, **kw)),
     ]
 
 
@@ -98,14 +87,14 @@ def _load():
         return json.load(f)
 
 
-NAMES = [name for name, _, _ in builder_specs()]
+NAMES = [name for name, _ in builder_specs()]
 
 
 @pytest.mark.parametrize("idx", range(len(NAMES)), ids=NAMES)
 def test_core_matches_recorded_legacy(idx):
     """Combinator chains reproduce the frozen monolith trajectories — the
     equivalence guard that outlives core/legacy.py itself."""
-    name, build_core, _ = builder_specs()[idx]
+    name, build_core = builder_specs()[idx]
     rec = _load()[name]
     losses, pnorm = run_traj(build_core())
     np.testing.assert_allclose(losses, rec["losses"], rtol=1e-5,
@@ -114,23 +103,10 @@ def test_core_matches_recorded_legacy(idx):
                                err_msg=name)
 
 
-@pytest.mark.parametrize("idx", range(len(NAMES)), ids=NAMES)
-def test_legacy_matches_its_recording(idx):
-    """While the monoliths still exist, they must agree with their own
-    fixture — catches silent edits to legacy.py or a stale recording."""
-    name, _, build_legacy = builder_specs()[idx]
-    rec = _load()[name]
-    losses, pnorm = run_traj(build_legacy())
-    np.testing.assert_allclose(losses, rec["losses"], rtol=1e-5,
-                               err_msg=name)
-    np.testing.assert_allclose(pnorm, rec["final_param_norm"], rtol=1e-5,
-                               err_msg=name)
-
-
 def _regen():
     out = {}
-    for name, _, build_legacy in builder_specs():
-        losses, pnorm = run_traj(build_legacy())
+    for name, build_core in builder_specs():
+        losses, pnorm = run_traj(build_core())
         out[name] = {"losses": losses, "final_param_norm": pnorm,
                      "steps": STEPS, "impl": "jnp"}
         print(f"{name}: final loss {losses[-1]:.6f}")

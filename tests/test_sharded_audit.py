@@ -1,0 +1,87 @@
+"""PR-7 acceptance: the sharded audit CLI catches exactly the regressions
+it was built for.  One subprocess (host forced to 8 CPU devices) runs
+``repro.analysis.audit.main`` three times in-process:
+
+  1. clean      — exit 0, no findings, donation verified on the lowered jit
+  2. barrier    — ``jax.lax.optimization_barrier`` patched to identity (the
+                  "delete the barrier" regression): exit 1 with RA601
+  3. donation   — ``jax.jit`` patched to drop ``donate_argnums``: exit 1
+                  with RA604
+
+plus the ``train.py --audit`` gate: the same doctored step must die before
+step 0 with a non-zero exit.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = """
+from repro.launch.devices import force_host_device_count
+force_host_device_count(8)
+import jax
+from repro.analysis import audit as audit_mod
+
+ARGS = ["--sharded", "--mesh", "data=8", "--optimizer", "gum"]
+
+rc_clean = audit_mod.main(ARGS)
+assert rc_clean == 0, f"clean sharded audit returned {rc_clean}"
+
+# regression 1: drop the optimization_barrier pin around the bf16 psum —
+# the auditor must flag the reduction as unpinned (RA601).
+orig_barrier = jax.lax.optimization_barrier
+jax.lax.optimization_barrier = lambda x: x
+try:
+    rc_barrier = audit_mod.main(ARGS)
+finally:
+    jax.lax.optimization_barrier = orig_barrier
+assert rc_barrier == 1, f"barrier-stripped audit returned {rc_barrier}"
+
+# regression 2: lose donate_argnums on the jit wrapper — the lowered module
+# stops aliasing params/opt_state and the buffer pass must fire (RA604).
+orig_jit = jax.jit
+def jit_no_donate(*a, **kw):
+    kw.pop("donate_argnums", None)
+    return orig_jit(*a, **kw)
+jax.jit = jit_no_donate
+try:
+    rc_donate = audit_mod.main(ARGS)
+finally:
+    jax.jit = orig_jit
+assert rc_donate == 1, f"donation-stripped audit returned {rc_donate}"
+
+print("SHARDED_AUDIT_ACCEPTANCE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_audit_catches_doctored_regressions(capfd):
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=REPO, timeout=600,
+    )
+    assert "SHARDED_AUDIT_ACCEPTANCE_OK" in r.stdout, (
+        r.stdout[-3000:] + r.stderr[-3000:])
+    # the doctored runs surfaced the right codes
+    assert "RA601" in r.stdout
+    assert "RA604" in r.stdout
+
+
+@pytest.mark.slow
+def test_train_audit_gate_runs_before_step_zero():
+    """``train.py --audit --mesh data=2`` runs the sharded audit and then
+    actually trains (exit 0 on the clean path)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "llama-60m",
+         "--smoke", "--opt", "adamw", "--steps", "2", "--batch", "8",
+         "--seq", "64", "--audit", "--mesh", "data=2", "--no-resume",
+         "--ckpt-dir", "/tmp/repro_ckpt_audit_test"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=REPO, timeout=600,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    assert "sharded:" in r.stdout      # the sharded audit report printed
+    assert "done: step=2" in r.stdout  # ...and training still ran after it

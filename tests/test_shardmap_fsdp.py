@@ -10,8 +10,8 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.launch.devices import force_host_device_count
+force_host_device_count(8)  # shared helper: preserves other XLA_FLAGS
 import re
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_smoke

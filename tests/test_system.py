@@ -121,8 +121,8 @@ def test_sharded_train_step_matches_single_device(tmp_path):
     """pjit on a (2,4) debug mesh must produce the same loss/params as the
     unsharded step (same inputs, same seed)."""
     script = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.launch.devices import force_host_device_count
+force_host_device_count(8)  # shared helper: preserves other XLA_FLAGS
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_smoke
 from repro.configs.base import ShapeConfig
@@ -167,7 +167,8 @@ def test_dryrun_cell_smoke():
     16x16 mesh): lower + compile must succeed and report roofline terms."""
     script = """
 import json, tempfile, os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.devices import force_host_device_count
+force_host_device_count(512, verify=False)  # shared helper
 from repro.launch.dryrun import run_cell
 res = run_cell("mamba2-370m", "decode_32k", multi_pod=False)
 assert res["status"] == "ok", res
