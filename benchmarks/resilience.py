@@ -1,0 +1,153 @@
+"""Resilience subsystem cost model: monitor overhead, rollback latency,
+checksum cost.
+
+Three questions with acceptance budgets (ISSUE 8):
+
+  monitor   — steady-state health-monitor overhead vs a bare run of the
+              same trainer (extra in-jit reductions + host detectors),
+              budget <= 2% of step time
+  rollback  — snapshot-ring capture and restore latency for the real
+              (params, opt_state) tree (host copy + re-upload), plus the
+              forced off-cycle refresh (rung 1) cost
+  checksum  — per-save cost of the manifest CRC32s
+              (CheckpointManager(checksums=True) vs False)
+
+Runs the pretrain-proxy setup (LLaMA-60M smoke, GUM) through the real
+Trainer so the measured loop is the shipping loop.  Writes
+BENCH_resilience.json unless BENCH_SMOKE=1.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import statistics
+import tempfile
+import time
+
+from _smoke import smoke, steps as smoke_steps
+
+STEPS = 60
+
+
+def _trainer(tmp, resilience, steps, batch=8, seq=128):
+    from repro.configs import RunConfig, get_smoke
+    from repro.core import OptimizerConfig
+    from repro.data import DataConfig
+    from repro.models import build_model
+    from repro.train import Trainer
+
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    return Trainer(
+        model,
+        OptimizerConfig(name="gum", lr=1e-3, rank=8, gamma=1, period=10),
+        RunConfig(steps=steps, ckpt_dir=tmp, ckpt_every=0, log_every=0,
+                  resume=False),
+        DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch),
+        resilience=resilience,
+    )
+
+
+def _median_step_us(trainer, steps) -> float:
+    trainer.monitor.times.clear()
+    trainer.train(steps)
+    times = list(trainer.monitor.times)
+    # drop the compile step(s): the monitor window already caps history,
+    # but the first recorded samples still straddle warmup
+    times = times[2:] or times
+    return statistics.median(times) * 1e6
+
+
+def main() -> None:
+    import jax
+
+    from repro.checkpoint import CheckpointManager
+    from repro.resilience.recovery import SnapshotRing, force_refresh
+
+    n = smoke_steps(STEPS, 2)
+    print("name,us_per_call,derived")
+    root = tempfile.mkdtemp(prefix="bench_resilience_")
+    try:
+        # --- monitor overhead (interleaved min-of-medians: the off/on
+        # trainers alternate inside each rep so load drift on a shared box
+        # hits both sides; min across reps rejects one-sided noise) -------
+        t_off = _trainer(os.path.join(root, "off"), None, n)
+        t_on = _trainer(os.path.join(root, "on"), "", n)
+        reps = 1 if smoke() else 3
+        offs, ons = [], []
+        for _ in range(reps):
+            offs.append(_median_step_us(t_off, n))
+            ons.append(_median_step_us(t_on, n))
+        us_off, us_on = min(offs), min(ons)
+        overhead = (us_on - us_off) / us_off * 100.0
+        print(f"resilience_step_monitor_off,{us_off:.0f},median")
+        print(f"resilience_step_monitor_on,{us_on:.0f},"
+              f"overhead={overhead:+.2f}%")
+
+        # --- rollback latency -------------------------------------------
+        params, opt_state = t_on.init_state()
+        ring = SnapshotRing(k=2)
+        t0 = time.time()
+        ring.add(0, params, opt_state)
+        snap_ms = (time.time() - t0) * 1e3
+        snap = ring.pop_latest()
+        t0 = time.time()
+        p2, s2 = ring.restore(snap)
+        jax.block_until_ready((p2, s2))
+        restore_ms = (time.time() - t0) * 1e3
+        t0 = time.time()
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(force_refresh(s2, 10))[0])
+        refresh_ms = (time.time() - t0) * 1e3
+        print(f"resilience_snapshot_capture,{snap_ms * 1e3:.0f},host_copy")
+        print(f"resilience_rollback_restore,{restore_ms * 1e3:.0f},reupload")
+        print(f"resilience_force_refresh,{refresh_ms * 1e3:.0f},rung1")
+
+        # --- checksum cost per save -------------------------------------
+        tree = (params, opt_state)
+        reps = 1 if smoke() else 5
+        save_ms = {}
+        for checks in (True, False):
+            d = os.path.join(root, f"ck_{checks}")
+            mgr = CheckpointManager(d, keep=2, checksums=checks)
+            ts = []
+            for i in range(reps):
+                t0 = time.time()
+                mgr.save(i, tree)
+                ts.append(time.time() - t0)
+            save_ms[checks] = statistics.median(ts) * 1e3
+        crc_ms = save_ms[True] - save_ms[False]
+        print(f"resilience_save_crc,{save_ms[True] * 1e3:.0f},per_save")
+        print(f"resilience_save_nocrc,{save_ms[False] * 1e3:.0f},per_save")
+        print(f"resilience_crc_cost,{crc_ms * 1e3:.0f},delta")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    if smoke():
+        return
+    out = {
+        "setup": {"arch": "llama-60m-smoke", "opt": "gum", "rank": 8,
+                  "period": 10, "steps": n, "device": jax.devices()[0]
+                  .platform},
+        "monitor": {"step_us_off": us_off, "step_us_on": us_on,
+                    "overhead_pct": overhead, "budget_pct": 2.0},
+        "rollback": {"snapshot_capture_ms": snap_ms,
+                     "restore_ms": restore_ms,
+                     "force_refresh_ms": refresh_ms},
+        "checksum": {"save_ms_crc": save_ms[True],
+                     "save_ms_nocrc": save_ms[False],
+                     "crc_cost_ms": crc_ms},
+    }
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir, "results", "BENCH_resilience.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    main()

@@ -25,6 +25,9 @@ test existed).
                               optimizer x fuse_families x fused_epilogue,
                               abstract tracing only (PR 6; writes
                               BENCH_audit_matrix.json)
+  resilience                — health-monitor overhead, snapshot/rollback
+                              latency, per-save checksum cost (PR 8;
+                              writes BENCH_resilience.json)
   kernel_micro              — per-kernel wall-time microbenchmarks (CPU
                               interpret/xla; indicative only, not TPU)
 """
@@ -94,6 +97,7 @@ SUITES = [
     "fused_step",
     "rank_policy",
     "audit_matrix",
+    "resilience",
 ]
 
 # Suites that commit a results/BENCH_*.json trajectory.  A registered suite
@@ -104,6 +108,7 @@ RESULT_JSON = {
     "fused_step": "BENCH_fused_step.json",
     "rank_policy": "BENCH_rank_policy.json",
     "audit_matrix": "BENCH_audit_matrix.json",
+    "resilience": "BENCH_resilience.json",
 }
 
 

@@ -1,26 +1,41 @@
-"""Sharded checkpointing with atomic commit and elastic restore.
+"""Sharded checkpointing with atomic commit, integrity checksums and
+elastic restore.
 
 Layout (one directory per step):
 
     <dir>/step_000123.tmp/          # written first
-        manifest.json               # pytree structure + per-leaf meta
+        manifest.json               # pytree structure + per-leaf meta + CRC32
         arr_<leaf_id>.shard<k>.npy  # per-host shard files
     <dir>/step_000123/              # atomic rename on success commit
 
 Fault-tolerance properties:
   * atomic rename — a crash mid-write never corrupts the latest checkpoint
     (readers only ever see committed directories)
-  * keep-last-N garbage collection
+  * **per-leaf CRC32 checksums** in the manifest, recomputed and verified on
+    every restore (``verify=False`` opts out); a truncated shard or a single
+    flipped bit raises :class:`CheckpointCorruptionError` instead of
+    restoring garbage
+  * ``latest_verified_step`` / ``restore_latest_verified`` walk committed
+    steps newest-first and skip corrupt ones — the automatic fallback the
+    resilience subsystem's ``restore`` rung relies on
+  * keep-last-N garbage collection that **never deletes the newest verified
+    checkpoint**: a corrupt/partial latest save does not count against the
+    only restorable step
   * ``latest_step`` skips uncommitted/partial directories
   * **elastic restore**: arrays are saved as logical (global-shape) content
     per host shard along axis 0 of the host's addressable data; on load they
     are re-assembled to the logical array and re-sharded onto whatever mesh
     the restoring job uses — scale-up/down across restarts "just works".
 
+``save(..., observer=...)`` calls ``observer(leaf_index, total)`` after each
+leaf is written — the hook :mod:`repro.resilience.inject` uses to kill the
+process mid-save in preemption tests (and a progress callback elsewhere).
+
 On a multi-host fleet each host writes only its addressable shards; in this
 single-process environment that degenerates to one shard per leaf, but the
-code paths (manifest, assembly, resharding) are the real ones and are
-exercised by tests/test_checkpoint.py including mesh-shape changes.
+code paths (manifest, assembly, resharding, verification) are the real ones.
+Checkpoints written before checksums existed restore fine (leaves without a
+recorded CRC are trusted as before).
 """
 from __future__ import annotations
 
@@ -28,7 +43,8 @@ import json
 import os
 import re
 import shutil
-from typing import Any, Optional
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +54,11 @@ PyTree = Any
 _STEP_RE = re.compile(r"^step_(\d{9})$")
 
 
+class CheckpointCorruptionError(ValueError):
+    """A committed checkpoint failed integrity verification (truncated
+    shard, checksum mismatch, unreadable manifest)."""
+
+
 def _leaf_paths(tree: PyTree) -> list[str]:
     from repro.core.api import tree_paths
 
@@ -45,10 +66,15 @@ def _leaf_paths(tree: PyTree) -> list[str]:
     return flat
 
 
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, checksums: bool = True):
         self.dir = directory
         self.keep = keep
+        self.checksums = checksums   # False skips CRC computation on save
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------- paths
@@ -70,8 +96,12 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- save
 
-    def save(self, step: int, tree: PyTree, *, extra: Optional[dict] = None) -> str:
-        """Write a committed checkpoint for ``step``; returns its path."""
+    def save(self, step: int, tree: PyTree, *, extra: Optional[dict] = None,
+             observer: Optional[Callable[[int, int], None]] = None) -> str:
+        """Write a committed checkpoint for ``step``; returns its path.
+
+        ``observer(leaf_index, total)`` fires after each leaf's shard hits
+        disk — fault-injection kill hooks and progress reporting."""
         final = self._step_dir(step)
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -91,15 +121,18 @@ class CheckpointManager:
             arr = np.asarray(jax.device_get(leaf))
             fname = f"arr_{i:05d}.shard{host}.npy"
             np.save(os.path.join(tmp, fname), arr)
-            manifest["leaves"].append(
-                {
-                    "id": i,
-                    "path": path,
-                    "shape": list(arr.shape),
-                    "dtype": str(arr.dtype),
-                    "shards": [fname],
-                }
-            )
+            meta = {
+                "id": i,
+                "path": path,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "shards": [fname],
+            }
+            if self.checksums:
+                meta["crc32"] = [_crc(arr)]
+            manifest["leaves"].append(meta)
+            if observer is not None:
+                observer(i, len(leaves))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -110,12 +143,79 @@ class CheckpointManager:
 
     def _gc(self):
         steps = self.all_steps()
-        for s in steps[: -self.keep] if self.keep > 0 else []:
+        doomed = steps[: -self.keep] if self.keep > 0 else []
+        if doomed:
+            # Never evict the newest VERIFIED checkpoint: if the latest
+            # save(s) are corrupt/partial they must not count toward
+            # ``keep`` — deleting the only restorable step would make the
+            # run unrecoverable.  The newest step usually verifies on the
+            # first try (we just wrote it), so this is one CRC pass over
+            # the latest checkpoint per save.
+            protect = None
+            for s in reversed(steps):
+                if self.verify_step(s):
+                    protect = s
+                    break
+            doomed = [s for s in doomed if s != protect]
+        for s in doomed:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
         # clean stale tmp dirs (crashed writers)
         for name in os.listdir(self.dir):
             if name.endswith(".tmp"):
                 shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+
+    # ------------------------------------------------------------- verify
+
+    def _manifest(self, step: int) -> dict:
+        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+            return json.load(f)
+
+    def verify_step(self, step: int) -> bool:
+        """Full integrity check of a committed checkpoint: every shard file
+        loads and matches its recorded CRC32 (legacy leaves without a CRC
+        just need to load with the recorded shape)."""
+        try:
+            self._verify(step)
+            return True
+        except (CheckpointCorruptionError, OSError):
+            return False
+
+    def _verify(self, step: int) -> None:
+        d = self._step_dir(step)
+        try:
+            manifest = self._manifest(step)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptionError(
+                f"step {step}: unreadable manifest ({e})") from e
+        for meta in manifest["leaves"]:
+            crcs = meta.get("crc32")
+            for k, fn in enumerate(meta["shards"]):
+                self._load_shard(d, meta, k, fn,
+                                 crcs[k] if crcs else None, step)
+
+    @staticmethod
+    def _load_shard(d: str, meta: dict, k: int, fn: str,
+                    crc: Optional[int], step: int) -> np.ndarray:
+        try:
+            arr = np.load(os.path.join(d, fn), allow_pickle=False)
+        except Exception as e:   # truncated/garbled .npy raises ValueError
+            raise CheckpointCorruptionError(
+                f"step {step}: shard {fn} of {meta['path']} unreadable "
+                f"({type(e).__name__}: {e})") from e
+        if crc is not None and _crc(arr) != crc:
+            raise CheckpointCorruptionError(
+                f"step {step}: checksum mismatch on {meta['path']} "
+                f"(shard {fn}) — the file is corrupt (bit flip / partial "
+                f"write); restore falls back to the previous verified step")
+        return arr
+
+    def latest_verified_step(self) -> Optional[int]:
+        """Newest committed step that passes full verification (the restore
+        anchor for the resilience ladder's last rung)."""
+        for s in reversed(self.all_steps()):
+            if self.verify_step(s):
+                return s
+        return None
 
     # ------------------------------------------------------------- load
 
@@ -124,8 +224,7 @@ class CheckpointManager:
         arrays — resume flows that must rebuild the restore template from
         saved metadata first (e.g. the rank-policy controller state, which
         determines the optimizer-state shapes) read this before ``restore``."""
-        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
-            return json.load(f)["extra"]
+        return self._manifest(step)["extra"]
 
     @staticmethod
     def _layout_mismatch_check(saved_paths, target_paths):
@@ -154,14 +253,22 @@ class CheckpointManager:
         like: PyTree,
         *,
         shardings: Optional[PyTree] = None,
+        verify: bool = True,
     ) -> tuple[PyTree, dict]:
         """Restore into the structure of ``like``.  ``shardings`` (optional
         pytree of NamedSharding) re-shards every leaf onto the *current* mesh
         — this is the elastic-scaling path: the saved mesh shape is
-        irrelevant because content is stored logically."""
+        irrelevant because content is stored logically.
+
+        ``verify=True`` (default) checks every shard against its manifest
+        CRC32 while loading and raises :class:`CheckpointCorruptionError`
+        on any mismatch — corrupted state never reaches the model."""
         d = self._step_dir(step)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        try:
+            manifest = self._manifest(step)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptionError(
+                f"step {step}: unreadable manifest ({e})") from e
 
         leaves_like, treedef = jax.tree_util.tree_flatten(like)
         # Layout check runs even at equal leaf counts: a fused-vs-per-leaf
@@ -182,9 +289,11 @@ class CheckpointManager:
 
         out = []
         for meta, ref, sh in zip(manifest["leaves"], leaves_like, shard_leaves):
+            crcs = meta.get("crc32") if verify else None
             parts = [
-                np.load(os.path.join(d, fn), allow_pickle=False)
-                for fn in meta["shards"]
+                self._load_shard(d, meta, k, fn,
+                                 crcs[k] if crcs else None, step)
+                for k, fn in enumerate(meta["shards"])
             ]
             arr = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
             if list(arr.shape) != list(ref.shape):
@@ -213,3 +322,18 @@ class CheckpointManager:
             return None
         tree, extra = self.restore(step, like, shardings=shardings)
         return step, tree, extra
+
+    def restore_latest_verified(self, like: PyTree,
+                                shardings: Optional[PyTree] = None):
+        """Restore the newest checkpoint that passes verification, walking
+        past corrupt ones (each skip is reported on stdout).  Returns
+        ``(step, tree, extra)`` or None when nothing restorable exists."""
+        for step in reversed(self.all_steps()):
+            try:
+                tree, extra = self.restore(step, like, shardings=shardings,
+                                           verify=True)
+                return step, tree, extra
+            except CheckpointCorruptionError as e:
+                print(f"checkpoint: skipping corrupt step {step} ({e})",
+                      flush=True)
+        return None

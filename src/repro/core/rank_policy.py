@@ -47,6 +47,7 @@ resume is exact even across a rank change).
 """
 from __future__ import annotations
 
+import copy
 from typing import Any, Callable, Optional
 
 import jax
@@ -595,15 +596,18 @@ class RankPolicyController:
         """JSON-serializable snapshot (rides in CheckpointManager extras) —
         restoring it before ``restore()`` makes resume exact across rank
         changes (the state template must be built at the saved map)."""
-        return {
+        # Deep-copied: pstate values can be nested (per-family floors/TTL
+        # dicts) — a snapshot that aliased them would mutate along with the
+        # live controller, breaking rollback.
+        return copy.deepcopy({
             "map": self._map.to_json(),
             "pstate": {k: (int(v) if isinstance(v, (bool, np.integer)) else v)
                        for k, v in self._pstate.items()},
             "history": [[s, m.to_json()] for s, m in self.history],
-        }
+        })
 
     def load_state_dict(self, d: dict) -> None:
         self._map = RankMap.from_json(d["map"])
-        self._pstate = dict(d.get("pstate", {}))
+        self._pstate = copy.deepcopy(dict(d.get("pstate", {})))
         self.history = [(int(s), RankMap.from_json(m))
                         for s, m in d.get("history", [])] or [(0, self._map)]

@@ -118,6 +118,8 @@ def make_train_step(
     grad_clip: float = 0.0,
     microbatches: int = 1,
     lowrank_accum=None,
+    fault_gate=None,
+    extra_metrics: bool = False,
 ):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
@@ -137,6 +139,35 @@ def make_train_step(
     kernel dispatch layer as the optimizer itself (``kernel_impl`` /
     ``pad_rank_to`` are threaded in by the caller, e.g. launch/dryrun.py),
     so accumulating steps lower the same hot path as plain training.
+
+    **Fault tolerance — the in-jit NaN/Inf guard (resilience rung 0).**
+    Buffers are donated to the jitted step, so by the time the host sees a
+    bad loss the old params/opt_state are gone — a non-finite loss or
+    gradient therefore has to be neutralized *inside* the step: the guard
+    zeroes the gradients AND the emitted updates and reverts every
+    optimizer-state array to its pre-step value (``jnp.where(finite, ...)``
+    elementwise), so a poisoned step is a pure no-op that still returns a
+    metrics dict (``update_applied=False``).  The low-rank step counter
+    does not advance on a skipped step, which keeps projector-refresh and
+    rank-policy boundaries aligned with *applied* updates.  Detection and
+    escalation beyond rung 0 (loss spikes, subspace collapse, rollback /
+    restore) live host-side in :mod:`repro.resilience` — see the README
+    "Resilience" section for the full fault→detector→recovery table.
+
+    ``fault_gate`` (a :class:`repro.resilience.inject.FaultGate`) compiles a
+    traced gradient-corruption gate into the step: the returned function
+    takes a fourth argument ``fault = {"mode": int32, "scale": float32}``
+    and corrupts the raw gradients pre-clip (mode 0 is elementwise-identical
+    to the stock step — arming a fault is a host value, not a recompile).
+
+    ``extra_metrics=True`` adds the health monitor's in-jit signals:
+    ``grad_norm_raw`` (pre-clip — reused as the clip's own norm, so it is
+    free when ``grad_clip`` is on), ``update_norm`` (global norm of the
+    applied parameter delta) and ``update_norm_lowrank`` (the same norm
+    restricted to the leaves ``default_lowrank_filter`` routes through the
+    low-rank stage — the dead-subspace detector's signal).  Both update
+    norms share one fused subtract-square-reduce pass over the delta, so
+    the whole monitor costs a single extra pass per step.
     """
     cfg = model.cfg
 
@@ -144,11 +175,15 @@ def make_train_step(
         return jax.value_and_grad(lambda p: _loss_from_batch(model, p, batch, cfg))(params)
 
     if lowrank_accum is not None and microbatches > 1:
+        if fault_gate is not None:
+            raise NotImplementedError(
+                "fault injection is not wired into the projected-space "
+                "accumulation step")
         return _make_lowrank_accum_step(
             model, lowrank_accum, single_grad, grad_clip, microbatches
         )
 
-    def train_step(params, opt_state, batch):
+    def _step(params, opt_state, batch, fault):
         if microbatches > 1:
             def slice_mb(x):
                 B = x.shape[0]
@@ -177,12 +212,23 @@ def make_train_step(
         else:
             loss, grads = single_grad(params, batch)
 
-        if grad_clip > 0:
-            grads = clip_by_global_norm(grads, grad_clip)
+        if fault_gate is not None:
+            grads = fault_gate.apply(grads, fault)
+        if extra_metrics:
+            # The clip computes this exact reduction internally; doing it
+            # here and clipping inline keeps grad_norm_raw free of an extra
+            # pass over the gradients (bit-identical to clip_by_global_norm).
+            gnorm_raw = core_api.global_norm(grads)
+            if grad_clip > 0:
+                scale = jnp.minimum(1.0, grad_clip / (gnorm_raw + 1e-12))
+                grads = jax.tree_util.tree_map(
+                    lambda g: g * scale.astype(g.dtype), grads)
+        else:
+            gnorm_raw = None
+            if grad_clip > 0:
+                grads = clip_by_global_norm(grads, grad_clip)
 
-        # NaN/Inf guard (fault tolerance): a non-finite loss or gradient
-        # skips the update *inside* the step (buffers are donated, so the
-        # host cannot roll back) — params/opt_state pass through unchanged.
+        # NaN/Inf guard — resilience rung 0; see the docstring above.
         gnorm = core_api.global_norm(grads)
         finite = jnp.isfinite(loss) & jnp.isfinite(gnorm)
         grads = jax.tree_util.tree_map(
@@ -198,11 +244,40 @@ def make_train_step(
             lambda new, old: jnp.where(finite, new, old) if hasattr(new, "shape") else new,
             new_opt_state, opt_state,
         )
-        params = apply_updates(params, updates)
+        new_params = apply_updates(params, updates)
         metrics = {"loss": loss.astype(jnp.float32),
                    "grad_norm": gnorm,
                    "update_applied": finite}
-        return params, opt_state, metrics
+        if extra_metrics:
+            from repro.core import default_lowrank_filter
+
+            metrics["grad_norm_raw"] = gnorm_raw
+            # One fused subtract-square-reduce pass per leaf; both norms
+            # combine the same per-leaf partial sums.
+            delta_sq = jax.tree_util.tree_map(
+                lambda a, b: jnp.sum(jnp.square((a - b).astype(jnp.float32))),
+                new_params, params)
+            metrics["update_norm"] = jnp.sqrt(
+                sum(jax.tree_util.tree_leaves(delta_sq)))
+            # Restricted to the leaves the low-rank stage treats
+            # (default_lowrank_filter): a dead subspace zeroes exactly these
+            # while embeddings/norms keep updating, so the global norm would
+            # mask the collapse.
+            lr_paths = core_api.tree_paths(new_params)
+            lr_sq = jax.tree_util.tree_map(
+                lambda p, s, a: s if default_lowrank_filter(p, a)
+                else jnp.zeros((), s.dtype),
+                lr_paths, delta_sq, new_params)
+            metrics["update_norm_lowrank"] = jnp.sqrt(
+                sum(jax.tree_util.tree_leaves(lr_sq)))
+        return new_params, opt_state, metrics
+
+    if fault_gate is not None:
+        def train_step(params, opt_state, batch, fault):
+            return _step(params, opt_state, batch, fault)
+    else:
+        def train_step(params, opt_state, batch):
+            return _step(params, opt_state, batch, None)
 
     return train_step
 

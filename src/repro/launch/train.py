@@ -67,6 +67,21 @@ def main():
                     help="train pjit'ed over a data mesh, e.g. data=8 "
                          "(forces host CPU devices when the backend has "
                          "fewer; production passes the real device mesh)")
+    ap.add_argument("--resilience", nargs="?", const="", default=None,
+                    metavar="SPEC",
+                    help="turn on the health monitor + recovery ladder "
+                         "(repro.resilience): bare flag = defaults, or a "
+                         "knob spec like 'ring=3,snapshot_every=5,spike_z=4' "
+                         "(any ResilienceConfig field)")
+    ap.add_argument("--inject", default=None, metavar="PLAN",
+                    help="deterministic fault injection (requires/implies "
+                         "nothing about --resilience; combine them to "
+                         "exercise recovery): 'kind@step[*scale][#arg];...' "
+                         "e.g. 'grad_nan@5;grad_spike@9*1e6;refresh_zero@13;"
+                         "ckpt_bitflip@20;kill_save@40#3'")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="seed for the fault plan's corruption RNG "
+                         "(bit positions etc.)")
     ap.add_argument("--audit", action="store_true",
                     help="run the full static audit — including the sharded "
                          "collective/buffer passes when --mesh is set — "
@@ -142,8 +157,15 @@ def main():
                   flush=True)
             sys.exit(1)
 
+    inject = None
+    if args.inject:
+        from repro.resilience import FaultPlan
+
+        inject = FaultPlan.parse(args.inject, seed=args.inject_seed)
+
     trainer = Trainer(model, opt_cfg, run_cfg, data_cfg, mesh=mesh,
-                      microbatches=args.microbatches)
+                      microbatches=args.microbatches,
+                      resilience=args.resilience, inject=inject)
     result = trainer.train()
     print(
         f"done: step={result.final_step} "
@@ -151,6 +173,11 @@ def main():
         f"skipped={result.skipped_nonfinite} stragglers={len(result.straggler_steps)}"
         + (f" resumed_from={result.resumed_from}" if result.resumed_from else "")
     )
+    if result.recovery_counts:
+        fired = {k: v for k, v in result.recovery_counts.items() if v}
+        print(f"resilience: recoveries={fired or '{}'} "
+              f"health_events={len(result.health_events)} "
+              f"faults_fired={len(result.fault_log)}")
 
 
 if __name__ == "__main__":

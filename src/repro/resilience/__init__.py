@@ -1,0 +1,62 @@
+"""Resilience subsystem: fault injection, training health, recovery.
+
+GUM's unbiasedness and convergence guarantees only hold for the steps that
+are actually *applied* — at pretraining scale, loss spikes, subspace
+collapse after a bad projector refresh, preemptions and corrupted
+checkpoints are routine.  This package makes the training loop survive them
+deterministically, in three parts wired through :class:`repro.train.Trainer`:
+
+:mod:`repro.resilience.inject`
+    a declarative, seeded :class:`FaultPlan` that gives every recovery path
+    a reproducible trigger — gradient corruption (NaN / Inf / spike) through
+    a traced :class:`FaultGate`, projector-refresh sabotage, checkpoint
+    truncation / bit-flips, and a mid-save process kill.
+
+:mod:`repro.resilience.health`
+    cheap in-jit signals (loss, raw/clipped gradient norm, update norm,
+    per-family captured energy from the ``probe_spectrum`` probes) feeding
+    host-side windowed detectors — z-score loss spike, monotone blowup,
+    dead-subspace collapse, non-finite skip — unified with the straggler
+    :class:`~repro.train.StepTimeMonitor` into one :class:`HealthReport`.
+
+:mod:`repro.resilience.recovery`
+    a declarative escalation ladder — skip step → force an off-cycle
+    projector refresh → roll back to an in-memory ring of last-K snapshots
+    → restore the last *verified* durable checkpoint — driven by
+    :class:`RecoveryController`, every event counted in ``TrainResult``.
+
+The checkpoint layer (:mod:`repro.checkpoint`) backs the last rung: atomic
+tmp+rename saves, per-leaf CRC32 checksums in the manifest, verify-on-
+restore, and automatic fallback to the previous verified step.
+"""
+from .health import HealthEvent, HealthMonitor, HealthReport
+from .inject import (
+    FaultEvent,
+    FaultGate,
+    FaultPlan,
+    bitflip_checkpoint,
+    poison_projectors,
+    truncate_checkpoint,
+)
+from .recovery import (
+    RecoveryController,
+    ResilienceConfig,
+    SnapshotRing,
+    force_refresh,
+)
+
+__all__ = [
+    "FaultEvent",
+    "FaultGate",
+    "FaultPlan",
+    "HealthEvent",
+    "HealthMonitor",
+    "HealthReport",
+    "RecoveryController",
+    "ResilienceConfig",
+    "SnapshotRing",
+    "bitflip_checkpoint",
+    "force_refresh",
+    "poison_projectors",
+    "truncate_checkpoint",
+]

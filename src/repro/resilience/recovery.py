@@ -1,0 +1,256 @@
+"""Recovery controller: a declarative escalation ladder over live training.
+
+The ladder (documented in README "Resilience"):
+
+    rung 0  ``skip``      the in-jit NaN/Inf guard already zeroed the
+                          update — count it; after ``max_skips``
+                          consecutive skips escalate to ``rollback``
+    rung 1  ``refresh``   force an off-cycle projector refresh: advance the
+                          ``lowrank()`` step count to the next period
+                          boundary so the very next update recomputes every
+                          projector from live gradients (clears a poisoned
+                          or collapsed subspace; GUM-style
+                          ``reset_on_refresh`` inners also re-zero momenta)
+    rung 2  ``rollback``  restore the last in-memory snapshot — params,
+                          optimizer state and controller extras (rank-policy
+                          state rides along so floors/TTLs don't desync) —
+                          and rewind the data stream to the snapshot step
+    rung 3  ``restore``   reload the last *verified* durable checkpoint
+                          through :class:`repro.checkpoint.CheckpointManager`
+                          (checksum-verified, falling back past corrupt
+                          saves)
+
+Each critical :class:`~repro.resilience.health.HealthEvent` kind enters the
+ladder at its base rung (see ``BASE_RUNG``); a further critical report
+within ``escalation_window`` steps of the previous action escalates one
+rung, so a fault the cheaper rung could not clear climbs deterministically.
+Every decision lands in ``RecoveryController.trace`` — with a seeded
+:class:`~repro.resilience.inject.FaultPlan` the whole
+detect→decide→recover sequence is reproducible run to run."""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+RUNGS = ("skip", "refresh", "rollback", "restore")
+BASE_RUNG = {
+    "nonfinite": "skip",
+    "dead_subspace": "refresh",
+    "loss_spike": "rollback",
+    "grad_spike": "rollback",
+    "blowup": "rollback",
+}
+
+
+@dataclasses.dataclass
+class ResilienceConfig:
+    """Knobs for the health monitor + recovery controller (CLI spec form:
+    ``"ring=3,snapshot_every=5,spike_z=4"`` — any field by name)."""
+
+    # snapshot ring (rung 2)
+    ring: int = 2                  # in-memory snapshots kept
+    snapshot_every: int = 8        # steps between snapshots (healthy only)
+    # loss-spike detector
+    spike_z: float = 8.0
+    spike_window: int = 32
+    spike_min_samples: int = 8
+    spike_min_delta: float = 0.5   # absolute guard: tiny-σ windows can't flag noise
+    # blowup detector
+    blowup_k: int = 5
+    blowup_factor: float = 2.0
+    # dead-subspace detector
+    collapse_tol: float = 0.05
+    collapse_window: int = 16
+    collapse_min_samples: int = 4
+    # captured-energy floor (warn only)
+    energy_min: float = 0.05
+    probe_health: bool = True      # gather spectrum probes when available
+    # escalation
+    escalation_window: int = 8     # steps within which a recurrence escalates
+    max_skips: int = 3             # consecutive rung-0 skips before rollback
+
+    @staticmethod
+    def parse(spec) -> "ResilienceConfig":
+        """``None | bool | spec string | ResilienceConfig`` → config."""
+        if isinstance(spec, ResilienceConfig):
+            return spec
+        cfg = ResilienceConfig()
+        if spec is None or spec is True or spec == "":
+            return cfg
+        for part in str(spec).split(","):
+            part = part.strip()
+            if not part:
+                continue
+            k, _, v = part.partition("=")
+            k = k.strip()
+            if not hasattr(cfg, k):
+                raise ValueError(f"unknown resilience knob {k!r}")
+            cur = getattr(cfg, k)
+            setattr(cfg, k, type(cur)(float(v)) if isinstance(cur, (int, float))
+                    and not isinstance(cur, bool) else v.strip() == "1"
+                    if isinstance(cur, bool) else v)
+        return cfg
+
+
+# ---------------------------------------------------------------------------
+# snapshot ring (rung 2)
+# ---------------------------------------------------------------------------
+
+
+def _to_host(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: np.array(jax.device_get(x)), tree)
+
+
+def _to_device(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.asarray, tree)
+
+
+@dataclasses.dataclass
+class Snapshot:
+    step: int                     # the next step to run after restoring
+    params: PyTree                # host (numpy) copies — jit donation safe
+    opt_state: PyTree
+    extra: Optional[dict] = None  # controller extras (rank-policy state…)
+
+
+class SnapshotRing:
+    """Last-K in-memory ``(params, opt_state, extras)`` snapshots.
+
+    Buffers are copied to host numpy at capture (the live device buffers
+    are donated to the next step, so they cannot be kept) and re-uploaded
+    on restore; round-trip is bit-exact."""
+
+    def __init__(self, k: int = 2):
+        self.k = int(k)
+        self._ring: list = []
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    @property
+    def steps(self) -> list:
+        return [s.step for s in self._ring]
+
+    def add(self, step: int, params: PyTree, opt_state: PyTree,
+            extra: Optional[dict] = None) -> None:
+        snap = Snapshot(step=int(step), params=_to_host(params),
+                        opt_state=_to_host(opt_state),
+                        extra=copy.deepcopy(extra))
+        self._ring.append(snap)
+        del self._ring[: -self.k]
+
+    def latest(self) -> Optional[Snapshot]:
+        return self._ring[-1] if self._ring else None
+
+    def pop_latest(self) -> Optional[Snapshot]:
+        """Take the newest snapshot *out* of the ring (a second rollback
+        for the same incident should land on an older state, not loop on
+        one that already failed to clear the fault)."""
+        return self._ring.pop() if self._ring else None
+
+    def restore(self, snap: Snapshot) -> tuple:
+        return _to_device(snap.params), _to_device(snap.opt_state)
+
+
+# ---------------------------------------------------------------------------
+# forced off-cycle refresh (rung 1)
+# ---------------------------------------------------------------------------
+
+
+def force_refresh(opt_state: PyTree, period: int) -> PyTree:
+    """Advance every ``LowRankState`` step count to its next period
+    boundary so the next update recomputes all projectors from live
+    gradients (``lowrank()`` refreshes when ``count % period == 0`` on
+    entry).  This shifts the refresh clock forward by up to ``period - 1``
+    counts — deterministic, and exactly what an off-cycle refresh means:
+    the subspace is re-derived *now* instead of at the scheduled boundary."""
+    from repro.core.combinators import LowRankState
+
+    period = int(period)
+
+    def node(s):
+        if isinstance(s, LowRankState):
+            c = np.asarray(jax.device_get(s.count))
+            bump = (-int(c)) % period
+            return s._replace(count=s.count + jnp.asarray(bump, c.dtype))
+        return s
+
+    return jax.tree_util.tree_map(
+        node, opt_state, is_leaf=lambda x: isinstance(x, LowRankState))
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    kind: str                     # none | skip | refresh | rollback | restore
+    step: int                     # step the triggering report came from
+    event: str = ""               # triggering event kind
+    target: Optional[int] = None  # filled by the trainer (snapshot/ckpt step)
+
+
+class RecoveryController:
+    """Maps critical health reports to ladder actions with escalation.
+
+    The controller is pure host-side bookkeeping — the trainer owns the
+    actual state surgery (it has the snapshot ring, checkpoint manager and
+    jit caches).  ``decide`` returns at most one action per report;
+    ``record`` is called by the trainer after executing it (with the
+    resolved target step) so the trace carries what actually happened."""
+
+    def __init__(self, cfg: Optional[ResilienceConfig] = None):
+        self.cfg = cfg or ResilienceConfig()
+        self.counts = {r: 0 for r in RUNGS}
+        self.trace: list = []
+        self._last_action_step: Optional[int] = None
+        self._last_rung: int = -1
+        self._skip_streak: int = 0
+
+    def _escalate(self, step: int, base: int) -> int:
+        recent = (self._last_action_step is not None
+                  and step - self._last_action_step
+                  <= self.cfg.escalation_window)
+        if recent and base <= self._last_rung:
+            return min(self._last_rung + 1, len(RUNGS) - 1)
+        return base
+
+    def decide(self, report) -> Action:
+        crit = report.critical
+        if not crit:
+            if report.status == "ok":
+                self._skip_streak = 0
+            return Action("none", report.step)
+        # Highest-base-rung event wins the decision for this step.
+        ev = max(crit, key=lambda e: RUNGS.index(BASE_RUNG.get(e.kind,
+                                                               "rollback")))
+        base = RUNGS.index(BASE_RUNG.get(ev.kind, "rollback"))
+        if ev.kind == "nonfinite":
+            self._skip_streak += 1
+            if self._skip_streak <= self.cfg.max_skips:
+                # rung 0 — already handled in-jit, just count it
+                self.counts["skip"] += 1
+                self.trace.append({"step": report.step, "event": ev.kind,
+                                   "action": "skip", "target": None})
+                return Action("skip", report.step, ev.kind)
+            base = RUNGS.index("rollback")
+            self._skip_streak = 0
+        rung = self._escalate(report.step, base)
+        return Action(RUNGS[rung], report.step, ev.kind)
+
+    def record(self, action: Action, target: Optional[int] = None) -> None:
+        """Log an executed action (trainer callback)."""
+        self.counts[action.kind] += 1
+        self._last_action_step = action.step
+        self._last_rung = RUNGS.index(action.kind)
+        self.trace.append({"step": action.step, "event": action.event,
+                           "action": action.kind, "target": target})

@@ -1,12 +1,25 @@
-"""Training loop with fault tolerance.
+"""Training loop with fault tolerance and the resilience subsystem.
 
-Features (DESIGN.md §5):
-  * auto-resume: newest committed checkpoint + exact data-stream skip-ahead
-  * periodic checkpointing (params + optimizer state + step) via atomic commit
-  * NaN/Inf guard: non-finite losses skip the update (counted + logged)
-  * straggler/step-time monitor: per-step wall-time ring buffer, z-score
-    flagging — on a real fleet this triggers elastic resharding (restore the
-    same checkpoint on a different mesh; the checkpoint layer supports it)
+Features (DESIGN.md §5 + repro.resilience):
+  * auto-resume: newest *verified* committed checkpoint + exact data-stream
+    skip-ahead (corrupt/partial latest saves are skipped automatically)
+  * periodic checkpointing (params + optimizer state + step) via atomic
+    commit with per-leaf checksums
+  * NaN/Inf guard: non-finite losses skip the update inside the jitted step
+    (counted + logged) — rung 0 of the recovery ladder
+  * health monitor (``resilience=...``): windowed loss-spike / blowup /
+    dead-subspace detectors over in-jit signals, unified with the
+    straggler :class:`StepTimeMonitor` into per-step
+    :class:`~repro.resilience.health.HealthReport`s
+  * recovery controller: skip → forced off-cycle projector refresh →
+    rollback to an in-memory snapshot ring (params, optimizer state AND
+    rank-policy controller extras, so floors/TTLs stay in sync) → restore
+    of the last verified durable checkpoint; every event lands in
+    :class:`TrainResult`
+  * fault injection (``inject=...``): a seeded declarative
+    :class:`~repro.resilience.inject.FaultPlan` arms gradient corruption,
+    projector sabotage, checkpoint corruption and mid-save kills — every
+    recovery path has a reproducible trigger
   * optional pjit over a mesh with the repo's sharding rules.
 """
 from __future__ import annotations
@@ -59,6 +72,11 @@ class TrainResult:
     skipped_nonfinite: int
     straggler_steps: list[tuple[int, float]]
     resumed_from: Optional[int]
+    # Resilience accounting (empty when the subsystem is off):
+    health_events: list = dataclasses.field(default_factory=list)
+    recovery_counts: dict = dataclasses.field(default_factory=dict)
+    recovery_trace: list = dataclasses.field(default_factory=list)
+    fault_log: list = dataclasses.field(default_factory=list)
 
 
 class Trainer:
@@ -71,6 +89,8 @@ class Trainer:
         mesh=None,
         microbatches: int = 1,
         optimizer=None,
+        resilience=None,
+        inject=None,
     ):
         """``optimizer`` (a :class:`repro.core.api.Transform`) overrides the
         ``opt_cfg`` factory path — pass a hand-composed combinator chain
@@ -78,7 +98,15 @@ class Trainer:
         not name, e.g. ``chain(combinators.clip_by_global_norm(1.0),
         lowrank(layerwise_unbias(scale_by_adam())), scale_by_lr(sched))``
         (the transform-valued clip lives in the combinators namespace; the
-        same name in repro.core is the plain (grads, max_norm) function)."""
+        same name in repro.core is the plain (grads, max_norm) function).
+
+        ``resilience`` turns on the health monitor + recovery ladder: True
+        or "" for defaults, a spec string ("ring=3,snapshot_every=5"), or a
+        :class:`~repro.resilience.recovery.ResilienceConfig`.
+
+        ``inject`` arms deterministic fault injection: a
+        :class:`~repro.resilience.inject.FaultPlan` or its spec string
+        ("grad_nan@5;refresh_zero@13;kill_save@20#3")."""
         self.model = model
         self.opt_cfg = opt_cfg
         self.run = run_cfg
@@ -87,6 +115,24 @@ class Trainer:
         self.microbatches = microbatches
         self.ckpt = CheckpointManager(run_cfg.ckpt_dir, keep=run_cfg.keep_ckpts)
         self.monitor = StepTimeMonitor()
+
+        # --- resilience wiring (repro.resilience) ---
+        from repro.resilience import FaultPlan, HealthMonitor
+        from repro.resilience.recovery import ResilienceConfig
+
+        if resilience is None or resilience is False:
+            self.resilience = None
+            self.health = None
+        else:
+            self.resilience = ResilienceConfig.parse(resilience)
+            self.health = HealthMonitor(self.resilience,
+                                        step_monitor=self.monitor)
+        self.fault_plan = (FaultPlan.parse(inject) if isinstance(inject, str)
+                           else inject)
+        self._fault_gate = (self.fault_plan.gate()
+                            if self.fault_plan is not None else None)
+        self.recovery = None  # built per train() run
+
         # Rank policy (repro.core.rank_policy): rank is a shape in JAX, so a
         # policy-driven rank change is a host-side event between steps — the
         # controller migrates the optimizer state and we re-jit (bounded by
@@ -103,6 +149,7 @@ class Trainer:
                 )
                 optimizer = self.rank_ctrl.transform()
         self._jit_cache: dict = {}
+        self._has_probes: Optional[bool] = None
         self._set_optimizer(
             optimizer if optimizer is not None else build_optimizer(opt_cfg)
         )
@@ -114,6 +161,8 @@ class Trainer:
         self._step_fn = make_train_step(
             self.model, optimizer, grad_clip=self.run.grad_clip,
             microbatches=self.microbatches,
+            fault_gate=self._fault_gate,
+            extra_metrics=self.resilience is not None,
         )
 
     def init_state(self):
@@ -129,6 +178,7 @@ class Trainer:
         cached = self._jit_cache.get(key)
         if cached is not None:
             return cached
+        n_in = 4 if self._fault_gate is not None else 3
         if self.mesh is None:
             jitted = jax.jit(self._step_fn, donate_argnums=(0, 1))
         else:
@@ -136,26 +186,89 @@ class Trainer:
             osh = opt_state_sharding(opt_state, self.mesh)
             jitted = jax.jit(
                 self._step_fn,
-                in_shardings=(psh, osh, None),
+                in_shardings=(psh, osh) + (None,) * (n_in - 2),
                 out_shardings=(psh, osh, None),
                 donate_argnums=(0, 1),
             )
         self._jit_cache[key] = jitted
         return jitted
 
-    # ------------------------------------------------------------- loop
+    # ------------------------------------------------------------- helpers
 
     def _ckpt_extra(self) -> Optional[dict]:
         if self.rank_ctrl is None:
             return None
         return {"rank_policy": self.rank_ctrl.state_dict()}
 
+    def _save(self, step: int, params, opt_state) -> None:
+        """Checkpoint save with the fault plan's kill hook and post-commit
+        corruption events attached (no-ops without a plan)."""
+        observer = (self.fault_plan.save_observer(step)
+                    if self.fault_plan is not None else None)
+        self.ckpt.save(step, (params, opt_state), extra=self._ckpt_extra(),
+                       observer=observer)
+        if self.fault_plan is not None:
+            for ev in self.fault_plan.apply_ckpt_events(self.ckpt.dir, step):
+                print(f"step {step:6d} fault-injection: {ev.kind} on the "
+                      f"step-{step} checkpoint", flush=True)
+
+    def _load_checkpoint(self, step: int):
+        """Restore params/opt_state at ``step``, rebuilding the rank-policy
+        controller (and therefore the state template's shapes) from the
+        saved extras first — the restore rung of the recovery ladder."""
+        if self.rank_ctrl is not None:
+            extra = self.ckpt.read_extra(step)
+            if "rank_policy" in extra:
+                self.rank_ctrl.load_state_dict(extra["rank_policy"])
+                self._set_optimizer(self.rank_ctrl.transform())
+        params, opt_state = self.init_state()
+        (params, opt_state), _ = self.ckpt.restore(step, (params, opt_state))
+        return params, opt_state
+
+    def _gather_probes(self, opt_state, step: int) -> Optional[dict]:
+        """Spectrum probes for the health monitor's captured-energy floor —
+        gathered only on refresh-cadence steps and only when the optimizer
+        actually stores probes (zero cost otherwise)."""
+        if (self.resilience is None or not self.resilience.probe_health
+                or self.opt_cfg.period <= 0
+                or step % self.opt_cfg.period != 0):
+            return None
+        from repro.core import find_lowrank_states
+        from repro.core.rank_policy import gather_probes
+
+        if self._has_probes is None:
+            self._has_probes = any(
+                st.probes is not None
+                for st in find_lowrank_states(opt_state))
+        return gather_probes(opt_state) if self._has_probes else None
+
+    # ------------------------------------------------------------- loop
+
     def train(self, steps: Optional[int] = None) -> TrainResult:
+        from repro.resilience import poison_projectors
+        from repro.resilience.inject import FaultGate
+        from repro.resilience.recovery import (
+            RecoveryController,
+            SnapshotRing,
+            force_refresh,
+        )
+
         steps = steps or self.run.steps
         stream = build_stream(self.data_cfg)
+        res, plan, health = self.resilience, self.fault_plan, self.health
+        ring = SnapshotRing(res.ring) if res is not None else None
+        recov = RecoveryController(res) if res is not None else None
+        self.recovery = recov
 
         start_step, resumed_from = 0, None
-        latest = self.ckpt.latest_step() if self.run.resume else None
+        latest = None
+        if self.run.resume:
+            latest = self.ckpt.latest_verified_step()
+            newest = self.ckpt.latest_step()
+            if newest is not None and newest != latest:
+                print(f"checkpoint: newest committed step {newest} failed "
+                      f"verification — resuming from last verified "
+                      f"{latest}", flush=True)
         if latest is not None and self.rank_ctrl is not None:
             # The controller state determines the optimizer-state SHAPES, so
             # it must be rebuilt from the saved extras before the restore
@@ -186,9 +299,12 @@ class Trainer:
                     (self.data_cfg.global_batch
                      // max(self.data_cfg.num_hosts, 1),
                      self.data_cfg.seq_len), jnp.int32)}
+                args = (params, opt_state0, batch0)
+                if self._fault_gate is not None:
+                    args = args + (FaultGate.disarmed(),)
                 infos = parse_main_args(
                     self._jit_step(params, opt_state0)
-                    .lower(params, opt_state0, batch0).as_text())
+                    .lower(*args).as_text())
                 n_donate = (len(jax.tree_util.tree_leaves(params))
                             + len(jax.tree_util.tree_leaves(opt_state0)))
                 print(f"audit[{self.opt_cfg.name}]: mesh donation "
@@ -211,10 +327,11 @@ class Trainer:
 
         step_jit = self._jit_step(params, opt_state)
 
-        losses: list[float] = []
+        loss_by_step: dict[int, float] = {}
         skipped = 0
+        step = start_step
         with use_mesh(self.mesh):
-            for step in range(start_step, steps):
+            while step < steps:
                 t0 = time.time()
                 if self.rank_ctrl is not None:
                     opt_state, changed = self.rank_ctrl.maybe_update(
@@ -225,30 +342,128 @@ class Trainer:
                         step_jit = self._jit_step(params, opt_state)
                         print(f"step {step:6d} rank-policy -> "
                               f"{self.rank_ctrl.current_map}", flush=True)
+                if plan is not None:
+                    for ev in plan.state_events(step):
+                        opt_state = poison_projectors(opt_state, ev.kind)
+                        print(f"step {step:6d} fault-injection: {ev.kind}",
+                              flush=True)
                 tokens = jnp.asarray(next(stream))
-                new_params, new_opt, metrics = step_jit(
-                    params, opt_state, {"tokens": tokens}
-                )
+                if self._fault_gate is not None:
+                    ev = plan.grad_event(step)
+                    if ev is not None:
+                        print(f"step {step:6d} fault-injection: {ev.kind}",
+                              flush=True)
+                    fault = (FaultGate.armed(ev) if ev is not None
+                             else FaultGate.disarmed())
+                    new_params, new_opt, metrics = step_jit(
+                        params, opt_state, {"tokens": tokens}, fault
+                    )
+                else:
+                    new_params, new_opt, metrics = step_jit(
+                        params, opt_state, {"tokens": tokens}
+                    )
                 loss = float(metrics["loss"])
                 params, opt_state = new_params, new_opt
-                if not bool(metrics["update_applied"]):
+                applied = bool(metrics["update_applied"])
+                if applied:
+                    loss_by_step[step] = loss
+                else:
                     # the step itself zeroed the update (in-jit NaN guard)
                     skipped += 1
+                dt = time.time() - t0
+
+                if health is not None:
+                    report = health.observe(
+                        step, loss=loss, applied=applied,
+                        grad_norm=float(metrics.get(
+                            "grad_norm_raw", metrics["grad_norm"])),
+                        # collapse detection watches the low-rank-leaf
+                        # restricted norm: embeddings/norms keep updating
+                        # through a dead subspace and would mask it globally
+                        update_norm=(float(metrics["update_norm_lowrank"])
+                                     if "update_norm_lowrank" in metrics
+                                     else None),
+                        dt=dt,
+                        probes=self._gather_probes(opt_state, step),
+                    )
+                    for e in report.events:
+                        print(f"step {step:6d} health[{e.severity}] "
+                              f"{e.kind}: {e.detail}", flush=True)
+                    action = recov.decide(report)
+                    if action.kind == "refresh":
+                        opt_state = force_refresh(opt_state,
+                                                  self.opt_cfg.period)
+                        recov.record(action, target=step + 1)
+                        health.reset()
+                        print(f"step {step:6d} recovery: forced off-cycle "
+                              f"projector refresh", flush=True)
+                    elif action.kind in ("rollback", "restore"):
+                        target, kind = None, action.kind
+                        if action.kind == "rollback":
+                            snap = ring.pop_latest()
+                            if snap is not None:
+                                params, opt_state = ring.restore(snap)
+                                if (self.rank_ctrl is not None and snap.extra
+                                        and "rank_policy" in snap.extra):
+                                    self.rank_ctrl.load_state_dict(
+                                        snap.extra["rank_policy"])
+                                    self._set_optimizer(
+                                        self.rank_ctrl.transform())
+                                target = snap.step
+                        if target is None:
+                            # no snapshot (or explicit restore rung): fall
+                            # back to the last verified durable checkpoint
+                            ck = self.ckpt.latest_verified_step()
+                            if ck is not None:
+                                params, opt_state = self._load_checkpoint(ck)
+                                target, kind = ck, "restore"
+                        recov.record(dataclasses.replace(action, kind=kind)
+                                     if kind != action.kind else action,
+                                     target=target)
+                        if target is not None:
+                            print(f"step {step:6d} recovery: {kind} -> "
+                                  f"step {target}", flush=True)
+                            stream.resume(target)
+                            loss_by_step = {k: v for k, v in
+                                            loss_by_step.items()
+                                            if k < target}
+                            step = target
+                            step_jit = self._jit_step(params, opt_state)
+                            health.reset()
+                            continue
+                        print(f"step {step:6d} recovery: {action.kind} "
+                              f"requested but nothing restorable — "
+                              f"continuing", flush=True)
                 else:
-                    losses.append(loss)
-                self.monitor.record(step, time.time() - t0)
+                    self.monitor.record(step, dt)
+
+                if (res is not None and res.snapshot_every
+                        and (step + 1) % res.snapshot_every == 0
+                        and (health is None or report.status == "ok")):
+                    ring.add(step + 1, params, opt_state,
+                             extra=self._ckpt_extra())
 
                 if self.run.ckpt_every and (step + 1) % self.run.ckpt_every == 0:
-                    self.ckpt.save(step + 1, (params, opt_state),
-                                   extra=self._ckpt_extra())
+                    self._save(step + 1, params, opt_state)
                 if self.run.log_every and (step + 1) % self.run.log_every == 0:
                     print(f"step {step + 1:6d} loss {loss:.4f}", flush=True)
+                step += 1
 
-        self.ckpt.save(steps, (params, opt_state), extra=self._ckpt_extra())
+        # Final save — unless the loop's periodic save already committed
+        # this exact step (a duplicate would also clobber any post-commit
+        # state, e.g. injected corruption under test).
+        if not (self.run.ckpt_every and steps % self.run.ckpt_every == 0
+                and steps > start_step):
+            self._save(steps, params, opt_state)
         return TrainResult(
             final_step=steps,
-            losses=losses,
+            losses=[v for _, v in sorted(loss_by_step.items())],
             skipped_nonfinite=skipped,
             straggler_steps=self.monitor.flagged,
             resumed_from=resumed_from,
+            health_events=([e.to_json() for e in health.events]
+                           if health is not None else []),
+            recovery_counts=dict(recov.counts) if recov is not None else {},
+            recovery_trace=list(recov.trace) if recov is not None else [],
+            fault_log=list(plan.log) if plan is not None else [],
         )

@@ -1,0 +1,27 @@
+"""Shared pytest plumbing: in-process isolation for crash-prone test files.
+
+``test_unbiasedness.py`` is skipped during whole-suite collection and runs
+through ``test_unbiasedness_subprocess.py`` instead: executing its
+jit-heavy parametrized cases *after* the rest of the suite in one
+interpreter segfaults XLA's CPU ``backend_compile`` (rc 139 — the same
+class of in-process-reuse crash as the persistent-compilation-cache hazard
+recorded in ROADMAP.md).  In a fresh interpreter the file is green, so the
+suite still covers every test in it — just behind a process boundary.
+
+Naming the file explicitly (``pytest tests/test_unbiasedness.py``) bypasses
+the isolation, which is exactly what the subprocess wrapper does.
+"""
+import os
+
+# Files that must not share an interpreter with the rest of the suite.
+ISOLATED = {"test_unbiasedness.py"}
+
+
+def pytest_ignore_collect(collection_path, config):
+    name = os.path.basename(str(collection_path))
+    if name not in ISOLATED:
+        return None
+    # honor explicit selection: `pytest tests/test_unbiasedness.py ...`
+    if any(name in str(a) for a in config.invocation_params.args):
+        return None
+    return True

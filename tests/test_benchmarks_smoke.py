@@ -28,11 +28,14 @@ def test_run_py_smoke_executes_all_suites(tmp_path):
     for suite in ("synthetic_counterexample", "memory_table", "pretrain_proxy",
                   "bias_residual", "stable_rank", "roofline_report",
                   "optimizer_api", "fused_step", "rank_policy",
-                  "audit_matrix"):
+                  "audit_matrix", "resilience"):
         assert f"# --- {suite} ---" in res.stderr, suite
     # the fused-step suite produced its rows, including launch counts
     assert "fusedstep_gum_stacked" in out
     assert "launches=" in out
+    # the resilience suite measured the monitor and checksum costs
+    assert "resilience_step_monitor_on" in out
+    assert "resilience_save_crc" in out
     # the audit-matrix suite audited its smoke cells clean
     assert "audit_gum," in out and ",clean" in out
     # ...including the sharded collective-schedule cell (AbstractMesh trace,

@@ -1,0 +1,623 @@
+"""Resilience subsystem: fault plan/gate units, health detectors, the
+recovery ladder, checkpoint integrity, and the deterministic fault matrix
+(ISSUE 8 acceptance: every fault class recovers via its documented rung,
+reproducibly, with final loss within budget of the fault-free run)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.resilience import (
+    FaultEvent,
+    FaultGate,
+    FaultPlan,
+    HealthMonitor,
+    RecoveryController,
+    ResilienceConfig,
+    SnapshotRing,
+    bitflip_checkpoint,
+    force_refresh,
+    poison_projectors,
+    truncate_checkpoint,
+)
+from repro.resilience.health import HealthReport
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------- fault plan
+
+
+def test_fault_plan_parse_and_roundtrip():
+    plan = FaultPlan.parse(
+        "grad_nan@5;grad_spike@9*1e3;refresh_zero@13;kill_save@20#3", seed=7)
+    assert [(e.step, e.kind) for e in plan.events] == [
+        (5, "grad_nan"), (9, "grad_spike"), (13, "refresh_zero"),
+        (20, "kill_save")]
+    assert plan.events[1].scale == 1e3
+    assert plan.events[3].arg == 3
+    clone = FaultPlan.from_json(plan.to_json())
+    assert [(e.step, e.kind) for e in clone.events] == \
+        [(e.step, e.kind) for e in plan.events]
+    assert clone.seed == 7
+    with pytest.raises(ValueError):
+        FaultPlan.parse("grad_nan")  # no @step
+    with pytest.raises(ValueError):
+        FaultEvent(step=1, kind="nonsense")
+
+
+def test_fault_plan_fires_once_and_logs():
+    plan = FaultPlan.parse("grad_nan@5;refresh_zero@5")
+    ev = plan.grad_event(5)
+    assert ev is not None and ev.kind == "grad_nan"
+    # consumed: a rollback replaying step 5 does not re-trigger
+    assert plan.grad_event(5) is None
+    assert [e.kind for e in plan.state_events(5)] == ["refresh_zero"]
+    assert plan.state_events(5) == []
+    assert plan.log == [(5, "grad_nan"), (5, "refresh_zero")]
+    # no gate needed for state-only remains of the plan
+    assert FaultPlan.parse("refresh_zero@3").gate() is None
+    assert FaultPlan.parse("grad_inf@3").gate() is not None
+
+
+def test_fault_gate_mode0_is_identity():
+    """The disarmed gate must be elementwise-identical to the stock step —
+    resilience-on training with no armed fault is the stock trajectory."""
+    from repro.configs import get_smoke
+    from repro.core import OptimizerConfig, build_optimizer
+    from repro.launch.steps import make_train_step
+    from repro.models import build_model
+
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = build_optimizer(OptimizerConfig(name="adamw", lr=1e-3))
+    st = opt.init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab)}
+
+    plain = jax.jit(make_train_step(model, opt, grad_clip=1.0))
+    gated = jax.jit(make_train_step(model, opt, grad_clip=1.0,
+                                    fault_gate=FaultGate()))
+    p1, _, m1 = plain(params, st, batch)
+    p2, _, m2 = gated(params, st, batch, FaultGate.disarmed())
+    assert float(m1["loss"]) == float(m2["loss"])
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # armed: NaN mode kills the grads -> guard skips the update
+    _, _, m3 = gated(params, st, batch,
+                     FaultGate.armed(FaultEvent(0, "grad_nan")))
+    assert not bool(m3["update_applied"])
+    # spike mode scales the raw grad norm by ~scale
+    _, _, m4 = gated(params, st, batch,
+                     FaultGate.armed(FaultEvent(0, "grad_spike", scale=1e4)))
+    assert bool(m4["update_applied"])
+
+
+# ------------------------------------------------------------ state surgery
+
+
+def _matrix_opt_state(name="galore", rank=4):
+    from repro.core import OptimizerConfig, build_optimizer
+
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 16)),
+              "b": jnp.zeros((16,))}
+    opt = build_optimizer(OptimizerConfig(name=name, lr=1e-2, rank=rank,
+                                          period=5))
+    st = opt.init(params)
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    _, st = opt.update(g, st, params)  # first update materializes projectors
+    return opt, params, st
+
+
+def test_poison_projectors_zero_and_illcond():
+    from repro.core import find_lowrank_states
+
+    _, _, st = _matrix_opt_state()
+    z = poison_projectors(st, "refresh_zero")
+    for lr in find_lowrank_states(z):
+        for p in jax.tree_util.tree_leaves(lr.projs):
+            assert float(jnp.abs(p).max()) == 0.0
+    ill = poison_projectors(st, "refresh_illcond")
+    for lr in find_lowrank_states(ill):
+        for p in jax.tree_util.tree_leaves(lr.projs):
+            cols = np.asarray(p).reshape(-1, p.shape[-1])
+            for j in range(1, cols.shape[1]):
+                np.testing.assert_array_equal(cols[:, 0], cols[:, j])
+    with pytest.raises(ValueError):
+        poison_projectors(st, "grad_nan")
+
+
+def test_force_refresh_advances_to_period_boundary():
+    from repro.core import find_lowrank_states
+
+    opt, params, st = _matrix_opt_state(rank=4)
+    g = {"w": jnp.ones((32, 16)), "b": jnp.ones((16,))}
+    _, st = opt.update(g, st, params)  # count now 2
+    count = int(jax.device_get(find_lowrank_states(st)[0].count))
+    assert count == 2
+    bumped = force_refresh(st, period=5)
+    assert int(jax.device_get(find_lowrank_states(bumped)[0].count)) == 5
+    # already on a boundary: no-op
+    again = force_refresh(bumped, period=5)
+    assert int(jax.device_get(find_lowrank_states(again)[0].count)) == 5
+    # the very next update refreshes: a zeroed projector gets rebuilt
+    poisoned = poison_projectors(bumped, "refresh_zero")
+    _, healed = opt.update(g, poisoned, params)
+    after = jax.tree_util.tree_leaves(find_lowrank_states(healed)[0].projs)
+    assert float(jnp.abs(after[0]).max()) > 0.0, \
+        "forced refresh did not rebuild the zeroed projector"
+
+
+def test_snapshot_ring_roundtrip_and_eviction():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 8))}
+    state = {"m": jnp.ones((8, 8)) * 0.5}
+    ring = SnapshotRing(k=2)
+    for s in (4, 8, 12):
+        ring.add(s, params, state, extra={"rank_policy": {"x": s}})
+    assert ring.steps == [8, 12]  # oldest evicted
+    snap = ring.pop_latest()
+    assert snap.step == 12 and ring.steps == [8]
+    p2, s2 = ring.restore(snap)
+    np.testing.assert_array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))
+    np.testing.assert_array_equal(np.asarray(s2["m"]), np.asarray(state["m"]))
+    assert snap.extra == {"rank_policy": {"x": 12}}
+    # host copies: mutating the live tree does not touch the snapshot
+    assert isinstance(snap.params["w"], np.ndarray)
+
+
+# ------------------------------------------------------------------- health
+
+
+def _cfg(**kw):
+    base = dict(spike_min_samples=4, spike_z=4.0, spike_min_delta=0.5,
+                collapse_min_samples=3, blowup_k=3)
+    base.update(kw)
+    return ResilienceConfig(**base)
+
+
+def test_health_loss_spike_detector():
+    mon = HealthMonitor(_cfg())
+    for i in range(8):
+        r = mon.observe(i, loss=1.0 + 0.01 * (i % 3), applied=True,
+                        grad_norm=1.0)
+        assert r.status == "ok"
+    r = mon.observe(8, loss=50.0, applied=True, grad_norm=1.0)
+    assert [e.kind for e in r.critical] == ["loss_spike"]
+    # the spike was not folded into the window: an identical second spike
+    # is still detected against the clean statistics
+    r2 = mon.observe(9, loss=50.0, applied=True, grad_norm=1.0)
+    assert [e.kind for e in r2.critical] == ["loss_spike"]
+
+
+def test_health_grad_spike_detector():
+    mon = HealthMonitor(_cfg())
+    for i in range(8):
+        assert mon.observe(i, loss=1.0, applied=True,
+                           grad_norm=2.0 + 0.1 * (i % 2)).status == "ok"
+    r = mon.observe(8, loss=1.0, applied=True, grad_norm=1e6)
+    assert "grad_spike" in [e.kind for e in r.critical]
+
+
+def test_health_blowup_detector():
+    mon = HealthMonitor(_cfg(spike_z=100.0))  # mute the spike detector
+    loss = 1.0
+    kinds = []
+    for i in range(8):
+        loss *= 1.4
+        kinds += [e.kind for e in
+                  mon.observe(i, loss=loss, applied=True, grad_norm=1.0)
+                  .critical]
+    assert "blowup" in kinds
+
+
+def test_health_dead_subspace_detector():
+    mon = HealthMonitor(_cfg())
+    for i in range(6):
+        assert mon.observe(i, loss=1.0, applied=True, grad_norm=1.0,
+                           update_norm=0.1).status == "ok"
+    r = mon.observe(6, loss=1.0, applied=True, grad_norm=1.0,
+                    update_norm=1e-6)
+    assert [e.kind for e in r.critical] == ["dead_subspace"]
+    # zero grads (real stall, not a dead projector): no event
+    mon2 = HealthMonitor(_cfg())
+    for i in range(6):
+        mon2.observe(i, loss=1.0, applied=True, grad_norm=1.0,
+                     update_norm=0.1)
+    assert mon2.observe(6, loss=1.0, applied=True, grad_norm=0.0,
+                        update_norm=1e-6).status == "ok"
+
+
+def test_health_nonfinite_energy_and_reset():
+    from repro.train import StepTimeMonitor
+
+    mon = HealthMonitor(_cfg(energy_min=0.2),
+                        step_monitor=StepTimeMonitor(min_samples=3))
+    r = mon.observe(0, loss=float("nan"), applied=False, grad_norm=1.0)
+    assert [e.kind for e in r.critical] == ["nonfinite"]
+    # starved probe energy: warn only
+    probes = {(32, 16): {"sv2": np.array([0.01, 0.01]), "g2": 1.0}}
+    r2 = mon.observe(1, loss=1.0, applied=True, grad_norm=1.0, probes=probes)
+    assert r2.status == "warn"
+    assert [e.kind for e in r2.events] == ["subspace_energy"]
+    mon.observe(2, loss=1.0, applied=True, grad_norm=1.0)
+    assert len(mon._losses) > 0
+    mon.reset()
+    assert len(mon._losses) == 0
+    assert mon.counts["nonfinite"] == 1  # lifetime counters survive reset
+
+
+# ----------------------------------------------------------------- recovery
+
+
+def _report(step, kind):
+    from repro.resilience.health import CRITICAL, HealthEvent
+
+    ev = HealthEvent(step, kind, CRITICAL)
+    return HealthReport(step=step, status="critical", events=[ev],
+                        loss=1.0, grad_norm=1.0)
+
+
+def _ok(step):
+    return HealthReport(step=step, status="ok", events=[], loss=1.0,
+                        grad_norm=1.0)
+
+
+def test_recovery_base_rungs():
+    rc = RecoveryController(ResilienceConfig())
+    assert rc.decide(_ok(0)).kind == "none"
+    assert rc.decide(_report(1, "nonfinite")).kind == "skip"
+    rc2 = RecoveryController(ResilienceConfig())
+    assert rc2.decide(_report(1, "dead_subspace")).kind == "refresh"
+    rc3 = RecoveryController(ResilienceConfig())
+    assert rc3.decide(_report(1, "loss_spike")).kind == "rollback"
+    rc4 = RecoveryController(ResilienceConfig())
+    assert rc4.decide(_report(1, "grad_spike")).kind == "rollback"
+
+
+def test_recovery_skip_streak_escalates():
+    rc = RecoveryController(ResilienceConfig(max_skips=2))
+    assert rc.decide(_report(1, "nonfinite")).kind == "skip"
+    assert rc.decide(_report(2, "nonfinite")).kind == "skip"
+    a = rc.decide(_report(3, "nonfinite"))
+    assert a.kind == "rollback"
+    # a healthy report resets the streak
+    rc.record(a, target=0)
+    rc.decide(_ok(4))
+    # outside the escalation window the ladder re-enters at the base rung
+    far = 4 + rc.cfg.escalation_window + 1
+    assert rc.decide(_report(far, "nonfinite")).kind == "skip"
+
+
+def test_recovery_escalation_within_window():
+    rc = RecoveryController(ResilienceConfig(escalation_window=8))
+    a1 = rc.decide(_report(10, "loss_spike"))
+    assert a1.kind == "rollback"
+    rc.record(a1, target=8)
+    # recurrence right after the rollback: climb to restore
+    a2 = rc.decide(_report(12, "loss_spike"))
+    assert a2.kind == "restore"
+    rc.record(a2, target=4)
+    # and the trace carries the executed actions with targets
+    assert [(t["action"], t["target"]) for t in rc.trace] == [
+        ("rollback", 8), ("restore", 4)]
+
+
+def test_resilience_config_parse():
+    cfg = ResilienceConfig.parse("ring=3,snapshot_every=5,spike_z=4.5")
+    assert cfg.ring == 3 and cfg.snapshot_every == 5 and cfg.spike_z == 4.5
+    assert ResilienceConfig.parse(None).ring == ResilienceConfig().ring
+    assert ResilienceConfig.parse("").max_skips == 3
+    same = ResilienceConfig(ring=9)
+    assert ResilienceConfig.parse(same) is same
+    with pytest.raises(ValueError):
+        ResilienceConfig.parse("no_such_knob=1")
+
+
+# ------------------------------------------------------- checkpoint hardening
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (16, 16)),
+            "b": {"c": jnp.arange(32, dtype=jnp.float32)}}
+
+
+def test_checkpoint_checksum_detects_bitflip(tmp_path):
+    from repro.checkpoint import CheckpointCorruptionError, CheckpointManager
+
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=5)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    assert mgr.verify_step(2)
+    bitflip_checkpoint(d, 2, rng=np.random.default_rng(0))
+    assert not mgr.verify_step(2)
+    with pytest.raises(CheckpointCorruptionError):
+        mgr.restore(2, _tree())
+    # verified fallback walks past the corrupt step
+    assert mgr.latest_verified_step() == 1
+    got = mgr.restore_latest_verified(_tree())
+    assert got is not None and got[0] == 1
+    np.testing.assert_array_equal(np.asarray(got[1]["a"]),
+                                  np.asarray(_tree(1)["a"]))
+
+
+def test_checkpoint_truncation_detected(tmp_path):
+    from repro.checkpoint import CheckpointCorruptionError, CheckpointManager
+
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=5)
+    mgr.save(3, _tree(3))
+    truncate_checkpoint(d, 3, rng=np.random.default_rng(1), keep_frac=0.4)
+    assert not mgr.verify_step(3)
+    with pytest.raises(CheckpointCorruptionError):
+        mgr.restore(3, _tree())
+    # verify=False restores-at-own-risk is only for readable files; a
+    # truncated .npy cannot even load, so it still raises
+    with pytest.raises(Exception):
+        mgr.restore(3, _tree(), verify=False)
+
+
+def test_gc_never_deletes_newest_verified(tmp_path):
+    """Regression (ISSUE 8 satellite): with every newer checkpoint corrupt,
+    keep-last-N GC must protect the newest VERIFIED step — deleting it
+    would leave the run unrecoverable."""
+    from repro.checkpoint import CheckpointManager
+
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=0)  # no gc while we set the stage
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    for s in (2, 3, 4):
+        bitflip_checkpoint(d, s, rng=np.random.default_rng(s))
+    mgr.keep = 2
+    mgr._gc()
+    # steps (1,2) were doomed, but 1 is the newest verified -> protected
+    assert 1 in mgr.all_steps()
+    assert mgr.latest_verified_step() == 1
+    got = mgr.restore_latest_verified(_tree())
+    assert got is not None and got[0] == 1
+    # step 2 (doomed, corrupt) was actually collected
+    assert 2 not in mgr.all_steps()
+
+
+def test_save_observer_and_abort_atomicity(tmp_path):
+    """An exception mid-save (the kill hook's tame cousin) must leave the
+    previous committed checkpoint untouched and no partial commit."""
+    from repro.checkpoint import CheckpointManager
+
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=3)
+    mgr.save(1, _tree(1))
+    calls = []
+
+    def bomb(i, total):
+        calls.append((i, total))
+        if i >= 1:
+            raise RuntimeError("simulated preemption")
+
+    with pytest.raises(RuntimeError):
+        mgr.save(2, _tree(2), observer=bomb)
+    assert len(calls) == 2
+    assert mgr.all_steps() == [1]          # step 2 never committed
+    assert mgr.latest_verified_step() == 1
+    mgr.save(3, _tree(3))                  # stale tmp dir cleaned up
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_checkpoint_extra_rides_and_legacy_no_crc(tmp_path):
+    import json
+
+    from repro.checkpoint import CheckpointManager
+
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=3)
+    mgr.save(1, _tree(1), extra={"rank_policy": {"map": "x"}})
+    assert mgr.read_extra(1) == {"rank_policy": {"map": "x"}}
+    # strip the CRCs -> legacy checkpoint: still verifies and restores
+    mpath = os.path.join(mgr._step_dir(1), "manifest.json")
+    with open(mpath) as f:
+        man = json.load(f)
+    for meta in man["leaves"]:
+        meta.pop("crc32", None)
+    with open(mpath, "w") as f:
+        json.dump(man, f)
+    assert mgr.verify_step(1)
+    tree, extra = mgr.restore(1, _tree())
+    assert extra["rank_policy"]["map"] == "x"
+
+
+# ------------------------------------------------------- fault matrix (e2e)
+
+
+def _trainer(tmpdir, steps, *, opt="gum", resilience="", inject=None,
+             ckpt_every=10, period=10, rank=4, seed=0, resume=True):
+    from repro.configs import RunConfig, get_smoke
+    from repro.core import OptimizerConfig
+    from repro.data import DataConfig
+    from repro.models import build_model
+    from repro.train import Trainer
+
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    return Trainer(
+        model,
+        OptimizerConfig(name=opt, lr=1e-3, rank=rank, gamma=1, period=period),
+        RunConfig(steps=steps, ckpt_dir=tmpdir, ckpt_every=ckpt_every,
+                  log_every=0, resume=resume, seed=seed),
+        DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=seed),
+        resilience=resilience, inject=inject,
+    )
+
+
+def test_fault_matrix_gradient_faults_recover_and_reproduce(tmp_path):
+    """grad_nan -> skip (rung 0), grad_spike -> rollback (rung 2), same
+    plan+seed reproduces the identical recovery trace, and the final loss
+    stays within the declared budget of the fault-free run."""
+    steps, budget = 26, 0.5
+    clean = _trainer(str(tmp_path / "clean"), steps, resilience="").train()
+    assert clean.recovery_counts == {"skip": 0, "refresh": 0,
+                                    "rollback": 0, "restore": 0}
+
+    plan = "grad_nan@6;grad_spike@17*1e9"
+    runs = []
+    for tag in ("a", "b"):
+        r = _trainer(str(tmp_path / tag), steps,
+                     resilience="snapshot_every=4",
+                     inject=plan).train()
+        runs.append(r)
+    r = runs[0]
+    assert r.fault_log == [(6, "grad_nan"), (17, "grad_spike")]
+    assert r.recovery_counts["skip"] >= 1
+    assert r.recovery_counts["rollback"] >= 1
+    kinds = [(t["step"], t["event"], t["action"]) for t in r.recovery_trace]
+    assert (6, "nonfinite", "skip") in kinds
+    assert any(ev == "grad_spike" and act == "rollback"
+               for _, ev, act in kinds)
+    # declared loss budget vs the fault-free run
+    assert abs(r.losses[-1] - clean.losses[-1]) < budget, \
+        (r.losses[-1], clean.losses[-1])
+    # determinism: identical plan + seed -> identical trace, faults, losses
+    assert runs[0].recovery_trace == runs[1].recovery_trace
+    assert runs[0].fault_log == runs[1].fault_log
+    np.testing.assert_allclose(runs[0].losses, runs[1].losses, rtol=1e-6)
+
+
+def test_fault_matrix_poisoned_refresh_recovers_by_forced_refresh(tmp_path):
+    """refresh_zero on a galore-family optimizer (whose whole update lives
+    in the subspace) -> dead_subspace -> forced off-cycle refresh (rung 1)."""
+    r = _trainer(str(tmp_path), 24, opt="galore", resilience="",
+                 inject="refresh_zero@14").train()
+    assert r.fault_log == [(14, "refresh_zero")]
+    assert r.recovery_counts["refresh"] >= 1
+    assert any(t["event"] == "dead_subspace" and t["action"] == "refresh"
+               for t in r.recovery_trace)
+    # training kept going and kept improving after the recovery
+    assert r.final_step == 24
+    assert r.losses[-1] < r.losses[0]
+
+
+@pytest.mark.parametrize("fault", ["ckpt_bitflip", "ckpt_truncate"])
+def test_fault_matrix_corrupt_checkpoint_resume_falls_back(tmp_path, fault):
+    """A corrupted durable checkpoint (bit flip / truncation of the newest
+    save) is caught by the manifest checksums on restart; resume falls back
+    to the previous verified step (rung 3's fallback path)."""
+    d = str(tmp_path)
+    r1 = _trainer(d, 20, resilience="", inject=f"{fault}@20").train()
+    assert r1.fault_log == [(20, fault)]
+    r2 = _trainer(d, 24, resilience="").train()
+    assert r2.resumed_from == 10, r2.resumed_from
+    assert r2.final_step == 24
+
+
+def test_restore_rung_uses_durable_checkpoint_when_ring_empty(tmp_path):
+    """With no snapshots available (snapshot_every=0) a rollback-rung event
+    falls through to restoring the last verified durable checkpoint."""
+    r = _trainer(str(tmp_path), 24, resilience="snapshot_every=0",
+                 inject="grad_spike@17*1e9").train()
+    assert r.recovery_counts["restore"] >= 1
+    assert any(t["action"] == "restore" and t["target"] == 10
+               for t in r.recovery_trace)
+    assert r.final_step == 24
+
+
+# --------------------------------------------------- mid-save kill (slow)
+
+
+@pytest.mark.slow
+def test_kill_midsave_resumes_bitexact_with_rank_policy(tmp_path):
+    """kill -9 mid-save (via the fault plan's save observer): the partial
+    save must be invisible, and resume from the last verified checkpoint —
+    including the rank-policy controller extras — must be bit-exact vs an
+    uninterrupted run (counter-based stream + deterministic optimizer)."""
+    code = """
+import sys
+import jax
+from repro.configs import RunConfig, get_smoke
+from repro.core import OptimizerConfig
+from repro.data import DataConfig
+from repro.models import build_model
+from repro.train import Trainer
+
+ckpt_dir, steps, inject = sys.argv[1], int(sys.argv[2]), sys.argv[3] or None
+cfg = get_smoke("llama-60m")
+model = build_model(cfg)
+t = Trainer(
+    model,
+    OptimizerConfig(name="gum", lr=1e-3, rank=4, gamma=1, period=3,
+                    rank_policy="stepwise:0=4,6=2", rank_ladder=(2, 4)),
+    RunConfig(steps=steps, ckpt_dir=ckpt_dir, ckpt_every=4, log_every=0,
+              seed=0),
+    DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2, seed=0),
+    resilience="", inject=inject,
+)
+r = t.train()
+print("RESUMED_FROM", r.resumed_from)
+print("TRAIN_DONE", r.final_step)
+"""
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+    def run(ckpt_dir, steps, inject=""):
+        return subprocess.run(
+            [sys.executable, "-c", code, ckpt_dir, str(steps), inject],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+
+    d_kill, d_ref = str(tmp_path / "kill"), str(tmp_path / "ref")
+    # killed run: SIGKILL after 2 leaves of the step-12 save (the stepwise
+    # rank change 4->2 lands at count 6, well before the kill)
+    r1 = run(d_kill, 16, "kill_save@12#2")
+    assert r1.returncode == -9, (r1.returncode, r1.stdout, r1.stderr)
+    from repro.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(d_kill)
+    assert mgr.latest_step() == 8          # 12 never committed
+    assert mgr.latest_verified_step() == 8
+    # the aborted write left only an uncommitted tmp dir behind
+    assert any(n.endswith(".tmp") for n in os.listdir(d_kill))
+
+    # resume to completion; reference run straight through
+    r2 = run(d_kill, 16)
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "RESUMED_FROM 8" in r2.stdout, r2.stdout
+    assert not any(n.endswith(".tmp") for n in os.listdir(d_kill))
+    r3 = run(d_ref, 16)
+    assert r3.returncode == 0, r3.stdout + r3.stderr
+
+    # bit-exact final state, including the rank-policy extras
+    ka = CheckpointManager(d_kill)
+    kb = CheckpointManager(d_ref)
+    ea, eb = ka.read_extra(16), kb.read_extra(16)
+    assert ea["rank_policy"]["map"] == eb["rank_policy"]["map"]
+    assert ea["rank_policy"]["map"]["default"] == 2  # the change survived
+
+    # rebuild the restore template at the saved rank state, then compare
+    from repro.configs import RunConfig, get_smoke
+    from repro.core import OptimizerConfig
+    from repro.data import DataConfig
+    from repro.models import build_model
+    from repro.train import Trainer
+
+    cfg = get_smoke("llama-60m")
+    like_t = Trainer(
+        build_model(cfg),
+        OptimizerConfig(name="gum", lr=1e-3, rank=4, gamma=1, period=3,
+                        rank_policy="stepwise:0=4,6=2", rank_ladder=(2, 4)),
+        RunConfig(steps=16, ckpt_dir=str(tmp_path / "like"), ckpt_every=4,
+                  log_every=0, seed=0),
+        DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2, seed=0),
+    )
+    like_t.rank_ctrl.load_state_dict(ea["rank_policy"])
+    like_t._set_optimizer(like_t.rank_ctrl.transform())
+    like = like_t.init_state()
+    (pa, sa), _ = ka.restore(16, like)
+    (pb, sb), _ = kb.restore(16, like)
+    for x, y in zip(jax.tree_util.tree_leaves((pa, sa)),
+                    jax.tree_util.tree_leaves((pb, sb))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
