@@ -28,6 +28,11 @@ test existed).
   resilience                — health-monitor overhead, snapshot/rollback
                               latency, per-save checksum cost (PR 8;
                               writes BENCH_resilience.json)
+  sharded_step              — ZeRO-sharded fused step: per-device state
+                              bytes vs mesh size, boundary-gather wire
+                              bytes, steady-step time sharded vs
+                              replicated (PR 9; writes
+                              BENCH_sharded_step.json)
   kernel_micro              — per-kernel wall-time microbenchmarks (CPU
                               interpret/xla; indicative only, not TPU)
 """
@@ -98,6 +103,7 @@ SUITES = [
     "rank_policy",
     "audit_matrix",
     "resilience",
+    "sharded_step",
 ]
 
 # Suites that commit a results/BENCH_*.json trajectory.  A registered suite
@@ -109,6 +115,7 @@ RESULT_JSON = {
     "rank_policy": "BENCH_rank_policy.json",
     "audit_matrix": "BENCH_audit_matrix.json",
     "resilience": "BENCH_resilience.json",
+    "sharded_step": "BENCH_sharded_step.json",
 }
 
 

@@ -230,7 +230,10 @@ def audit_sharded(
     """
     (data_axis, n_shards), = mesh_axes  # pure-DP path: exactly one axis
     n_shards = int(n_shards)
+    shard_state = bool(cfg.shard_state)
     name = f"sharded:{_cell_name(cfg)}@{data_axis}={n_shards}"
+    if shard_state:
+        name += "+zero"
     report = AuditReport(name=name)
 
     transform = build_optimizer(cfg)
@@ -243,11 +246,12 @@ def audit_sharded(
     jaxpr, records, counts, (params, opt_state, batch) = trace_sharded_step(
         model, transform, n_shards=n_shards, batch_size=batch_size,
         reduce_dtype=reduce_dtype, grad_clip=grad_clip, data_axis=data_axis,
+        shard_state=shard_state,
     )
 
     expected = expected_collective_schedule(
         transform, params, n_shards=n_shards, reduce_dtype=reduce_dtype,
-        data_axis=data_axis)
+        data_axis=data_axis, shard_state=shard_state)
     report.extend(collective_schedule_findings(
         records, expected, reduce_dtype=reduce_dtype, params=params,
         where=name))
@@ -266,7 +270,8 @@ def audit_sharded(
 
     wire = wire_bytes_model(records, n_shards)
     mem = per_shard_memory(params, opt_state, batch,
-                           n_shards=n_shards, reduce_dtype=reduce_dtype)
+                           n_shards=n_shards, reduce_dtype=reduce_dtype,
+                           shard_state=shard_state)
     report.summary.update({
         "n_shards": n_shards,
         "collectives": launch_count.format_counts(
@@ -294,7 +299,8 @@ def audit_sharded(
     mesh = Mesh(np.asarray(jax.devices()[:n_shards]), (data_axis,))
     _, jit_builder = make_shardmap_train_step(
         model, transform, mesh,
-        grad_clip=grad_clip, reduce_dtype=reduce_dtype, data_axis=data_axis)
+        grad_clip=grad_clip, reduce_dtype=reduce_dtype, data_axis=data_axis,
+        shard_state=shard_state)
     lowered = jit_builder(params, opt_state).lower(
         params, opt_state, batch).as_text()
     args_info = parse_main_args(lowered)
@@ -412,6 +418,11 @@ def main(argv=None) -> int:
                          "forces host CPU devices to cover the mesh)")
     ap.add_argument("--mesh", default="data=8", metavar="AXIS=N",
                     help="mesh spec for --sharded (default: data=8)")
+    ap.add_argument("--shard-state", action="store_true",
+                    help="audit the ZeRO-sharded fused step (implies "
+                         "--fuse-families): family-stacked projected state "
+                         "partitioned over the data axis, boundary gathers "
+                         "expected per shardable family")
     ap.add_argument("--reduce-dtype", default="bf16",
                     choices=sorted(_REDUCE_DTYPES),
                     help="declared gradient-reduction dtype for --sharded")
@@ -431,9 +442,10 @@ def main(argv=None) -> int:
         cfg = OptimizerConfig(
             name=args.optimizer, rank=args.rank, period=args.period,
             gamma=1, kernel_impl="jnp",
-            fuse_families=args.fuse_families,
+            fuse_families=args.fuse_families or args.shard_state,
             fused_epilogue=args.fused_epilogue,
             rank_ladder=args.rank_ladder,
+            shard_state=args.shard_state,
         )
         rep = audit_sharded(
             cfg, arch=args.arch or "llama-60m-smoke", mesh_axes=mesh_axes,

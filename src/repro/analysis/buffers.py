@@ -185,33 +185,46 @@ def replication_findings(args: Iterable[ArgInfo], *, n_params: int,
 
 
 def per_shard_memory(params: PyTree, opt_state: PyTree, batch: PyTree, *,
-                     n_shards: int, reduce_dtype=jnp.bfloat16) -> dict:
+                     n_shards: int, reduce_dtype=jnp.bfloat16,
+                     shard_state: bool = False) -> dict:
     """Static per-shard peak bytes for one sharded train step, from
     ``ShapeDtypeStruct`` trees (nothing allocates).  Reuses the PR-6
     accountant (:func:`repro.core.api.state_bytes`) for every tree term.
 
-    Model: params + opt state are replicated (pure-DP variant), gradients
-    exist once at fp32 (the accumulate) plus once at ``reduce_dtype`` (the
-    wire copy inside the psum), and the batch is split 1/N over the data
-    axis — the per-SHARD number, which is the whole point (RA605 guards the
-    accountant against silently reporting per-replica)."""
+    Model: params are replicated, gradients exist once at fp32 (the
+    accumulate) plus once at ``reduce_dtype`` (the wire copy inside the
+    psum), and the batch is split 1/N over the data axis — the per-SHARD
+    number, which is the whole point (RA605 guards the accountant against
+    silently reporting per-replica).  Opt state is replicated in the pure-DP
+    variant; with ``shard_state=True`` (ZeRO-sharded fused step) the
+    family-stacked low-rank leaves are charged 1/N
+    (:func:`repro.sharding.family_state_bytes` — the same divisibility rule
+    the runtime shards by)."""
+    from repro.sharding import family_state_bytes
+
     rd = jnp.dtype(reduce_dtype)
     n = max(int(n_shards), 1)
     p_leaves = [x for x in jax.tree_util.tree_leaves(params)
                 if hasattr(x, "shape")]
     p_elems = sum(int(_size(x)) for x in p_leaves)
+    opt_total = state_bytes(opt_state)
+    proj_total = sum(state_bytes(lr) for lr in find_lowrank_states(opt_state))
+    fam_total, fam_per_shard = family_state_bytes(opt_state, n)
+    saved = (fam_total - fam_per_shard) if shard_state else 0
     out = {
         "n_shards": n,
+        "shard_state": bool(shard_state),
         "params_bytes": state_bytes(params),
-        "opt_state_bytes": state_bytes(opt_state),
-        "proj_state_bytes": sum(
-            state_bytes(lr) for lr in find_lowrank_states(opt_state)),
+        "opt_state_bytes": opt_total,
+        "opt_state_bytes_per_shard": opt_total - saved,
+        "proj_state_bytes": proj_total,
+        "proj_state_bytes_per_shard": proj_total - saved,
         "grad_bytes_fp32": p_elems * 4,
         "grad_wire_bytes": p_elems * rd.itemsize,
         "batch_bytes_per_shard": -(-state_bytes(batch) // n),
     }
     out["peak_bytes_per_shard"] = (
-        out["params_bytes"] + out["opt_state_bytes"]
+        out["params_bytes"] + out["opt_state_bytes_per_shard"]
         + out["grad_bytes_fp32"] + out["grad_wire_bytes"]
         + out["batch_bytes_per_shard"]
     )

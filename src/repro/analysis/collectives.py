@@ -153,20 +153,28 @@ def expected_collective_schedule(
     n_shards: int,
     reduce_dtype=jnp.bfloat16,
     data_axis: str = "data",
+    shard_state: bool = False,
 ) -> dict:
-    """The collective schedule the pure-DP shard_map step must show, derived
+    """The collective schedule the shard_map step must show, derived
     statically from the param tree, the optimizer's ``chain_info`` ×
     :class:`~repro.core.family_plan.FamilyPlan` geometry, and the mesh.
 
-    Steady state: exactly ONE gradient psum (tree-level, one operand per
-    param leaf) at ``reduce_dtype`` plus one scalar f32 loss psum (the
-    ``pmean``).  Boundary: zero gathers today — params and projected state
-    are replicated by design in this variant, so a projector refresh implies
-    no extra wire traffic.  The per-family geometry is still derived and
-    reported (``families`` / ``boundary_gather_bytes_if_sharded``) because
-    it is the exact schedule ZeRO-style sharded projected state will have to
-    declare: one all-gather per family per refresh boundary.
+    Steady state (both variants): exactly ONE gradient psum (tree-level, one
+    operand per param leaf) at ``reduce_dtype`` plus one scalar f32 loss
+    psum (the ``pmean``) — the ZeRO-sharded family math is
+    leading-axis-parallel, so sharding the projected state adds nothing to
+    the steady schedule.
+
+    Boundary: with replicated state (``shard_state=False``) a projector
+    refresh implies no extra wire traffic — zero gathers.  With ZeRO-style
+    sharded projected state (``shard_state=True``) the refresh
+    re-materializes each shardable family's full stacked gradient: exactly
+    one cond-gated ``all_gather`` per fused family whose stack divides the
+    mesh axis (``lowrank_common.stack_shardable`` — the same rule the
+    runtime applies), with the per-shard fp32 gradient slice as payload.
     """
+    from repro.core.lowrank_common import stack_shardable
+
     rd = jnp.dtype(reduce_dtype)
     leaves = [x for x in jax.tree_util.tree_leaves(params)
               if hasattr(x, "shape")]
@@ -176,6 +184,18 @@ def expected_collective_schedule(
         n_families = sum(int(r.get("n_families", 0)) for r in plan_rows)
     except Exception:
         plan_rows, n_families = [], 0
+    n_gather = gather_payload = 0
+    if shard_state:
+        for row in plan_rows:
+            if not row.get("fused"):
+                continue
+            for L, m, n in row.get("stack_dims", []):
+                if stack_shardable(int(L), int(n_shards)):
+                    n_gather += 1
+                    # payload as the trace accounts it: the per-shard operand
+                    # (the local fp32 gradient slice) of the all_gather
+                    gather_payload += int(L) * int(m) * int(n) * 4 \
+                        // max(int(n_shards), 1)
     return {
         "grad_psum": {
             "count": 1,
@@ -194,15 +214,15 @@ def expected_collective_schedule(
             "phase": "steady",
         },
         "boundary_gather": {
-            # replicated projected state => refresh implies no gathers; the
-            # family geometry below is what a sharded-state PR turns into
-            # `count == families` boundary all-gathers.
-            "count": 0,
+            # replicated projected state => refresh implies no gathers;
+            # sharded state => one all_gather per shardable fused family.
+            "count": int(n_gather),
             "families": int(n_families),
-            "payload_bytes": 0,
+            "payload_bytes": int(gather_payload),
             "phase": "boundary",
         },
         "n_shards": int(n_shards),
+        "shard_state": bool(shard_state),
     }
 
 
@@ -412,7 +432,7 @@ def _bytes(n: int) -> str:
 def trace_sharded_step(model, optimizer: Transform, *, n_shards: int,
                        batch_size: int = 8, seq_len: int | None = None,
                        reduce_dtype=jnp.bfloat16, grad_clip: float = 1.0,
-                       data_axis: str = "data"):
+                       data_axis: str = "data", shard_state: bool = False):
     """Abstractly trace :func:`repro.launch.shardmap_fsdp.make_shardmap_train_step`
     on an ``AbstractMesh`` of ``n_shards`` devices — no real devices needed.
 
@@ -429,6 +449,7 @@ def trace_sharded_step(model, optimizer: Transform, *, n_shards: int,
     step, _ = make_shardmap_train_step(
         model, optimizer, mesh,
         grad_clip=grad_clip, reduce_dtype=reduce_dtype, data_axis=data_axis,
+        shard_state=shard_state,
     )
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     params = abstract_tree(params)

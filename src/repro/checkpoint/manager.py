@@ -311,7 +311,11 @@ class CheckpointManager:
                     f"{ref.shape}{hint}"
                 )
             if sh is not None:
-                out.append(jax.device_put(arr, sh))
+                # Cast BEFORE placing: device_put of a raw numpy array keeps
+                # its dtype, and a saved-fp32 / target-bf16 mismatch would
+                # otherwise survive restore only on the sharded path.
+                out.append(jax.device_put(
+                    np.asarray(arr, dtype=np.dtype(ref.dtype)), sh))
             else:
                 out.append(jnp.asarray(arr, dtype=ref.dtype))
         return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

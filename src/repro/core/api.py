@@ -210,3 +210,10 @@ class OptimizerConfig:
     # pad_rank_to=128, ladder steps inside one 128-lane bucket share kernel
     # shapes).  Empty = the policy's default (powers of two).
     rank_ladder: tuple[int, ...] = ()
+    # ZeRO-style sharded projected state (requires fuse_families=True and a
+    # data-parallel mesh): partition each family's projectors and projected
+    # moments across the data axis along the member-stack dim, all-gathering
+    # full gradients only at projector-refresh boundaries.  Read by the step
+    # builders (launch.shardmap_fsdp / train.Trainer) and the sharded
+    # auditor — the factory-built transform itself is layout-agnostic.
+    shard_state: bool = False

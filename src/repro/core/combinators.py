@@ -96,10 +96,14 @@ unchanged, so the knob is inert there (they still get the stacking win).
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import PartitionSpec as _P
 
 from .api import (
     PyTree,
@@ -125,6 +129,7 @@ from .lowrank_common import (
     lowrank_state_shape,
     proj_shape,
     scatter_blocks,
+    stack_shardable,
 )
 from .newton_schulz import muon_scale, newton_schulz
 
@@ -757,6 +762,49 @@ def with_matrix_routing(
 
 
 # ---------------------------------------------------------------------------
+# ZeRO-style family-state sharding context
+# ---------------------------------------------------------------------------
+
+_FAMILY_SHARDING = threading.local()
+
+
+@contextlib.contextmanager
+def family_sharding(mesh, axis: str):
+    """Declare that family-stacked low-rank state (projectors + projected
+    moments) is partitioned on mesh ``axis`` along the stack dimension.
+
+    Entered by the step builders (``launch.shardmap_fsdp`` /
+    ``train.Trainer``) around ``optimizer.update`` at *trace* time; the fused
+    path reads it via :func:`active_family_sharding` and routes each
+    shardable family's projector refresh through a shard-local
+    ``all_gather → SVD → slice`` (the ColossalAI ``distributed_galore``
+    schedule) so the new projectors are born sharded.  Steady-state family
+    math is leading-axis elementwise/batched and needs no collectives — GSPMD
+    partitions it from the in/out shardings alone.  ``mesh`` may be a
+    concrete :class:`jax.sharding.Mesh` or an ``AbstractMesh`` (the
+    collective auditor traces device-free)."""
+    prev = getattr(_FAMILY_SHARDING, "ctx", None)
+    _FAMILY_SHARDING.ctx = (mesh, axis)
+    try:
+        yield
+    finally:
+        _FAMILY_SHARDING.ctx = prev
+
+
+def active_family_sharding():
+    """The active ``(mesh, axis)`` family-sharding declaration, or None."""
+    return getattr(_FAMILY_SHARDING, "ctx", None)
+
+
+def family_shard_count(shard_ctx) -> int:
+    """Shard count of a ``(mesh, axis)`` context (1 when ctx is None)."""
+    if shard_ctx is None:
+        return 1
+    mesh, axis = shard_ctx
+    return int(mesh.shape[axis])
+
+
+# ---------------------------------------------------------------------------
 # lowrank — the projection wrapper
 # ---------------------------------------------------------------------------
 
@@ -883,6 +931,42 @@ def lowrank(
         )(g_mem, keys_proj)
         return p_mem.reshape((fam.fs.L,) + p_mem.shape[1 + len(mfs.lead):])
 
+    def _sharded_projectors(fam, g_stack, keys_proj, shard_ctx):
+        """Sharded refresh of one family under :func:`family_sharding`.
+
+        The stacked gradient arrives partitioned on its leading (stack) axis;
+        each shard re-materializes the FULL stacked gradient with one
+        ``all_gather`` (the only boundary collective — the count the schedule
+        auditor asserts), computes every member's projector exactly as the
+        replicated path would (same gradient, same keys → bit-identical
+        values), and keeps only its own slice: the refreshed projectors are
+        born sharded, no second collective to redistribute them."""
+        mesh, axis = shard_ctx
+        loc = fam.fs.L // family_shard_count(shard_ctx)
+
+        def body(g_loc, keys):
+            g_full = jax.lax.all_gather(g_loc, axis, axis=0, tiled=True)
+            p_full = _stacked_projectors(fam, g_full, keys)
+            k = jax.lax.axis_index(axis)
+            return jax.lax.dynamic_slice_in_dim(p_full, k * loc, loc, axis=0)
+
+        return _shard_map(
+            body, mesh=mesh, in_specs=(_P(axis), _P()), out_specs=_P(axis),
+            check_rep=False,
+        )(g_stack, keys_proj)
+
+    def _refresh_projectors(fam, g_stack, keys_proj):
+        """Dispatch one family's projector refresh: sharded when a
+        family-sharding context is active and the stack divides the axis,
+        replicated otherwise (the non-divisible fallback keeps auditor
+        expectation and runtime consistent — both count only divisible
+        families as gathered)."""
+        shard_ctx = active_family_sharding()
+        if shard_ctx is not None \
+                and stack_shardable(fam.fs.L, family_shard_count(shard_ctx)):
+            return _sharded_projectors(fam, g_stack, keys_proj, shard_ctx)
+        return _stacked_projectors(fam, g_stack, keys_proj)
+
     def _plan_leaves(params, grads=None):
         """Flatten params (and optionally grads up to them) and build the
         family plan.  Grad/param trees must mask together in fused mode."""
@@ -945,7 +1029,7 @@ def lowrank(
                 p_proj = jax.lax.cond(
                     refresh,
                     lambda _, fam=fam, g32=g32, kp=keys_proj:
-                        _stacked_projectors(fam, g32, kp),
+                        _refresh_projectors(fam, g32, kp),
                     lambda _, fi=fi: state.projs[fi],
                     None,
                 )
@@ -1016,7 +1100,7 @@ def lowrank(
             p_new = jax.lax.cond(
                 refresh_now,
                 lambda _, fam=fam, g32=g32, kp=keys_proj:
-                    _stacked_projectors(fam, g32, kp),
+                    _refresh_projectors(fam, g32, kp),
                 lambda _, fi=fi: state.projs[fi],
                 None,
             )

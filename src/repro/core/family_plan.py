@@ -109,6 +109,13 @@ def plan_stats(plan: FamilyPlan) -> dict:
             f"x{f.seg.members}"
             for f in plan.families
         ],
+        # Stacked super-leaf dims [L, m, n] per family — the geometry the
+        # ZeRO-sharded schedule model needs: a family shards (and therefore
+        # all-gathers its L*m*n fp32 gradient at refresh boundaries) iff
+        # L % n_shards == 0 (see lowrank_common.stack_shardable).
+        "stack_dims": [
+            [f.fs.L, f.member_fs.m, f.member_fs.n] for f in plan.families
+        ],
     }
 
 

@@ -68,6 +68,24 @@ def lowrank_state_shape(fs: FamilyShape) -> tuple[int, ...]:
     return fs.lead + (fs.m, fs.rank)
 
 
+def stack_shardable(L: int, n_shards: int) -> bool:
+    """Whether an ``(L, ...)`` family stack partitions evenly over
+    ``n_shards`` data shards.  This single predicate is applied by BOTH the
+    runtime (the sharded projector refresh in ``combinators``) and the
+    closed-form collective-schedule model (``repro.analysis.collectives``) —
+    keeping them one rule is what makes the audited boundary-gather count
+    always match what actually traces.  Non-divisible families stay
+    replicated (no gather) rather than padding the stack."""
+    return n_shards >= 1 and L % n_shards == 0
+
+
+def stacked_grad_bytes(fs: FamilyShape) -> int:
+    """fp32 bytes of one family's stacked gradient ``(L, m, n)`` — the
+    operand of the boundary ``all_gather`` in the sharded fused step (the
+    refresh gathers the gradient, never the moments)."""
+    return fs.L * fs.m * fs.n * 4
+
+
 def project(p: jax.Array, g: jax.Array, side: str) -> jax.Array:
     """Low-rank projection. p: (*lead, s, r), g: (*lead, m, n)."""
     if side == "left":

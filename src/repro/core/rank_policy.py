@@ -534,10 +534,20 @@ class RankPolicyController:
     are cached per map, so recompilation is bounded by the policy ladder."""
 
     def __init__(self, policy: RankPolicy, build: Callable[[RankMap], Any],
-                 *, period: int, default_rank: int = 128):
+                 *, period: int, default_rank: int = 128,
+                 reshard: Optional[Callable[[PyTree], PyTree]] = None):
+        """``reshard(opt_state) -> opt_state`` is applied to every migrated
+        state before it is returned: under a mesh the migrated leaves come
+        out of ``migrate_opt_state`` with whatever placement the slicing ops
+        produced, so the caller passes a re-derive-and-re-apply hook (the
+        Trainer uses ``jax.device_put`` with a freshly derived
+        ``opt_state_sharding``) — this is what makes spectral policies work
+        under FSDP/ZeRO-sharded state instead of silently de-sharding on the
+        first migration."""
         self.policy = policy
         self.build = build
         self.period = int(period)
+        self.reshard = reshard
         self._pstate = policy.init_state()
         self._map = policy.initial_map(default_rank)
         self._cache: dict[RankMap, Any] = {}
@@ -586,6 +596,8 @@ class RankPolicyController:
             return opt_state, False
         new_t = self.transform(new_map)
         migrated = migrate_opt_state(opt_state, new_t.init(params))
+        if self.reshard is not None:
+            migrated = self.reshard(migrated)
         self._map = new_map
         self.history.append((count, new_map))
         return migrated, True

@@ -32,3 +32,16 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     for s in shape:
         n *= s
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_data_mesh(n_shards: int, axis: str = "data"):
+    """1-D data-parallel mesh over the first ``n_shards`` devices — the mesh
+    the shard_map FSDP step and the ZeRO-sharded fused step run on (tests and
+    benchmarks pair it with ``devices.force_host_device_count``)."""
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        raise RuntimeError(
+            f"data mesh needs {n_shards} devices, found {len(devices)} — "
+            "call launch.devices.force_host_device_count first"
+        )
+    return jax.make_mesh((n_shards,), (axis,), devices=devices[:n_shards])

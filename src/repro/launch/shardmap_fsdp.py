@@ -30,7 +30,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.api import Transform, apply_updates, clip_by_global_norm, global_norm
+from repro.core.combinators import family_sharding
 from repro.models.transformer import Model
+from repro.sharding import family_state_sharding
 
 PyTree = Any
 
@@ -43,10 +45,24 @@ def make_shardmap_train_step(
     grad_clip: float = 0.0,
     reduce_dtype=jnp.bfloat16,
     data_axis: str = "data",
+    shard_state: bool = False,
 ):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
-    Params/opt_state replicated; batch sharded on axis 0 over ``data_axis``.
+    Params replicated; batch sharded on axis 0 over ``data_axis``.
+
+    ``shard_state=False`` (pure DP): opt_state replicated too.
+
+    ``shard_state=True`` (ZeRO-style, requires a ``fuse_families=True``
+    optimizer): family-stacked projectors and projected moments partition on
+    ``data_axis`` along the member-stack dim.  The steady-state collective
+    schedule is UNCHANGED — still exactly one reduce-dtype gradient psum plus
+    one loss pmean, zero gathers (the per-family optimizer math is
+    leading-axis-parallel, so GSPMD partitions it from the state shardings
+    alone); the only addition is one cond-gated ``all_gather`` per shardable
+    family at projector-refresh boundaries, re-materializing the full stacked
+    gradient for the SVD before the new projectors are sliced back out
+    sharded (see ``combinators.family_sharding``).
     """
     cfg = model.cfg
 
@@ -93,7 +109,11 @@ def make_shardmap_train_step(
         if grad_clip > 0:
             grads = clip_by_global_norm(grads, grad_clip)
         gnorm = global_norm(grads)
-        updates, opt_state = optimizer.update(grads, opt_state, params)
+        if shard_state:
+            with family_sharding(mesh, data_axis):
+                updates, opt_state = optimizer.update(grads, opt_state, params)
+        else:
+            updates, opt_state = optimizer.update(grads, opt_state, params)
         params = apply_updates(params, updates)
         return params, opt_state, {"loss": loss.astype(jnp.float32),
                                    "grad_norm": gnorm,
@@ -101,10 +121,13 @@ def make_shardmap_train_step(
 
     def jit_step(params, opt_state):
         psh = jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), params)
-        osh = jax.tree_util.tree_map(
-            lambda x: NamedSharding(mesh, P()) if hasattr(x, "shape") else None,
-            opt_state,
-        )
+        if shard_state:
+            osh = family_state_sharding(opt_state, mesh, data_axis)
+        else:
+            osh = jax.tree_util.tree_map(
+                lambda x: NamedSharding(mesh, P()) if hasattr(x, "shape") else None,
+                opt_state,
+            )
         bsh = {"tokens": NamedSharding(mesh, P(data_axis))}
         return jax.jit(
             train_step,
@@ -122,6 +145,7 @@ def make_shardmap_train_step(
         "n_shards": int(n_shards),
         "grad_clip": float(grad_clip),
         "donate_argnums": (0, 1),
+        "shard_state": bool(shard_state),
     }
     train_step.sharded_step_info = step_info
     jit_step.sharded_step_info = step_info

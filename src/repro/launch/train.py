@@ -44,6 +44,12 @@ def main():
                     help="family-stacked fused optimizer execution: one "
                          "batched launch per shape family instead of one "
                          "per parameter leaf (trajectory-identical)")
+    ap.add_argument("--shard-state", action="store_true",
+                    help="ZeRO-style sharding of the family-stacked low-rank "
+                         "optimizer state over the data axis (requires "
+                         "--fuse-families and --mesh): steady steps stay "
+                         "fully sharded; full gradients are gathered only "
+                         "at projector-refresh boundaries")
     ap.add_argument("--fused-epilogue", action="store_true",
                     help="fold chain-tail epilogues (-lr, weight decay) into "
                          "the back-projection GEMM (back_project_epilogue "
@@ -114,8 +120,10 @@ def main():
     opt_cfg = OptimizerConfig(
         name=args.opt, lr=args.lr, rank=args.rank, gamma=args.gamma,
         period=args.period, kernel_impl=args.kernel_impl,
-        pad_rank_to=args.pad_rank_to, fuse_families=args.fuse_families,
+        pad_rank_to=args.pad_rank_to,
+        fuse_families=args.fuse_families or args.shard_state,
         fused_epilogue=args.fused_epilogue,
+        shard_state=args.shard_state,
         rank_policy=args.rank_policy,
         rank_ladder=tuple(int(r) for r in args.rank_ladder.split(",") if r),
     )

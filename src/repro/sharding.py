@@ -197,16 +197,95 @@ def per_shard_bytes(tree: Any, mesh: Mesh) -> int:
     return total
 
 
-def opt_state_sharding(opt_state: Any, mesh: Mesh) -> Any:
+def _family_stack_leaf_ids(opt_state: Any) -> set:
+    """ids of the leaves living inside FUSED (family-list layout)
+    ``LowRankState`` nodes — the stacked projectors, projected moments and
+    probes the ZeRO sharding partitions.  Per-leaf lowrank states (projs is a
+    params-shaped tree, not a list) are excluded: their leading dims are
+    block dims of one parameter, not a member stack."""
+    from repro.core.combinators import find_lowrank_states  # lazy (cycles)
+
+    ids: set = set()
+    for st in find_lowrank_states(opt_state):
+        if not isinstance(st.projs, list):
+            continue
+        for leaf in jax.tree_util.tree_leaves(st):
+            ids.add(id(leaf))
+    return ids
+
+
+def _family_shardable(x: Any, n_shards: int) -> bool:
+    from repro.core.lowrank_common import stack_shardable
+
+    return (hasattr(x, "ndim") and x.ndim >= 2
+            and stack_shardable(int(x.shape[0]), n_shards))
+
+
+def family_state_sharding(opt_state: Any, mesh: Mesh,
+                          axis: str = "data") -> Any:
+    """ZeRO-style sharding tree for a ``fuse_families=True`` optimizer state:
+    every family-stacked low-rank leaf (projectors, projected moments,
+    whatever the inner transform allocated per family) partitions on mesh
+    ``axis`` along its leading stack dim — members of a family land on
+    different shards — and everything else stays replicated, exactly like the
+    pure-DP shard_map step.  Families whose stack doesn't divide the axis
+    fall back to replicated (mirroring the runtime refresh fallback in
+    ``combinators``)."""
+    n = _axis_size(axis, mesh)
+    fam_ids = _family_stack_leaf_ids(opt_state)
+
+    def leaf_sharding(x):
+        if not hasattr(x, "shape"):
+            return None
+        if id(x) in fam_ids and _family_shardable(x, n) and n > 1:
+            return NamedSharding(mesh, P(axis))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(leaf_sharding, opt_state)
+
+
+def family_state_bytes(opt_state: Any, n_shards: int) -> tuple[int, int]:
+    """``(total, per_shard)`` bytes of the family-stacked low-rank state
+    under ``n_shards``-way ZeRO sharding — the closed-form the sharded-step
+    benchmark and the static memory accountant report (works on
+    ShapeDtypeStructs).  Non-divisible families are charged replicated."""
+    fam_ids = _family_stack_leaf_ids(opt_state)
+    total = per_shard = 0
+    for x in jax.tree_util.tree_leaves(opt_state):
+        if id(x) not in fam_ids or not hasattr(x, "shape"):
+            continue
+        nelem = 1
+        for d in x.shape:
+            nelem *= int(d)
+        nbytes = nelem * jax.numpy.dtype(x.dtype).itemsize
+        total += nbytes
+        if _family_shardable(x, n_shards):
+            per_shard += nbytes // max(n_shards, 1)
+        else:
+            per_shard += nbytes
+    return total, per_shard
+
+
+def opt_state_sharding(opt_state: Any, mesh: Mesh, *,
+                       family_axis: Optional[str] = None) -> Any:
     """Sharding for optimizer states.  State leaves live under the param path
     they belong to (e.g. families/blocks/attn/wq/r_low), so the param rules
     apply directly; full-shape moments inherit the param's exact spec, and
-    low-rank states keep whichever trailing axes still divide."""
+    low-rank states keep whichever trailing axes still divide.
+
+    With ``family_axis`` (the ZeRO-sharded fused step), family-stacked
+    low-rank leaves instead partition on that axis along their leading stack
+    dim — see :func:`family_state_sharding` for the rule."""
     from repro.core.api import tree_paths
 
     paths = tree_paths(opt_state)
+    fam_ids = _family_stack_leaf_ids(opt_state) if family_axis else set()
+    fam_n = _axis_size(family_axis, mesh) if family_axis else 1
 
     def leaf_sharding(path, x):
+        if family_axis and id(x) in fam_ids and fam_n > 1 \
+                and _family_shardable(x, fam_n):
+            return NamedSharding(mesh, P(family_axis))
         if not hasattr(x, "ndim") or x.ndim <= 1:
             return NamedSharding(mesh, P())
         spec = resolve_spec(spec_for_param(path, x), mesh)

@@ -113,6 +113,17 @@ class Trainer:
         self.data_cfg = data_cfg
         self.mesh = mesh
         self.microbatches = microbatches
+        # ZeRO-style sharded projected state: family-stacked low-rank leaves
+        # partition over the data axis (combinators.family_sharding routes
+        # the projector refresh through the boundary all_gather).  Only
+        # meaningful with a mesh and the fused family layout.
+        self.shard_state = bool(
+            getattr(opt_cfg, "shard_state", False)
+            and opt_cfg.fuse_families and mesh is not None)
+        self._family_axis = None
+        if self.shard_state:
+            names = mesh.axis_names
+            self._family_axis = "data" if "data" in names else names[0]
         self.ckpt = CheckpointManager(run_cfg.ckpt_dir, keep=run_cfg.keep_ckpts)
         self.monitor = StepTimeMonitor()
 
@@ -146,6 +157,13 @@ class Trainer:
                     policy,
                     lambda m: build_optimizer(opt_cfg, rank_map=m),
                     period=opt_cfg.period, default_rank=opt_cfg.rank,
+                    # A rank migration changes state shapes, so the sharding
+                    # must be re-derived from the MIGRATED state and
+                    # re-applied — otherwise the first spectral decision
+                    # silently de-shards (or mis-shards) the optimizer state
+                    # under a mesh.
+                    reshard=(self._reshard_opt_state
+                             if mesh is not None else None),
                 )
                 optimizer = self.rank_ctrl.transform()
         self._jit_cache: dict = {}
@@ -158,12 +176,26 @@ class Trainer:
 
     def _set_optimizer(self, optimizer):
         self.optimizer = optimizer
-        self._step_fn = make_train_step(
+        step_fn = make_train_step(
             self.model, optimizer, grad_clip=self.run.grad_clip,
             microbatches=self.microbatches,
             fault_gate=self._fault_gate,
             extra_metrics=self.resilience is not None,
         )
+        if self.shard_state:
+            from repro.core.combinators import family_sharding
+
+            mesh, axis = self.mesh, self._family_axis
+            inner_step = step_fn
+
+            def step_fn(*args, _inner=inner_step):
+                # entered at TRACE time: the fused lowrank path sees the
+                # context and emits the sharded (all_gather-at-boundary)
+                # projector refresh for shardable families
+                with family_sharding(mesh, axis):
+                    return _inner(*args)
+
+        self._step_fn = step_fn
 
     def init_state(self):
         key = jax.random.PRNGKey(self.run.seed)
@@ -183,7 +215,8 @@ class Trainer:
             jitted = jax.jit(self._step_fn, donate_argnums=(0, 1))
         else:
             psh = named_sharding_tree(params, self.mesh)
-            osh = opt_state_sharding(opt_state, self.mesh)
+            osh = opt_state_sharding(opt_state, self.mesh,
+                                     family_axis=self._family_axis)
             jitted = jax.jit(
                 self._step_fn,
                 in_shardings=(psh, osh) + (None,) * (n_in - 2),
@@ -194,6 +227,28 @@ class Trainer:
         return jitted
 
     # ------------------------------------------------------------- helpers
+
+    def _reshard_opt_state(self, opt_state):
+        """Re-derive the optimizer-state sharding from the live (possibly
+        just-migrated) state and re-apply it — the mesh counterpart of
+        ``opt_state_sharding`` at jit time.  No-op without a mesh."""
+        if self.mesh is None:
+            return opt_state
+        return jax.device_put(
+            opt_state,
+            opt_state_sharding(opt_state, self.mesh,
+                               family_axis=self._family_axis))
+
+    def _restore_shardings(self, params, opt_state):
+        """Shardings to re-apply on checkpoint restore (None off-mesh):
+        checkpoints hold host-gathered full arrays, so the restore must put
+        every leaf back on its derived sharding — including the family-
+        stacked ZeRO layout — or the first step pays a full reshard."""
+        if self.mesh is None:
+            return None
+        return (named_sharding_tree(params, self.mesh),
+                opt_state_sharding(opt_state, self.mesh,
+                                   family_axis=self._family_axis))
 
     def _ckpt_extra(self) -> Optional[dict]:
         if self.rank_ctrl is None:
@@ -222,7 +277,9 @@ class Trainer:
                 self.rank_ctrl.load_state_dict(extra["rank_policy"])
                 self._set_optimizer(self.rank_ctrl.transform())
         params, opt_state = self.init_state()
-        (params, opt_state), _ = self.ckpt.restore(step, (params, opt_state))
+        (params, opt_state), _ = self.ckpt.restore(
+            step, (params, opt_state),
+            shardings=self._restore_shardings(params, opt_state))
         return params, opt_state
 
     def _gather_probes(self, opt_state, step: int) -> Optional[dict]:
@@ -320,7 +377,8 @@ class Trainer:
                   f"({type(e).__name__}: {e})", flush=True)
         if latest is not None:
             (params, opt_state), _ = self.ckpt.restore(
-                latest, (params, opt_state)
+                latest, (params, opt_state),
+                shardings=self._restore_shardings(params, opt_state),
             )
             start_step, resumed_from = latest, latest
             stream.resume(start_step)  # exact skip-ahead

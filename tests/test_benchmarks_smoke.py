@@ -28,7 +28,7 @@ def test_run_py_smoke_executes_all_suites(tmp_path):
     for suite in ("synthetic_counterexample", "memory_table", "pretrain_proxy",
                   "bias_residual", "stable_rank", "roofline_report",
                   "optimizer_api", "fused_step", "rank_policy",
-                  "audit_matrix", "resilience"):
+                  "audit_matrix", "resilience", "sharded_step"):
         assert f"# --- {suite} ---" in res.stderr, suite
     # the fused-step suite produced its rows, including launch counts
     assert "fusedstep_gum_stacked" in out
@@ -42,6 +42,9 @@ def test_run_py_smoke_executes_all_suites(tmp_path):
     # so it runs identically with however many devices the runner has)
     assert "audit_sharded_gum_mesh8," in out
     assert "steady_wire_bytes=" in out
+    # the ZeRO sharded-step suite reported its per-device state row
+    assert "sharded_step_state_mesh8," in out
+    assert "opt_bytes_per_shard=" in out
     # registered suites all have their result JSONs committed
     assert "WARNING: suite" not in res.stderr
     # no result JSONs written in smoke mode (cwd is a scratch dir anyway)

@@ -70,6 +70,51 @@ def test_sharded_audit_catches_doctored_regressions(capfd):
     assert "RA604" in r.stdout
 
 
+ZERO_SCRIPT = """
+from repro.launch.devices import force_host_device_count
+force_host_device_count(8)
+import jax
+from repro.analysis import audit as audit_mod
+from repro.core import combinators
+
+ARGS = ["--sharded", "--mesh", "data=8", "--optimizer", "gum",
+        "--shard-state"]
+
+rc_clean = audit_mod.main(ARGS)
+assert rc_clean == 0, f"clean ZeRO sharded audit returned {rc_clean}"
+
+# doctored schedule: suppress the family-sharding context so the fused
+# refresh silently falls back to the replicated path (no boundary
+# all_gather in the trace) while the config still promises ZeRO sharding.
+# The closed-form schedule expects one cond-gated gather per shardable
+# family -> the mismatch must surface as RA606 and exit 1.
+orig = combinators.active_family_sharding
+combinators.active_family_sharding = lambda: None
+try:
+    rc_doctored = audit_mod.main(ARGS)
+finally:
+    combinators.active_family_sharding = orig
+assert rc_doctored == 1, f"doctored-schedule audit returned {rc_doctored}"
+
+print("ZERO_AUDIT_ACCEPTANCE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_zero_audit_catches_missing_boundary_gather(capfd):
+    """PR-9 acceptance (satellite 1): with ``--shard-state`` the expected
+    schedule's ``boundary_gather.count`` is the per-shardable-family count
+    (no longer 0), and a step whose refresh lost the sharded path fails the
+    audit with RA606."""
+    r = subprocess.run(
+        [sys.executable, "-c", ZERO_SCRIPT], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=REPO, timeout=600,
+    )
+    assert "ZERO_AUDIT_ACCEPTANCE_OK" in r.stdout, (
+        r.stdout[-3000:] + r.stderr[-3000:])
+    assert "RA606" in r.stdout
+
+
 @pytest.mark.slow
 def test_train_audit_gate_runs_before_step_zero():
     """``train.py --audit --mesh data=2`` runs the sharded audit and then
