@@ -33,6 +33,10 @@ test existed).
                               bytes, steady-step time sharded vs
                               replicated (PR 9; writes
                               BENCH_sharded_step.json)
+  telemetry                 — telemetry bus + in-jit instrumentation
+                              overhead vs the <=2% step-time budget, and
+                              bus write throughput (PR 10; writes
+                              BENCH_telemetry.json)
   kernel_micro              — per-kernel wall-time microbenchmarks (CPU
                               interpret/xla; indicative only, not TPU)
 """
@@ -104,6 +108,7 @@ SUITES = [
     "audit_matrix",
     "resilience",
     "sharded_step",
+    "telemetry",
 ]
 
 # Suites that commit a results/BENCH_*.json trajectory.  A registered suite
@@ -116,6 +121,21 @@ RESULT_JSON = {
     "audit_matrix": "BENCH_audit_matrix.json",
     "resilience": "BENCH_resilience.json",
     "sharded_step": "BENCH_sharded_step.json",
+    "telemetry": "BENCH_telemetry.json",
+}
+
+# Suites that deliberately do NOT commit a result JSON — paper-figure
+# reproductions whose output is the figure/table itself (stdout CSV or a
+# plot), not a machine-checked trajectory.  Every SUITES entry must appear
+# in exactly one of RESULT_JSON / NO_RESULT_JSON; anything in neither is
+# registry drift and warns below.
+NO_RESULT_JSON = {
+    "synthetic_counterexample": "Fig. 1 reproduction; CSV trajectory only",
+    "memory_table": "Tables 1 & 3; formula-derived rows, nothing to time",
+    "pretrain_proxy": "Table 4; hours-long at paper scale, CSV rows only",
+    "bias_residual": "Fig. 4; closed-form bias curve, CSV rows only",
+    "stable_rank": "Figs. 2/3/5; spectra depend on the sampled checkpoint",
+    "roofline_report": "aggregates results/dryrun/*.json, writes nothing new",
 }
 
 
@@ -126,6 +146,12 @@ def warn_missing_results() -> None:
             print(f"WARNING: suite '{suite}' is registered but "
                   f"results/{fname} is not committed — run "
                   f"PYTHONPATH=src python benchmarks/{suite}.py to record it",
+                  file=sys.stderr, flush=True)
+    for suite in SUITES:
+        if suite not in RESULT_JSON and suite not in NO_RESULT_JSON:
+            print(f"WARNING: suite '{suite}' is in neither RESULT_JSON nor "
+                  f"NO_RESULT_JSON — declare whether it commits a results "
+                  f"JSON (benchmarks/run.py registry drift)",
                   file=sys.stderr, flush=True)
 
 

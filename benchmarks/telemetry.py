@@ -1,0 +1,149 @@
+"""Telemetry subsystem cost model: step-time overhead + bus throughput.
+
+Two questions with acceptance budgets (ISSUE 10):
+
+  overhead    — step-time cost of the full telemetry path (in-jit subspace
+                instrumentation riding the probe slots + host-side bus with
+                a JSONL sink, metrics every step) vs a bare run of the same
+                trainer, budget <= 2% of step time
+  throughput  — raw bus write rate (records/s) through the JsonlSink, and
+                the per-record emit cost with no sinks attached (the price
+                every call site pays when telemetry is off at the bus level)
+
+Runs the pretrain-proxy setup (LLaMA-60M smoke, GUM) through the real
+Trainer so the measured loop is the shipping loop.  Writes
+BENCH_telemetry.json unless BENCH_SMOKE=1.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import statistics
+import tempfile
+import time
+
+from _smoke import smoke, steps as smoke_steps
+
+STEPS = 30
+BUDGET_PCT = 2.0
+
+
+def _trainer(tmp, telemetry, steps, batch=8, seq=128):
+    from repro.configs import RunConfig, get_smoke
+    from repro.core import OptimizerConfig
+    from repro.data import DataConfig
+    from repro.models import build_model
+    from repro.train import Trainer
+
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    return Trainer(
+        model,
+        OptimizerConfig(name="gum", lr=1e-3, rank=8, gamma=1, period=10,
+                        telemetry=telemetry is not None),
+        RunConfig(steps=steps, ckpt_dir=tmp, ckpt_every=0, log_every=0,
+                  resume=False),
+        DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch),
+        telemetry=telemetry,
+    )
+
+
+def _median_step_us(trainer, steps) -> float:
+    trainer.monitor.times.clear()
+    trainer.train(steps)
+    times = list(trainer.monitor.times)
+    # drop the compile step(s): the monitor window already caps history,
+    # but the first recorded samples still straddle warmup
+    times = times[2:] or times
+    return statistics.median(times) * 1e6
+
+
+def _bus_throughput(root):
+    from repro.telemetry import JsonlSink, Telemetry
+
+    n = 200 if smoke() else 20_000
+    path = os.path.join(root, "throughput.jsonl")
+    tele = Telemetry([JsonlSink(path)], run={"bench": "throughput"})
+    t0 = time.time()
+    for i in range(n):
+        tele.metric(i, "loss", 1.0)
+    dt = time.time() - t0
+    tele.close()
+    jsonl_rps = n / dt
+
+    # emit cost with zero sinks: what every migrated print() pays when the
+    # bus exists but nothing is attached
+    tele = Telemetry([], run={})
+    t0 = time.time()
+    for i in range(n):
+        tele.metric(i, "loss", 1.0)
+    nosink_us = (time.time() - t0) / n * 1e6
+    return jsonl_rps, nosink_us, n
+
+
+def main() -> None:
+    import jax
+
+    n = smoke_steps(STEPS, 2)
+    print("name,us_per_call,derived")
+    root = tempfile.mkdtemp(prefix="bench_telemetry_")
+    try:
+        # --- full-path overhead.  Step-time noise on a shared CPU box is
+        # larger than the effect and drifts on a seconds timescale, so the
+        # two trainers run many short segments tightly interleaved (order
+        # alternating each rep) and the overhead is computed between the
+        # per-side medians — slow phases land on both sides equally
+        # instead of being attributed to whichever side a min-vs-min
+        # comparison happened to favor.  The on-side is the maximal
+        # configuration: in-jit instrumentation (telemetry=True probe
+        # slots), metrics every step, JSONL sink. ---------------------------
+        t_off = _trainer(os.path.join(root, "off"), None, n)
+        t_on = _trainer(os.path.join(root, "on"), "every=1,stdout=0", n)
+        reps = 1 if smoke() else 12
+        offs, ons = [], []
+        for rep in range(reps):
+            pair = [(t_off, offs), (t_on, ons)]
+            if rep % 2:
+                pair.reverse()
+            for t, acc in pair:
+                acc.append(_median_step_us(t, n))
+        us_off = statistics.median(offs)
+        us_on = statistics.median(ons)
+        overhead = (us_on - us_off) / us_off * 100.0
+        print(f"telemetry_step_off,{us_off:.0f},median")
+        print(f"telemetry_step_on,{us_on:.0f},overhead={overhead:+.2f}%")
+
+        # --- bus throughput ----------------------------------------------
+        jsonl_rps, nosink_us, n_rec = _bus_throughput(root)
+        print(f"telemetry_bus_jsonl,{1e6 / jsonl_rps:.1f},"
+              f"{jsonl_rps:.0f}_records_per_s")
+        print(f"telemetry_bus_nosink,{nosink_us:.2f},per_record")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    if smoke():
+        return
+    out = {
+        "setup": {"arch": "llama-60m-smoke", "opt": "gum", "rank": 8,
+                  "period": 10, "steps": n, "device": jax.devices()[0]
+                  .platform},
+        "overhead": {"step_us_off": us_off, "step_us_on": us_on,
+                     "overhead_pct": overhead, "budget_pct": BUDGET_PCT,
+                     "rep_medians_us": {"off": offs, "on": ons}},
+        "throughput": {"jsonl_records_per_s": jsonl_rps,
+                       "nosink_us_per_record": nosink_us,
+                       "records": n_rec},
+    }
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir, "results", "BENCH_telemetry.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    main()

@@ -168,6 +168,12 @@ def _walk(info: dict, params, where: str, total: dict,
         else:
             unit_Ls = [family_shape(p, rank).L for p in leaves]
         _add(total, coeffs, len(unit_Ls))
+        if info.get("probe_spectrum") and not info.get("external_refresh"):
+            # The refresh-cond spectrum probe (rank policies / telemetry)
+            # projects PᵀG through the dispatch layer once per unit — the
+            # cond body traces on every step's jaxpr even though it only
+            # runs at refresh boundaries, so the traced count includes it.
+            _add(total, {"project": 1}, len(unit_Ls))
         core = _core(inner)
         if core is not None and core.get("kind") == "layerwise_unbias":
             # q = gamma/L < 1: the plain low-rank branch runs alongside the

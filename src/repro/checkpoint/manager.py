@@ -43,6 +43,7 @@ import json
 import os
 import re
 import shutil
+import time
 import zlib
 from typing import Any, Callable, Optional
 
@@ -71,11 +72,23 @@ def _crc(arr: np.ndarray) -> int:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, checksums: bool = True):
+    def __init__(self, directory: str, keep: int = 3, checksums: bool = True,
+                 telemetry=None):
         self.dir = directory
         self.keep = keep
         self.checksums = checksums   # False skips CRC computation on save
+        # Optional repro.telemetry.Telemetry bus: save / GC / corrupt-skip
+        # become structured "checkpoint" events instead of bare prints.
+        self.telemetry = telemetry
         os.makedirs(directory, exist_ok=True)
+
+    def _event(self, detail: str, *, step=None, severity="info", **data):
+        if self.telemetry is not None:
+            self.telemetry.event("checkpoint", detail, step=step,
+                                 severity=severity, **data)
+        elif severity not in ("info", "debug"):
+            # pre-bus behavior: only problems printed
+            print(detail, flush=True)
 
     # ------------------------------------------------------------- paths
 
@@ -102,6 +115,7 @@ class CheckpointManager:
 
         ``observer(leaf_index, total)`` fires after each leaf's shard hits
         disk — fault-injection kill hooks and progress reporting."""
+        t0 = time.time()
         final = self._step_dir(step)
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -138,6 +152,10 @@ class CheckpointManager:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)  # atomic commit
+        self._event(
+            f"checkpoint: saved step {step} ({len(leaves)} leaves, "
+            f"{(time.time() - t0) * 1e3:.0f} ms)", step=step,
+            severity="debug", action="save", leaves=len(leaves))
         self._gc()
         return final
 
@@ -159,6 +177,8 @@ class CheckpointManager:
             doomed = [s for s in doomed if s != protect]
         for s in doomed:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+            self._event(f"checkpoint: gc step {s}", severity="debug",
+                        action="gc", gc_step=s)
         # clean stale tmp dirs (crashed writers)
         for name in os.listdir(self.dir):
             if name.endswith(".tmp"):
@@ -338,6 +358,7 @@ class CheckpointManager:
                                            verify=True)
                 return step, tree, extra
             except CheckpointCorruptionError as e:
-                print(f"checkpoint: skipping corrupt step {step} ({e})",
-                      flush=True)
+                self._event(f"checkpoint: skipping corrupt step {step} ({e})",
+                            severity="warn", action="corrupt_skip",
+                            corrupt_step=step)
         return None

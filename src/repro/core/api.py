@@ -217,3 +217,10 @@ class OptimizerConfig:
     # builders (launch.shardmap_fsdp / train.Trainer) and the sharded
     # auditor — the factory-built transform itself is layout-agnostic.
     shard_state: bool = False
+    # In-jit telemetry (repro.telemetry): store projector drift and a
+    # sampled per-step bias residual in the spectrum-probe dicts (implies
+    # probe_spectrum).  Write-only from the update's point of view — the
+    # parameter trajectory is bit-exact with telemetry off, and the state
+    # gains zero leaves when off.  Budgeted <=2% step time
+    # (benchmarks/telemetry.py).
+    telemetry: bool = False

@@ -128,6 +128,7 @@ from .lowrank_common import (
     gather_blocks,
     lowrank_state_shape,
     proj_shape,
+    project as _raw_project,
     scatter_blocks,
     stack_shardable,
 )
@@ -839,10 +840,43 @@ def _spectrum_probe(p, g32, fs: FamilyShape):
             "mn": jnp.asarray((fs.m, fs.n), jnp.int32)}
 
 
-def _probe_zeros(fs: FamilyShape):
-    return {"sv2": jnp.zeros((fs.rank,), jnp.float32),
-            "g2": jnp.zeros((), jnp.float32),
-            "mn": jnp.asarray((fs.m, fs.n), jnp.int32)}
+def _probe_zeros(fs: FamilyShape, telemetry: bool = False):
+    pr = {"sv2": jnp.zeros((fs.rank,), jnp.float32),
+          "g2": jnp.zeros((), jnp.float32),
+          "mn": jnp.asarray((fs.m, fs.n), jnp.int32)}
+    if telemetry:
+        pr["drift"] = jnp.zeros((), jnp.float32)
+        pr["bias"] = jnp.zeros((), jnp.float32)
+        pr["bias_step"] = jnp.zeros((), jnp.int32)
+    return pr
+
+
+def _subspace_drift(p_old, p_new):
+    """How far the refreshed subspace moved: ``1 − mean squared overlap``
+    of the two orthonormal projector stacks via the r×r cross-Gram
+    ``P_oldᵀ P_new`` (0 = unchanged span, →1 = orthogonal).  Uses the raw
+    einsum (not the dispatch layer) so telemetry never perturbs launch
+    counts.  The very first refresh compares against the zero-initialised
+    projector and therefore reads 1."""
+    r = p_new.shape[-1]
+    blocks = 1
+    for d in p_new.shape[:-2]:
+        blocks *= d
+    gram = jnp.einsum("...sr,...sq->...rq", p_old.astype(jnp.float32),
+                      p_new.astype(jnp.float32))
+    overlap = jnp.sum(jnp.square(gram)) / (r * blocks)
+    return jnp.clip(1.0 - overlap, 0.0, 1.0)
+
+
+def _bias_residual(p, g32, side):
+    """Fraction of this step's gradient energy OUTSIDE the current subspace,
+    ``1 − ‖PᵀG‖²/‖G‖²`` — the live per-step counterpart of the offline
+    bias-residual benchmark (zero iff the projection loses nothing).  Raw
+    einsum again: launch-count neutral."""
+    s = _raw_project(p, g32, side)
+    g2 = jnp.sum(jnp.square(g32))
+    return jnp.clip(1.0 - jnp.sum(jnp.square(s)) / jnp.maximum(g2, 1e-30),
+                    0.0, 1.0)
 
 
 def lowrank(
@@ -861,6 +895,7 @@ def lowrank(
     fused_epilogue: bool = False,
     rank_policy=None,
     probe_spectrum: bool = False,
+    telemetry: bool = False,
 ) -> Transform:
     """Run ``inner`` inside a periodically-refreshed low-rank subspace.
 
@@ -892,7 +927,18 @@ def lowrank(
     ``LowRankState.probes`` at each refresh so a host-side
     :class:`~repro.core.rank_policy.RankPolicyController` can adapt the rank
     over training (rank is a *shape* in JAX, so the change itself happens
-    outside jit via ``migrate_opt_state`` + a rebuild at the new map)."""
+    outside jit via ``migrate_opt_state`` + a rebuild at the new map).
+
+    ``telemetry=True`` (implies ``probe_spectrum``) additionally stores, in
+    the same probe dicts: projector drift since the previous refresh
+    (captured inside the refresh cond), and a per-step bias-residual
+    estimate on one round-robin-sampled family (``lax.switch`` — only the
+    selected family's thin GEMM executes each step).  The probes are
+    write-only from the update's point of view — the parameter trajectory
+    is bit-exact with ``telemetry=False`` — and add zero state leaves when
+    off.  Host-side readout lives in :mod:`repro.telemetry.instrument`."""
+    if telemetry:
+        probe_spectrum = True
     if rank_policy is not None:
         probe_spectrum = probe_spectrum or bool(
             getattr(rank_policy, "wants_probes", False))
@@ -967,6 +1013,40 @@ def lowrank(
             return _sharded_projectors(fam, g_stack, keys_proj, shard_ctx)
         return _stacked_projectors(fam, g_stack, keys_proj)
 
+    def _probe_fresh(p_new, p_old, g32, fs, old_probe):
+        """Refresh-boundary probe: the spectrum sketch, plus (telemetry)
+        projector drift vs the outgoing subspace and the carried-over bias
+        fields — runs inside the refresh cond, so it costs nothing on
+        steady steps."""
+        pr = _spectrum_probe(p_new, g32, fs)
+        if telemetry:
+            pr["drift"] = _subspace_drift(p_old, p_new)
+            pr["bias"] = old_probe["bias"]
+            pr["bias_step"] = old_probe["bias_step"]
+        return pr
+
+    def _sample_bias(count, sites, probes):
+        """Round-robin bias-residual sampling: ``sites`` is a list of
+        (probe-index, projector, grad, side); one site's residual is
+        measured per step via ``lax.switch`` (only the selected branch
+        executes) and written into its probe dict.  Mutates ``probes`` in
+        place; the update path never reads these fields, so the parameter
+        trajectory is untouched."""
+        if not sites:
+            return
+        sel = (count - 1) % len(sites)
+        branches = [
+            (lambda _, p=p, g=g, s=s: _bias_residual(p, g, s))
+            for (_pi, p, g, s) in sites
+        ]
+        bias_val = jax.lax.switch(sel, branches, None)
+        for k, (pi, _p, _g, _s) in enumerate(sites):
+            pr = dict(probes[pi])
+            hit = sel == k
+            pr["bias"] = jnp.where(hit, bias_val, pr["bias"])
+            pr["bias_step"] = jnp.where(hit, count, pr["bias_step"])
+            probes[pi] = pr
+
     def _plan_leaves(params, grads=None):
         """Flatten params (and optionally grads up to them) and build the
         family plan.  Grad/param trees must mask together in fused mode."""
@@ -997,7 +1077,7 @@ def lowrank(
             )
             for fam in plan.families
         ]
-        probes = ([_probe_zeros(fam.fs) for fam in plan.families]
+        probes = ([_probe_zeros(fam.fs, telemetry) for fam in plan.families]
                   if probe_spectrum else None)
         return LowRankState(
             count=jnp.zeros((), jnp.int32), projs=projs,
@@ -1036,8 +1116,9 @@ def lowrank(
             if probe_spectrum and not external_refresh:
                 fam_probes.append(jax.lax.cond(
                     refresh,
-                    lambda _, p=p_proj, g=g32, fam=fam:
-                        _spectrum_probe(p, g, fam.fs),
+                    lambda _, p=p_proj, g=g32, fam=fam, fi=fi:
+                        _probe_fresh(p, state.projs[fi], g, fam.fs,
+                                     state.probes[fi]),
                     lambda _, fi=fi: state.probes[fi],
                     None,
                 ))
@@ -1051,6 +1132,14 @@ def lowrank(
             fam_projs.append(p_proj)
             fam_params.append(
                 stack_family(fam, leaves) if inner_wants_params else None
+            )
+
+        if telemetry and not external_refresh:
+            _sample_bias(
+                count,
+                [(fi, m.p, m.g, fam.fs.side)
+                 for fi, (m, fam) in enumerate(zip(fam_msgs, plan.families))],
+                fam_probes,
             )
 
         inner_out, new_inner = inner.update(fam_msgs, state.inner, fam_params)
@@ -1108,8 +1197,9 @@ def lowrank(
             if probe_spectrum:
                 new_probes.append(jax.lax.cond(
                     refresh_now,
-                    lambda _, p=p_new, g=g32, fam=fam:
-                        _spectrum_probe(p, g, fam.fs),
+                    lambda _, p=p_new, g=g32, fam=fam, fi=fi:
+                        _probe_fresh(p, state.projs[fi], g, fam.fs,
+                                     state.probes[fi]),
                     lambda _, fi=fi: state.probes[fi],
                     None,
                 ))
@@ -1143,7 +1233,7 @@ def lowrank(
         if probe_spectrum:
             probes = jax.tree_util.tree_map(
                 lambda p: None if p is None
-                else _probe_zeros(family_shape(p, rank)),
+                else _probe_zeros(family_shape(p, rank), telemetry),
                 params, is_leaf=_IS_NONE,
             )
         return LowRankState(
@@ -1162,7 +1252,7 @@ def lowrank(
         pr_leaves = (treedef.flatten_up_to(state.probes)
                      if probe_spectrum else None)
 
-        msg_leaves, proj_leaves, probe_leaves = [], [], []
+        msg_leaves, proj_leaves, probe_leaves, lr_sites = [], [], [], []
         for i, (g, proj, p) in enumerate(zip(g_leaves, p_leaves, leaves)):
             if g is None or p is None:
                 msg_leaves.append(None)
@@ -1190,10 +1280,12 @@ def lowrank(
                 else:
                     probe_leaves.append(jax.lax.cond(
                         refresh,
-                        lambda _: _spectrum_probe(p_proj, g32, fs),
-                        lambda _: pr_leaves[i],
+                        lambda _, p=p_proj, old=proj, g=g32, fs=fs, i=i:
+                            _probe_fresh(p, old, g, fs, pr_leaves[i]),
+                        lambda _, i=i: pr_leaves[i],
                         None,
                     ))
+                    lr_sites.append((i, p_proj, g32, fs.side))
             msg_leaves.append(ProjGrad(
                 p=p_proj, g=g32, fs=fs, kernel_impl=kernel_impl,
                 pad_rank_to=pad_rank_to, coeff=1.0,
@@ -1202,6 +1294,9 @@ def lowrank(
                 key=key_samp,
             ))
             proj_leaves.append(p_proj)
+
+        if telemetry and not external_refresh:
+            _sample_bias(count, lr_sites, probe_leaves)
 
         inner_updates = jax.tree_util.tree_unflatten(treedef, msg_leaves)
         inner_out, new_inner = inner.update(inner_updates, state.inner, params)
@@ -1271,8 +1366,9 @@ def lowrank(
             if probe_spectrum:
                 new_probes.append(jax.lax.cond(
                     refresh_now,
-                    lambda _: _spectrum_probe(p_new, g32, fs),
-                    lambda _: pr_leaves[i],
+                    lambda _, p=p_new, old=proj, g=g32, fs=fs, i=i:
+                        _probe_fresh(p, old, g, fs, pr_leaves[i]),
+                    lambda _, i=i: pr_leaves[i],
                     None,
                 ))
             msgs.append(RefreshMsg(fs=fs, key=key_samp))
@@ -1298,7 +1394,7 @@ def lowrank(
         "kernel_impl": kernel_impl, "pad_rank_to": pad_rank_to,
         "fuse_families": fuse_families, "fused_epilogue": fused_epilogue,
         "external_refresh": external_refresh, "rank_policy": rank_policy,
-        "probe_spectrum": probe_spectrum,
+        "probe_spectrum": probe_spectrum, "telemetry": telemetry,
     }
     if fuse_families:
         update_fused.refresh = refresh_fused

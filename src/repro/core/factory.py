@@ -47,7 +47,8 @@ def resolve_rank_policy(cfg: OptimizerConfig) -> Optional[RankPolicy]:
 
 def _fusion_kw(cfg: OptimizerConfig) -> dict:
     return {"fuse_families": cfg.fuse_families,
-            "fused_epilogue": cfg.fused_epilogue}
+            "fused_epilogue": cfg.fused_epilogue,
+            "telemetry": cfg.telemetry}
 
 
 def build_optimizer(

@@ -51,6 +51,7 @@ def fira_matrices(
     fuse_families: bool = False,
     fused_epilogue: bool = False,
     rank_policy=None,
+    telemetry: bool = False,
 ) -> Transform:
     return chain(
         lowrank(
@@ -60,7 +61,7 @@ def fira_matrices(
             rank=rank, period=period, projector=projector, seed=seed,
             kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
             fuse_families=fuse_families, fused_epilogue=fused_epilogue,
-            rank_policy=rank_policy,
+            rank_policy=rank_policy, telemetry=telemetry,
         ),
         scale_by_factor(scale),
         scale_by_lr(lr),

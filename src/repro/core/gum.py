@@ -106,6 +106,7 @@ def gum_matrices(
     fuse_families: bool = False,
     fused_epilogue: bool = False,
     rank_policy=None,
+    telemetry: bool = False,
 ) -> Transform:
     """GUM over matrix leaves (route 1-D/embedding leaves via :func:`gum`).
 
@@ -134,6 +135,7 @@ def gum_matrices(
         external_refresh=external_refresh, kernel_impl=kernel_impl,
         pad_rank_to=pad_rank_to, fuse_families=fuse_families,
         fused_epilogue=fused_epilogue, rank_policy=rank_policy,
+        telemetry=telemetry,
     )
     t = chain(lowrank_t, add_decayed_weights(weight_decay), scale_by_lr(lr))
     # Hook for gum_accum_tools: the external-refresh entry point + the fact
@@ -185,6 +187,7 @@ def unbiased_galore_adam(
     fuse_families: bool = False,
     fused_epilogue: bool = False,
     rank_policy=None,
+    telemetry: bool = False,
     lowrank_filter: Callable[[str, jax.Array], bool] = default_lowrank_filter,
 ) -> Transform:
     """Unbiased GaLore-Adam — a NEW method that is a pure composition:
@@ -206,7 +209,7 @@ def unbiased_galore_adam(
             subspace_iters=subspace_iters, reset_on_refresh=True,
             kernel_impl=kernel_impl, pad_rank_to=pad_rank_to,
             fuse_families=fuse_families, fused_epilogue=fused_epilogue,
-            rank_policy=rank_policy,
+            rank_policy=rank_policy, telemetry=telemetry,
         ),
         add_decayed_weights(weight_decay),
         scale_by_lr(lr),

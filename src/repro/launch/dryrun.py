@@ -66,7 +66,8 @@ def default_optimizer(arch: str, kernel_impl: str = "auto",
                       pad_rank_to: int = 0, fuse_families: bool = False,
                       fused_epilogue: bool = False,
                       rank_policy: str | None = None,
-                      rank_ladder: tuple[int, ...] = ()) -> OptimizerConfig:
+                      rank_ladder: tuple[int, ...] = (),
+                      telemetry: bool = False) -> OptimizerConfig:
     # GUM (the paper's method) with the TPU-native subspace projector.
     # kernel_impl is threaded into the compiled cell so dry runs lower the
     # SAME hot path as training ("pallas" forces the fused kernels into the
@@ -78,7 +79,7 @@ def default_optimizer(arch: str, kernel_impl: str = "auto",
         projector="subspace", base="muon", kernel_impl=kernel_impl,
         pad_rank_to=pad_rank_to, fuse_families=fuse_families,
         fused_epilogue=fused_epilogue, rank_policy=rank_policy,
-        rank_ladder=rank_ladder,
+        rank_ladder=rank_ladder, telemetry=telemetry,
     )
 
 
@@ -87,7 +88,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
              lowrank_accum: bool = False, kernel_impl: str = "auto",
              pad_rank_to: int = 0, fuse_families: bool = False,
              fused_epilogue: bool = False, rank_policy: str | None = None,
-             rank_ladder: tuple[int, ...] = (), audit: bool = False):
+             rank_ladder: tuple[int, ...] = (), audit: bool = False,
+             telemetry: bool = False):
     cfg = get_config(arch)
     if overrides:
         cfg = cfg.replace(**overrides)
@@ -112,7 +114,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
         if shape.kind == "train":
             ocfg = default_optimizer(arch, kernel_impl, pad_rank_to,
                                      fuse_families, fused_epilogue,
-                                     rank_policy, rank_ladder)
+                                     rank_policy, rank_ladder, telemetry)
             if opt_name != "gum":
                 ocfg = OptimizerConfig(name=opt_name, rank=128, gamma=2,
                                        period=200, projector="subspace",
@@ -121,7 +123,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "gum",
                                        fuse_families=fuse_families,
                                        fused_epilogue=fused_epilogue,
                                        rank_policy=rank_policy,
-                                       rank_ladder=rank_ladder)
+                                       rank_ladder=rank_ladder,
+                                       telemetry=telemetry)
             tools = None
             if lowrank_accum:
                 from repro.core.gum import gum_accum_tools
@@ -300,6 +303,13 @@ def main():
                     help="run the repro.analysis static audit on each train "
                          "cell's optimizer (findings land in the result "
                          "JSON under 'audit')")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="lower each train cell with the in-jit telemetry "
+                         "instrumentation compiled in "
+                         "(OptimizerConfig.telemetry) and write per-cell "
+                         "lower/compile spans + memory metrics to "
+                         "<out>/dryrun_events.jsonl — span/metric summaries "
+                         "for giant configs without executing a real run")
     ap.add_argument(
         "--set", action="append", default=[],
         help="ModelConfig overrides, e.g. --set attn_impl=xla_chunked "
@@ -331,6 +341,14 @@ def main():
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
     os.makedirs(args.out, exist_ok=True)
 
+    tele = None
+    if args.telemetry:
+        from repro.telemetry import JsonlSink, Telemetry
+
+        tele = Telemetry(
+            [JsonlSink(os.path.join(args.out, "dryrun_events.jsonl"))],
+            run={"mode": "dryrun", "opt": args.opt, "mesh": args.mesh})
+
     for arch, shape in cells:
         for multi_pod in meshes:
             mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -355,9 +373,16 @@ def main():
                                rank_ladder=tuple(
                                    int(r) for r in args.rank_ladder.split(",")
                                    if r),
-                               audit=args.audit)
+                               audit=args.audit,
+                               telemetry=args.telemetry)
                 res["overrides"] = overrides
                 res["tag"] = args.tag
+                if tele is not None and res["status"] == "ok":
+                    tele.record_span("lower", res["lower_s"], cell=tag)
+                    tele.record_span("compile", res["compile_s"], cell=tag)
+                    for k, v in (res.get("memory") or {}).items():
+                        tele.metric(0, f"memory.{k}", v, cell=tag)
+                    tele.event("cell", f"dryrun: {tag} ok", cell=tag)
             except Exception as e:  # record failures — they are bugs to fix
                 res = {
                     "arch": arch, "shape": shape, "mesh": mesh_name,
@@ -371,6 +396,8 @@ def main():
                   + (f" ({res.get('error','')[:200]})" if res["status"] == "error" else "")
                   + (f" compile={res.get('compile_s')}s" if res["status"] == "ok" else ""),
                   flush=True)
+    if tele is not None:
+        tele.close()
 
 
 if __name__ == "__main__":

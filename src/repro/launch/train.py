@@ -88,6 +88,24 @@ def main():
     ap.add_argument("--inject-seed", type=int, default=0,
                     help="seed for the fault plan's corruption RNG "
                          "(bit positions etc.)")
+    ap.add_argument("--telemetry", nargs="?", const="", default=None,
+                    metavar="SPEC",
+                    help="turn on the telemetry run log (repro.telemetry): "
+                         "bare flag = defaults, or a knob spec like "
+                         "'every=10,stdout=0,memory=256' (any "
+                         "TelemetryConfig field).  One run writes one "
+                         "schema-versioned events.jsonl (step metrics, "
+                         "health/recovery/fault/rank-policy/checkpoint "
+                         "events, timing spans) plus in-jit subspace "
+                         "instrumentation (captured energy, projector "
+                         "drift, sampled bias residual); summarize with "
+                         "python -m repro.telemetry.report")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="events.jsonl path override "
+                         "(default <ckpt-dir>/events.jsonl)")
+    ap.add_argument("--profile-steps", default=None, metavar="A:B",
+                    help="jax.profiler trace window covering steps [A, B), "
+                         "written under <ckpt-dir>/profile")
     ap.add_argument("--audit", action="store_true",
                     help="run the full static audit — including the sharded "
                          "collective/buffer passes when --mesh is set — "
@@ -126,6 +144,7 @@ def main():
         shard_state=args.shard_state,
         rank_policy=args.rank_policy,
         rank_ladder=tuple(int(r) for r in args.rank_ladder.split(",") if r),
+        telemetry=args.telemetry is not None,
     )
     run_cfg = RunConfig(
         steps=args.steps, ckpt_dir=args.ckpt_dir, resume=not args.no_resume,
@@ -173,7 +192,9 @@ def main():
 
     trainer = Trainer(model, opt_cfg, run_cfg, data_cfg, mesh=mesh,
                       microbatches=args.microbatches,
-                      resilience=args.resilience, inject=inject)
+                      resilience=args.resilience, inject=inject,
+                      telemetry=args.telemetry, events_out=args.events_out,
+                      profile_steps=args.profile_steps)
     result = trainer.train()
     print(
         f"done: step={result.final_step} "
@@ -186,6 +207,11 @@ def main():
         print(f"resilience: recoveries={fired or '{}'} "
               f"health_events={len(result.health_events)} "
               f"faults_fired={len(result.fault_log)}")
+    if result.events_path:
+        # train() already emitted the closing counters record; only the
+        # sink handles remain, and process exit covers those.
+        print(f"telemetry: {result.events_path} "
+              f"(python -m repro.telemetry.report {args.ckpt_dir})")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import statistics
 import time
 from typing import Any, Callable, Optional
@@ -42,6 +43,13 @@ from repro.data import DataConfig, build_stream
 from repro.launch.steps import make_train_step
 from repro.models.transformer import Model
 from repro.sharding import named_sharding_tree, opt_state_sharding, use_mesh
+from repro.telemetry import (
+    JsonlSink,
+    MemorySink,
+    StdoutSink,
+    Telemetry,
+    TelemetryConfig,
+)
 
 
 class StepTimeMonitor:
@@ -77,6 +85,8 @@ class TrainResult:
     recovery_counts: dict = dataclasses.field(default_factory=dict)
     recovery_trace: list = dataclasses.field(default_factory=list)
     fault_log: list = dataclasses.field(default_factory=list)
+    # Path of the run's events.jsonl (None when telemetry is off).
+    events_path: Optional[str] = None
 
 
 class Trainer:
@@ -91,6 +101,9 @@ class Trainer:
         optimizer=None,
         resilience=None,
         inject=None,
+        telemetry=None,
+        events_out: Optional[str] = None,
+        profile_steps: Optional[str] = None,
     ):
         """``optimizer`` (a :class:`repro.core.api.Transform`) overrides the
         ``opt_cfg`` factory path — pass a hand-composed combinator chain
@@ -106,7 +119,19 @@ class Trainer:
 
         ``inject`` arms deterministic fault injection: a
         :class:`~repro.resilience.inject.FaultPlan` or its spec string
-        ("grad_nan@5;refresh_zero@13;kill_save@20#3")."""
+        ("grad_nan@5;refresh_zero@13;kill_save@20#3").
+
+        ``telemetry`` turns on the run log (repro.telemetry): True or ""
+        for defaults, a spec string ("every=10,stdout=0,memory=256"), or a
+        :class:`~repro.telemetry.TelemetryConfig`.  One run then writes one
+        schema-versioned ``events.jsonl`` (``events_out`` overrides the
+        default ``<ckpt_dir>/events.jsonl``) holding step metrics, every
+        health / recovery / fault / rank-policy / checkpoint event, and
+        timing spans.  The console is always driven through the same bus —
+        with telemetry off it degrades to the historical print lines.
+
+        ``profile_steps="A:B"`` opens a ``jax.profiler`` trace window
+        covering steps [A, B) (written under ``<ckpt_dir>/profile``)."""
         self.model = model
         self.opt_cfg = opt_cfg
         self.run = run_cfg
@@ -124,7 +149,42 @@ class Trainer:
         if self.shard_state:
             names = mesh.axis_names
             self._family_axis = "data" if "data" in names else names[0]
-        self.ckpt = CheckpointManager(run_cfg.ckpt_dir, keep=run_cfg.keep_ckpts)
+
+        # --- telemetry bus (repro.telemetry) ---
+        # The bus always exists: with telemetry off it carries only the
+        # stdout pretty-printer (console output unchanged from the print()
+        # era); enabling telemetry adds the JSONL sink — so console and
+        # events.jsonl are two sinks of ONE record stream and can never
+        # disagree.
+        self.tele_cfg = TelemetryConfig.parse(telemetry)
+        self.events_path = None
+        sinks = []
+        if self.tele_cfg is None or self.tele_cfg.stdout:
+            sinks.append(StdoutSink())
+        self.memory_sink = None
+        if self.tele_cfg is not None:
+            path = (events_out or self.tele_cfg.events
+                    or os.path.join(run_cfg.ckpt_dir, "events.jsonl"))
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            sinks.append(JsonlSink(path))
+            self.events_path = path
+            if self.tele_cfg.memory:
+                self.memory_sink = MemorySink(self.tele_cfg.memory)
+                sinks.append(self.memory_sink)
+        self.tele = Telemetry(sinks, run={
+            "optimizer": opt_cfg.name, "rank": str(opt_cfg.rank),
+            "period": opt_cfg.period, "seed": run_cfg.seed,
+            "steps": run_cfg.steps, "telemetry": self.tele_cfg is not None,
+        })
+        self._profile_window = None
+        self._profiling = False
+        if profile_steps:
+            a, _, b = str(profile_steps).partition(":")
+            self._profile_window = (int(a), int(b))
+
+        self.ckpt = CheckpointManager(run_cfg.ckpt_dir,
+                                      keep=run_cfg.keep_ckpts,
+                                      telemetry=self.tele)
         self.monitor = StepTimeMonitor()
 
         # --- resilience wiring (repro.resilience) ---
@@ -228,6 +288,42 @@ class Trainer:
 
     # ------------------------------------------------------------- helpers
 
+    def _profile(self, step: int) -> None:
+        """Opt-in ``jax.profiler`` trace window: start at step A, stop at
+        step B (``profile_steps="A:B"``).  Best-effort — profiler failures
+        must never take down training."""
+        a, b = self._profile_window
+        try:
+            if step == a and not self._profiling:
+                trace_dir = os.path.join(self.run.ckpt_dir, "profile")
+                jax.profiler.start_trace(trace_dir)
+                self._profiling = True
+                self.tele.event("profile", f"profiler: trace started -> "
+                                f"{trace_dir}", step=step)
+            elif step == b and self._profiling:
+                jax.profiler.stop_trace()
+                self._profiling = False
+                self.tele.event("profile", "profiler: trace stopped",
+                                step=step)
+                self._profile_window = None
+        except Exception as e:  # pragma: no cover - platform dependent
+            self.tele.event("profile", f"profiler: unavailable "
+                            f"({type(e).__name__}: {e})", step=step,
+                            severity="warn")
+            self._profile_window = None
+            self._profiling = False
+
+    def _stop_profile(self) -> None:
+        """Close a still-open trace window (run ended before step B)."""
+        if not self._profiling:
+            return
+        self._profiling = False
+        try:
+            jax.profiler.stop_trace()
+            self.tele.event("profile", "profiler: trace stopped at run end")
+        except Exception:  # pragma: no cover - never started
+            pass
+
     def _reshard_opt_state(self, opt_state):
         """Re-derive the optimizer-state sharding from the live (possibly
         just-migrated) state and re-apply it — the mesh counterpart of
@@ -264,8 +360,10 @@ class Trainer:
                        observer=observer)
         if self.fault_plan is not None:
             for ev in self.fault_plan.apply_ckpt_events(self.ckpt.dir, step):
-                print(f"step {step:6d} fault-injection: {ev.kind} on the "
-                      f"step-{step} checkpoint", flush=True)
+                self.tele.event(
+                    "fault", f"fault-injection: {ev.kind} on the "
+                    f"step-{step} checkpoint", step=step, severity="warn",
+                    kind=ev.kind)
 
     def _load_checkpoint(self, step: int):
         """Restore params/opt_state at ``step``, rebuilding the rank-policy
@@ -323,9 +421,11 @@ class Trainer:
             latest = self.ckpt.latest_verified_step()
             newest = self.ckpt.latest_step()
             if newest is not None and newest != latest:
-                print(f"checkpoint: newest committed step {newest} failed "
-                      f"verification — resuming from last verified "
-                      f"{latest}", flush=True)
+                self.tele.event(
+                    "checkpoint",
+                    f"checkpoint: newest committed step {newest} failed "
+                    f"verification — resuming from last verified "
+                    f"{latest}", severity="warn", action="resume_fallback")
         if latest is not None and self.rank_ctrl is not None:
             # The controller state determines the optimizer-state SHAPES, so
             # it must be rebuilt from the saved extras before the restore
@@ -343,8 +443,23 @@ class Trainer:
             # must never block training.
             from repro.analysis import audit_summary
 
-            print(audit_summary(self.optimizer, params,
-                                name=self.opt_cfg.name), flush=True)
+            self.tele.event("audit", audit_summary(self.optimizer, params,
+                                                   name=self.opt_cfg.name))
+            if self.tele_cfg is not None:
+                # Runtime launch-counter cross-check against the PR 6
+                # closed-form model — the RA-style assertion, as an event.
+                from repro.telemetry.instrument import launch_crosscheck
+
+                xc = launch_crosscheck(self.optimizer, params,
+                                       name=self.opt_cfg.name)
+                self.tele.event(
+                    "launch_crosscheck",
+                    f"audit[{self.opt_cfg.name}]: launch cross-check "
+                    f"{'ok' if xc['ok'] else 'MISMATCH'} "
+                    f"(traced {sum(xc['traced'].values())}/step)",
+                    severity="info" if xc["ok"] else "warn",
+                    expected=xc["expected"], traced=xc["traced"],
+                    unmodeled=xc["unmodeled"])
             if self.mesh is not None:
                 # Mesh run: also verify the jitted step's donation wiring on
                 # the lowered module (donated params/opt_state must alias
@@ -364,17 +479,20 @@ class Trainer:
                     .lower(*args).as_text())
                 n_donate = (len(jax.tree_util.tree_leaves(params))
                             + len(jax.tree_util.tree_leaves(opt_state0)))
-                print(f"audit[{self.opt_cfg.name}]: mesh donation "
-                      f"{sum(a.aliased for a in infos)}/{n_donate} args "
-                      f"alias outputs", flush=True)
+                self.tele.event(
+                    "audit", f"audit[{self.opt_cfg.name}]: mesh donation "
+                    f"{sum(a.aliased for a in infos)}/{n_donate} args "
+                    f"alias outputs")
                 for f in donation_findings(
                         infos, n_params=len(jax.tree_util.tree_leaves(params)),
                         n_opt=len(jax.tree_util.tree_leaves(opt_state0)),
                         where=self.opt_cfg.name):
-                    print("  " + f.format(), flush=True)
+                    self.tele.event("audit", "  " + f.format(),
+                                    severity="warn")
         except Exception as e:  # pragma: no cover - diagnostics only
-            print(f"audit[{self.opt_cfg.name}]: unavailable "
-                  f"({type(e).__name__}: {e})", flush=True)
+            self.tele.event("audit", f"audit[{self.opt_cfg.name}]: "
+                            f"unavailable ({type(e).__name__}: {e})",
+                            severity="warn")
         if latest is not None:
             (params, opt_state), _ = self.ckpt.restore(
                 latest, (params, opt_state),
@@ -388,8 +506,19 @@ class Trainer:
         loss_by_step: dict[int, float] = {}
         skipped = 0
         step = start_step
+        tele, tcfg = self.tele, self.tele_cfg
+        gamma_tracker = None
+        if tcfg is not None:
+            from repro.telemetry.instrument import (
+                GammaSlotTracker,
+                lowrank_family_metrics,
+            )
+
+            gamma_tracker = GammaSlotTracker()
         with use_mesh(self.mesh):
             while step < steps:
+                if self._profile_window is not None:
+                    self._profile(step)
                 t0 = time.time()
                 if self.rank_ctrl is not None:
                     opt_state, changed = self.rank_ctrl.maybe_update(
@@ -398,19 +527,23 @@ class Trainer:
                     if changed:
                         self._set_optimizer(self.rank_ctrl.transform())
                         step_jit = self._jit_step(params, opt_state)
-                        print(f"step {step:6d} rank-policy -> "
-                              f"{self.rank_ctrl.current_map}", flush=True)
+                        tele.record_span("rank_migration", time.time() - t0,
+                                         step=step)
+                        tele.event("rank_policy",
+                                   f"rank-policy -> "
+                                   f"{self.rank_ctrl.current_map}", step=step,
+                                   map=str(self.rank_ctrl.current_map))
                 if plan is not None:
                     for ev in plan.state_events(step):
                         opt_state = poison_projectors(opt_state, ev.kind)
-                        print(f"step {step:6d} fault-injection: {ev.kind}",
-                              flush=True)
+                        tele.event("fault", f"fault-injection: {ev.kind}",
+                                   step=step, severity="warn", kind=ev.kind)
                 tokens = jnp.asarray(next(stream))
                 if self._fault_gate is not None:
                     ev = plan.grad_event(step)
                     if ev is not None:
-                        print(f"step {step:6d} fault-injection: {ev.kind}",
-                              flush=True)
+                        tele.event("fault", f"fault-injection: {ev.kind}",
+                                   step=step, severity="warn", kind=ev.kind)
                     fault = (FaultGate.armed(ev) if ev is not None
                              else FaultGate.disarmed())
                     new_params, new_opt, metrics = step_jit(
@@ -429,6 +562,30 @@ class Trainer:
                     # the step itself zeroed the update (in-jit NaN guard)
                     skipped += 1
                 dt = time.time() - t0
+                refresh_step = (self.opt_cfg.period > 0
+                                and step % self.opt_cfg.period == 0)
+                tele.record_span(
+                    "step", dt, step=step + 1,
+                    kind="refresh" if refresh_step else "steady")
+                if tcfg is not None and (step + 1) % tcfg.every == 0:
+                    tele.metric(step + 1, "loss", loss)
+                    tele.metric(step + 1, "grad_norm",
+                                float(metrics["grad_norm"]))
+                if tcfg is not None and refresh_step:
+                    for rec in lowrank_family_metrics(opt_state):
+                        fam = rec["family"]
+                        tele.metric(step + 1, "rank", rec["rank"], family=fam)
+                        tele.metric(step + 1, "energy", rec["energy"],
+                                    family=fam)
+                        for k in ("drift", "bias"):
+                            if k in rec:
+                                tele.metric(step + 1, k, rec[k], family=fam)
+                    slots = gamma_tracker.observe(opt_state)
+                    if slots:
+                        tele.event(
+                            "gamma_slots",
+                            f"gamma-slots: {len(slots)} leaves tracked",
+                            step=step + 1, leaves=slots)
 
                 if health is not None:
                     report = health.observe(
@@ -445,16 +602,19 @@ class Trainer:
                         probes=self._gather_probes(opt_state, step),
                     )
                     for e in report.events:
-                        print(f"step {step:6d} health[{e.severity}] "
-                              f"{e.kind}: {e.detail}", flush=True)
+                        tele.event("health",
+                                   f"health[{e.severity}] "
+                                   f"{e.kind}: {e.detail}", step=step,
+                                   severity=e.severity, kind=e.kind)
                     action = recov.decide(report)
                     if action.kind == "refresh":
                         opt_state = force_refresh(opt_state,
                                                   self.opt_cfg.period)
                         recov.record(action, target=step + 1)
                         health.reset()
-                        print(f"step {step:6d} recovery: forced off-cycle "
-                              f"projector refresh", flush=True)
+                        tele.event("recovery", "recovery: forced off-cycle "
+                                   "projector refresh", step=step,
+                                   severity="warn", action="refresh")
                     elif action.kind in ("rollback", "restore"):
                         target, kind = None, action.kind
                         if action.kind == "rollback":
@@ -479,8 +639,10 @@ class Trainer:
                                      if kind != action.kind else action,
                                      target=target)
                         if target is not None:
-                            print(f"step {step:6d} recovery: {kind} -> "
-                                  f"step {target}", flush=True)
+                            tele.event("recovery",
+                                       f"recovery: {kind} -> step {target}",
+                                       step=step, severity="warn",
+                                       action=kind, target=target)
                             stream.resume(target)
                             loss_by_step = {k: v for k, v in
                                             loss_by_step.items()
@@ -489,9 +651,11 @@ class Trainer:
                             step_jit = self._jit_step(params, opt_state)
                             health.reset()
                             continue
-                        print(f"step {step:6d} recovery: {action.kind} "
-                              f"requested but nothing restorable — "
-                              f"continuing", flush=True)
+                        tele.event("recovery",
+                                   f"recovery: {action.kind} requested but "
+                                   f"nothing restorable — continuing",
+                                   step=step, severity="warn",
+                                   action=action.kind)
                 else:
                     self.monitor.record(step, dt)
 
@@ -502,9 +666,10 @@ class Trainer:
                              extra=self._ckpt_extra())
 
                 if self.run.ckpt_every and (step + 1) % self.run.ckpt_every == 0:
-                    self._save(step + 1, params, opt_state)
+                    with tele.span("ckpt_save", step=step + 1):
+                        self._save(step + 1, params, opt_state)
                 if self.run.log_every and (step + 1) % self.run.log_every == 0:
-                    print(f"step {step + 1:6d} loss {loss:.4f}", flush=True)
+                    tele.event("log", f"loss {loss:.4f}", step=step + 1)
                 step += 1
 
         # Final save — unless the loop's periodic save already committed
@@ -512,7 +677,11 @@ class Trainer:
         # state, e.g. injected corruption under test).
         if not (self.run.ckpt_every and steps % self.run.ckpt_every == 0
                 and steps > start_step):
-            self._save(steps, params, opt_state)
+            with self.tele.span("ckpt_save", step=steps):
+                self._save(steps, params, opt_state)
+        self._stop_profile()
+        if self.tele_cfg is not None:
+            self.tele.emit_counters(steps)
         return TrainResult(
             final_step=steps,
             losses=[v for _, v in sorted(loss_by_step.items())],
@@ -524,4 +693,5 @@ class Trainer:
             recovery_counts=dict(recov.counts) if recov is not None else {},
             recovery_trace=list(recov.trace) if recov is not None else [],
             fault_log=list(plan.log) if plan is not None else [],
+            events_path=self.events_path,
         )

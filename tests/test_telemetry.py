@@ -1,0 +1,413 @@
+"""Telemetry subsystem (ISSUE 10): bus/sink units, JSONL schema round-trip
+and golden file, in-jit instrumentation correctness (bit-exactness, probe
+payloads, launch cross-check), trainer event-stream determinism across
+seeded faulted reruns, and the report/diff CLI."""
+import io
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.telemetry import (
+    SCHEMA_VERSION,
+    JsonlSink,
+    MemorySink,
+    StdoutSink,
+    Telemetry,
+    TelemetryConfig,
+)
+from repro.telemetry.bus import read_jsonl
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data",
+                      "telemetry_golden.jsonl")
+
+
+class FakeClock:
+    """Deterministic bus clock: 100.0, 100.5, 101.0, ..."""
+
+    def __init__(self, t0=100.0, dt=0.5):
+        self.t = t0 - dt
+        self.dt = dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+def _emit_fixture(tele: Telemetry) -> None:
+    """One fixed record sequence — shared by the round-trip and golden
+    tests so the golden file is regenerable from this function alone."""
+    tele.metric(1, "loss", 4.25)
+    tele.metric(1, "energy", 0.75, family="8x16")
+    tele.event("fault", "fault-injection: grad_nan", step=3, severity="warn",
+               kind="grad_nan")
+    tele.event("audit", "audit[gum]: launches/step=42")
+    tele.record_span("step", 0.0321, step=1, kind="steady")
+    tele.record_span("step", 0.0123, step=2, kind="refresh")
+    tele.close(step=2)
+
+
+# ------------------------------------------------------------------ bus units
+
+
+def test_jsonl_schema_roundtrip(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    tele = Telemetry([JsonlSink(path)], run={"optimizer": "gum"},
+                     clock=FakeClock())
+    _emit_fixture(tele)
+    recs = read_jsonl(path)
+
+    assert [r["kind"] for r in recs] == [
+        "header", "metric", "metric", "event", "event", "span", "span",
+        "counters"]
+    hdr = recs[0]
+    assert hdr["schema"] == SCHEMA_VERSION
+    assert hdr["run"] == {"optimizer": "gum"}
+    assert recs[1] == {"kind": "metric", "t": 100.5, "step": 1,
+                       "name": "loss", "value": 4.25}
+    assert recs[2]["tags"] == {"family": "8x16"}
+    assert recs[3]["severity"] == "warn"
+    assert recs[3]["data"] == {"kind": "grad_nan"}
+    assert recs[5]["dur_us"] == 32100.0
+    # counters: cumulative event counts + span aggregates
+    tail = recs[-1]
+    assert tail["counts"] == {"event.audit": 1, "event.fault": 1}
+    assert tail["spans"]["step"]["count"] == 2
+    # close() is idempotent
+    tele.close()
+    assert len(read_jsonl(path)) == 8
+
+
+def test_jsonl_reader_skips_garbage_and_rejects_newer_schema(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    tele = Telemetry([JsonlSink(path)], clock=FakeClock())
+    tele.metric(0, "loss", 1.0)
+    tele.close()
+    with open(path, "a") as f:
+        f.write('{"kind": "metric", "truncat')  # crashed writer
+    recs = read_jsonl(path)
+    assert [r["kind"] for r in recs] == ["header", "metric", "counters"]
+
+    newer = str(tmp_path / "future.jsonl")
+    with open(newer, "w") as f:
+        f.write(json.dumps({"kind": "header",
+                            "schema": SCHEMA_VERSION + 1}) + "\n")
+    with pytest.raises(ValueError, match="newer"):
+        read_jsonl(newer)
+
+
+def test_golden_file_byte_exact(tmp_path):
+    """The on-disk format is a contract: an injected deterministic clock
+    must reproduce the committed golden log byte-for-byte.  Regenerate with
+    this test's `regen` block if the schema version is ever bumped."""
+    path = str(tmp_path / "events.jsonl")
+    tele = Telemetry([JsonlSink(path)], run={"optimizer": "gum", "seed": 0},
+                     clock=FakeClock())
+    _emit_fixture(tele)
+    with open(path) as f:
+        produced = f.read()
+    if not os.path.exists(GOLDEN):  # pragma: no cover - regen helper
+        with open(GOLDEN, "w") as f:
+            f.write(produced)
+    with open(GOLDEN) as f:
+        assert produced == f.read()
+
+
+def test_stdout_sink_renders_only_events_at_print_format():
+    buf = io.StringIO()
+    tele = Telemetry([StdoutSink(stream=buf)], clock=FakeClock())
+    tele.metric(1, "loss", 4.25)                      # not printed
+    tele.record_span("step", 0.01, step=1)            # not printed
+    tele.event("log", "loss 4.2500", step=10)
+    tele.event("audit", "audit[gum]: summary")        # step-less
+    tele.event("checkpoint", "checkpoint: saved step 5", step=5,
+               severity="debug")                      # below console floor
+    tele.close()
+    assert buf.getvalue() == ("step     10 loss 4.2500\n"
+                              "audit[gum]: summary\n")
+
+
+def test_memory_sink_ring_and_no_sink_bus():
+    ring = MemorySink(maxlen=2)
+    tele = Telemetry([ring], clock=FakeClock())
+    for i in range(5):
+        tele.event("e", f"n{i}")
+    assert [r["detail"] for r in ring.records] == ["n3", "n4"]
+    # a bus with zero sinks is a no-op, not an error
+    none = Telemetry([], clock=FakeClock())
+    none.metric(0, "loss", 1.0)
+    none.close()
+
+
+def test_telemetry_config_parse():
+    assert TelemetryConfig.parse(None) is None
+    assert TelemetryConfig.parse(False) is None
+    cfg = TelemetryConfig.parse(True)
+    assert (cfg.every, cfg.stdout, cfg.memory) == (1, True, 0)
+    assert TelemetryConfig.parse("") == TelemetryConfig()
+    cfg = TelemetryConfig.parse("every=5,stdout=0,memory=16,events=/tmp/x")
+    assert (cfg.every, cfg.stdout, cfg.memory, cfg.events) == (
+        5, False, 16, "/tmp/x")
+    assert TelemetryConfig.parse(cfg) is cfg
+    with pytest.raises(ValueError, match="unknown telemetry knob"):
+        TelemetryConfig.parse("cadence=5")
+
+
+# ------------------------------------------------- in-jit instrumentation
+
+
+def _tiny_setup(telemetry: bool):
+    import jax
+
+    from repro.core import OptimizerConfig, build_optimizer
+
+    ocfg = OptimizerConfig(name="gum", lr=1e-3, rank=4, gamma=1, period=3,
+                           telemetry=telemetry)
+    opt = build_optimizer(ocfg)
+    key = jax.random.PRNGKey(0)
+    params = {
+        "wq": jax.random.normal(key, (16, 8)) * 0.1,
+        "wk": jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.1,
+        "bias": jax.random.normal(jax.random.PRNGKey(2), (8,)) * 0.1,
+    }
+    return opt, params
+
+
+def test_telemetry_knob_is_bit_exact_and_adds_probe_keys():
+    """lowrank(telemetry=True) must not change a single update bit — the
+    instrumentation is write-only state riding the probe slots."""
+    import jax
+    import numpy as np
+
+    opt_off, params = _tiny_setup(False)
+    opt_on, _ = _tiny_setup(True)
+    s_off, s_on = opt_off.init(params), opt_on.init(params)
+    for i in range(7):
+        g = jax.tree_util.tree_map(
+            lambda p, i=i: p * 0.1 + 0.01 * (i + 1), params)
+        u_off, s_off = jax.jit(opt_off.update)(g, s_off, params)
+        u_on, s_on = jax.jit(opt_on.update)(g, s_on, params)
+        for a, b in zip(jax.tree_util.tree_leaves(u_off),
+                        jax.tree_util.tree_leaves(u_on)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    from repro.telemetry import lowrank_family_metrics
+
+    fams = lowrank_family_metrics(s_on)
+    assert [f["family"] for f in fams] == ["16x8"]
+    rec = fams[0]
+    assert rec["rank"] == 4
+    assert 0.0 <= rec["energy"] <= 1.0 + 1e-6
+    # telemetry-only keys present (and absent without the knob)
+    assert 0.0 <= rec["drift"] <= 1.0
+    assert 0.0 <= rec["bias"] <= 1.0
+    assert rec["bias_step"] >= 1  # the sampler visited at least one site
+    off_fams = lowrank_family_metrics(s_off)
+    assert off_fams == [] or "drift" not in off_fams[0]
+
+
+def test_launch_crosscheck_matches_model():
+    from repro.telemetry.instrument import launch_crosscheck
+
+    for telemetry in (False, True):
+        opt, params = _tiny_setup(telemetry)
+        xc = launch_crosscheck(opt, params, name="gum")
+        assert xc["ok"], xc
+        assert xc["unmodeled"] == []
+        assert xc["traced"] == xc["expected"]
+    # telemetry forces the probe-spectrum project — the model must have
+    # accounted for it, and the counts must actually differ
+    assert launch_crosscheck(*_tiny_setup(True)[:2])["traced"] != \
+        launch_crosscheck(*_tiny_setup(False)[:2])["traced"]
+
+
+def test_gamma_slot_tracker_accumulates():
+    import jax
+
+    from repro.telemetry import GammaSlotTracker
+
+    opt, params = _tiny_setup(True)
+    state = opt.init(params)
+    tracker = GammaSlotTracker()
+    recs0 = tracker.observe(state)
+    assert recs0, "gum's layerwise-unbias state should expose gamma slots"
+    for i in range(4):
+        g = jax.tree_util.tree_map(lambda p: p * 0.1, params)
+        _, state = jax.jit(opt.update)(g, state, params)
+    recs = tracker.observe(state)
+    assert tracker.observations == 2
+    assert all(r["visits_max"] >= 1 for r in recs)
+    assert all(len(r["slots"]) >= 1 for r in recs)
+
+
+# ------------------------------------------------------- trainer integration
+
+
+def _trainer(tmp, *, telemetry="stdout=0", inject=None, resilience=None,
+             steps=8):
+    from repro.configs import RunConfig, get_smoke
+    from repro.core import OptimizerConfig
+    from repro.data import DataConfig
+    from repro.models import build_model
+    from repro.train import Trainer
+
+    cfg = get_smoke("llama-60m")
+    model = build_model(cfg)
+    return Trainer(
+        model,
+        OptimizerConfig(name="gum", lr=1e-3, rank=4, gamma=1, period=4,
+                        telemetry=telemetry is not None),
+        RunConfig(steps=steps, ckpt_dir=str(tmp), ckpt_every=4, log_every=4,
+                  resume=False),
+        DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=2),
+        telemetry=telemetry,
+        resilience=resilience,
+        inject=inject,
+    )
+
+
+def _stream_signature(path):
+    """Everything deterministic about a run log: record kinds, names, steps,
+    details, severities and metric values — with wall-clock fields (t,
+    dur_us, span aggregates, ms-valued details) masked out."""
+    import re
+
+    sig = []
+    for rec in read_jsonl(path):
+        rec = dict(rec)
+        rec.pop("t", None)
+        kind = rec["kind"]
+        if kind == "span":
+            rec.pop("dur_us", None)
+        elif kind == "counters":
+            rec["spans"] = sorted(rec.get("spans", {}))  # names only
+        detail = rec.get("detail")
+        if detail is not None:
+            rec["detail"] = re.sub(r"\d+ ms", "_ ms", detail)
+        sig.append(json.dumps(rec, sort_keys=True))
+    return sig
+
+
+def test_trainer_run_produces_coherent_events_jsonl(tmp_path):
+    t = _trainer(tmp_path / "run", steps=8)
+    result = t.train()
+    assert result.events_path == str(tmp_path / "run" / "events.jsonl")
+    recs = read_jsonl(result.events_path)
+
+    kinds = [r["kind"] for r in recs]
+    assert kinds[0] == "header" and kinds[-1] == "counters"
+    hdr = recs[0]
+    assert hdr["schema"] == SCHEMA_VERSION
+    assert hdr["run"]["optimizer"] == "gum"
+
+    by_name = {}
+    for r in recs:
+        by_name.setdefault(r.get("name"), []).append(r)
+    # step metrics every step (every=1 default)
+    assert len(by_name["loss"]) == 8 and len(by_name["grad_norm"]) == 8
+    # the step span tags refresh vs steady
+    span_kinds = {r["tags"]["kind"] for r in by_name["step"]}
+    assert span_kinds == {"refresh", "steady"}
+    # in-jit family metrics at refresh boundaries (steps 0 and 4), one
+    # record per shape family per boundary
+    for metric in ("rank", "energy", "drift", "bias"):
+        fam_recs = by_name[metric]
+        families = {r["tags"]["family"] for r in fam_recs}
+        assert families, metric
+        assert len(fam_recs) == 2 * len(families), metric
+        assert {r["step"] for r in fam_recs} == {1, 5}, metric
+    # gamma-slot sampling event rode the same boundaries
+    assert len(by_name["gamma_slots"]) == 2
+    assert by_name["gamma_slots"][0]["data"]["leaves"]
+    # one audit summary + one launch cross-check, and it verified ok
+    assert len(by_name["launch_crosscheck"]) == 1
+    xc = by_name["launch_crosscheck"][0]
+    assert xc["severity"] == "info", xc
+    # checkpoint saves (step 4, 8) landed as events inside ckpt_save spans
+    saves = [r for r in by_name["checkpoint"]
+             if r["data"]["action"] == "save"]
+    assert [r["step"] for r in saves] == [4, 8]
+    assert len(by_name["ckpt_save"]) == 2
+    # closing counters agree with the event records themselves
+    counts = recs[-1]["counts"]
+    n_events = sum(1 for r in recs if r["kind"] == "event")
+    assert sum(v for k, v in counts.items() if k.startswith("event.")) \
+        == n_events
+
+
+def test_event_stream_deterministic_across_faulted_reruns(tmp_path):
+    """Two runs of the same seeded faulted config must emit the same event
+    stream (timing fields aside) — the PR 8 fault matrix made observable."""
+    sigs = []
+    for name in ("a", "b"):
+        t = _trainer(tmp_path / name, inject="grad_nan@3;grad_spike@5*1e9",
+                     resilience="", steps=8)
+        res = t.train()
+        assert res.fault_log, "fault plan should have fired"
+        sigs.append(_stream_signature(res.events_path))
+    assert sigs[0] == sigs[1]
+    # and the faulted stream actually contains fault + health records
+    assert any('"name": "fault"' in line for line in sigs[0])
+    assert any('"name": "health"' in line for line in sigs[0])
+
+
+def test_telemetry_does_not_change_loss_trajectory(tmp_path):
+    """--telemetry must be a pure observer: loss trajectory bit-exact vs the
+    same run with telemetry fully off (in-jit knob included)."""
+    off = _trainer(tmp_path / "off", telemetry=None, steps=6).train()
+    on = _trainer(tmp_path / "on", telemetry="stdout=0", steps=6).train()
+    assert off.losses == on.losses  # exact float equality, not approx
+    # and the JSONL's loss metrics are the same numbers
+    logged = [r["value"] for r in read_jsonl(on.events_path)
+              if r.get("name") == "loss"]
+    assert logged == on.losses
+
+
+def test_memory_sink_attaches_via_config(tmp_path):
+    t = _trainer(tmp_path / "run", telemetry="stdout=0,memory=64", steps=4)
+    t.train()
+    assert t.memory_sink is not None
+    kinds = {r["kind"] for r in t.memory_sink.records}
+    assert {"metric", "span", "event"} <= kinds
+
+
+# ------------------------------------------------------------- report CLI
+
+
+def _report(args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.telemetry.report"] + args,
+        env=env, capture_output=True, text=True, timeout=120)
+
+
+def test_report_cli_summary_and_diff(tmp_path):
+    run_dir = tmp_path / "run"
+    _trainer(run_dir, steps=8).train()
+
+    res = _report([str(run_dir)])
+    assert res.returncode == 0, res.stderr
+    out = res.stdout
+    assert "# telemetry report" in out
+    assert "## loss" in out and "## families" in out
+    assert "## spans" in out and "## events" in out
+    assert "optimizer=gum" in out
+
+    # diff against an identical copy: loss delta must read as identical
+    twin = tmp_path / "twin.jsonl"
+    shutil.copy(run_dir / "events.jsonl", twin)
+    res = _report([str(run_dir), "--diff", str(twin)])
+    assert res.returncode == 0, res.stderr
+    assert "(identical)" in res.stdout
+    assert "<-- differs" not in res.stdout
+
+    # error paths exit 2 with a message, not a traceback
+    res = _report([str(tmp_path / "nope")])
+    assert res.returncode == 2
+    assert "error:" in res.stderr and "Traceback" not in res.stderr
